@@ -1,0 +1,84 @@
+//! Serving demo: build an embedding once, then answer similarity queries
+//! from it — the "downstream inference" interface of §1, with the
+//! coordinator's batched query service and latency metrics.
+//!
+//! Run: `cargo run --release --example serve -- [--n 20000] [--queries 5000]`
+
+use cse::coordinator::service::Query;
+use cse::coordinator::{Coordinator, EmbedJob, QueryBatch, SimilarityService};
+use cse::embed::Params;
+use cse::funcs::SpectralFn;
+use cse::sparse::{gen, graph};
+use cse::util::args::Args;
+use cse::util::rng::Rng;
+use cse::util::timer::Timer;
+
+fn main() {
+    let a = Args::from_env(&[]).unwrap();
+    let n = a.usize("n", 20_000).unwrap();
+    let nq = a.usize("queries", 5_000).unwrap();
+    let workers = a.usize("workers", 2).unwrap();
+
+    let mut rng = Rng::new(a.u64("seed", 0).unwrap());
+    let g = gen::sbm_by_degree(&mut rng, n, n / 100, 5.0, 1.0);
+    let labels = g.labels.clone().unwrap();
+    let na = graph::normalized_adjacency(&g.adj);
+    println!("graph: n={n} nnz={}", na.nnz());
+
+    // Build the embedding (the one-time "index build").
+    let job = EmbedJob::new(
+        Params { d: 0, order: 120, cascade: 2, ..Params::default() },
+        SpectralFn::Step { c: 0.8 },
+        1,
+    );
+    let t = Timer::start();
+    let res = Coordinator::new(workers).run(&na, &job);
+    println!(
+        "index build: d={} in {:.1}s ({} matvecs)",
+        res.e.cols,
+        t.elapsed_secs(),
+        res.matvecs
+    );
+
+    let service = SimilarityService::new(res.e);
+
+    // Mixed query workload.
+    let queries: Vec<Query> = (0..nq)
+        .map(|t| {
+            if t % 10 == 0 {
+                Query::TopK { i: rng.below(n), k: 10 }
+            } else {
+                Query::Corr { i: rng.below(n), j: rng.below(n) }
+            }
+        })
+        .collect();
+    let t = Timer::start();
+    let answers = QueryBatch::run(&service, &queries, workers);
+    let secs = t.elapsed_secs();
+    println!(
+        "{} queries in {:.2}s — {:.0} qps, mean latency {:.1} µs",
+        answers.len(),
+        secs,
+        answers.len() as f64 / secs,
+        service.metrics.mean_query_us()
+    );
+
+    // Qualitative check: top-1 neighbour is usually in the same planted
+    // community.
+    let mut hits = 0;
+    let trials = 300;
+    for _ in 0..trials {
+        let i = rng.below(n);
+        let top = service.top_k(i, 1);
+        if let Some(&(j, _)) = top.first() {
+            if labels[i] == labels[j] {
+                hits += 1;
+            }
+        }
+    }
+    println!(
+        "top-1 neighbour same-community rate: {:.1}% ({} trials)",
+        100.0 * hits as f64 / trials as f64,
+        trials
+    );
+}

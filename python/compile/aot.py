@@ -1,0 +1,149 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla_extension 0.5.1 bundled with the `xla` crate
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every entry point is lowered with ``return_tuple=True`` so the Rust side
+unwraps with ``to_tuple1()`` uniformly. A ``manifest.json`` records the
+parameter shapes for each artifact so ``rust/src/runtime`` can validate its
+inputs before compile time.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, poly
+
+# Tile geometry the Rust coordinator drives. One (n, d) unit of work; larger
+# problems decompose into these tiles, larger d into column shards.
+N = 256
+D = 32
+GAUSS_L = 256
+GAUSS_F = 8
+FULL_L = 16  # baked order for the fused full-recursion artifact
+POWER_ITERS = 20
+POWER_B = 16  # power-iteration block width ~ 6 log n
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# --- entry points -----------------------------------------------------------
+# Scalars travel as small arrays ((2,), (1,)) — the Rust side builds them
+# with Literal::vec1, avoiding rank-0 literal plumbing.
+
+
+def step_entry(s, qp, qpp, c):
+    """One Legendre step; c = [c1, c2]. The Rust loop drives arbitrary L."""
+    return (model.legendre_step_op(s, qp, qpp, c[0], c[1]),)
+
+
+def fastembed_entry(s, omega, coeffs):
+    """Fused full recursion at baked order FULL_L (scan lives in HLO)."""
+    return (model.fastembed(s, omega, coeffs),)
+
+
+def gauss_matvec_entry(x, q, alpha):
+    """Implicit Gaussian-kernel block matvec K @ Q (K never materialized)."""
+    from .kernels.gauss_kernel import gauss_kernel_matvec
+
+    return (gauss_kernel_matvec(x, q, alpha[0]),)
+
+
+def gauss_fastembed_entry(x, omega, coeffs, alpha):
+    """Fused kernel-PCA FastEmbed at baked order FULL_L."""
+    return (model.gauss_fastembed(x, omega, coeffs, alpha[0]),)
+
+
+def power_iter_entry(s, v0):
+    """Spectral-norm estimate: (est as (1,), final block)."""
+    est, v = model.power_iteration(s, v0, iters=POWER_ITERS)
+    return (est.reshape(1), v)
+
+
+ARTIFACTS = [
+    # (name, fn, arg specs)
+    (
+        f"legendre_step_{N}x{D}",
+        step_entry,
+        [f32(N, N), f32(N, D), f32(N, D), f32(2)],
+    ),
+    (
+        f"fastembed_{N}x{D}_L{FULL_L}",
+        fastembed_entry,
+        [f32(N, N), f32(N, D), f32(FULL_L + 1)],
+    ),
+    (
+        f"gauss_matvec_{GAUSS_L}x{GAUSS_F}x{D}",
+        gauss_matvec_entry,
+        [f32(GAUSS_L, GAUSS_F), f32(GAUSS_L, D), f32(1)],
+    ),
+    (
+        f"gauss_fastembed_{GAUSS_L}x{GAUSS_F}x{D}_L{FULL_L}",
+        gauss_fastembed_entry,
+        [f32(GAUSS_L, GAUSS_F), f32(GAUSS_L, D), f32(FULL_L + 1), f32(1)],
+    ),
+    (
+        f"power_iter_{N}x{POWER_B}",
+        power_iter_entry,
+        [f32(N, N), f32(N, POWER_B)],
+    ),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, fn, specs in ARTIFACTS:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "params": [list(s.shape) for s in specs],
+            "dtype": "f32",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Reference Legendre coefficients for the step function used by the
+    # kernel-PCA example (f = I(lambda >= 0.5) at order FULL_L), so the Rust
+    # side can cross-check its own closed-form coefficient computation.
+    manifest["_ref_step_coeffs_L16_c0.5"] = list(
+        map(float, poly.step_coeffs(FULL_L, 0.5))
+    )
+    manifest["_tile"] = {"n": N, "d": D, "gauss_l": GAUSS_L, "gauss_f": GAUSS_F,
+                         "full_L": FULL_L, "power_iters": POWER_ITERS,
+                         "power_b": POWER_B}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: one fused Legendre/Chebyshev recursion step.
+
+Computes ``Q_r = c1 * (S @ Q_{r-1}) - c2 * Q_{r-2}`` — the inner loop of
+Algorithm 1 of the paper (and, with (c1, c2) = (2, 1), of the Chebyshev
+variant discussed in §4). This is the compute hot-spot of FastEmbed: the
+whole algorithm is L of these steps per cascade stage.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the step is a dense
+``(n, n) @ (n, d)`` matmul plus a scaled subtract, i.e. the canonical MXU
+workload. We tile it ``(BN, BK) x (BK, BD)`` through VMEM with a 3-D grid
+``(n/BN, d/BD, n/BK)``; the K axis is the *innermost* (fastest-moving) grid
+dimension so the f32 output block stays resident in VMEM across the whole
+K-reduction, and the ``-c2 * Q_{r-2}`` term is fused into the K==0
+iteration instead of a separate pass over HBM.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated from the block geometry in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes. 128 is the MXU systolic-array edge; BD is
+# the full embedding width d = O(log n), which comfortably fits VMEM:
+# f32 VMEM footprint = BN*BK (S) + BK*BD (Qp) + 2*BN*BD (Qpp, O) floats
+# = 128*128 + 128*64 + 2*128*64 = 48 KiB  << 16 MiB.
+BN = 128
+BK = 128
+
+
+def _step_kernel(c1_ref, c2_ref, s_ref, qp_ref, qpp_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        # Fuse the three-term tail into the first K iteration: the output
+        # block starts at -c2 * Q_{r-2} instead of zero.
+        o_ref[...] = -c2_ref[0, 0] * qpp_ref[...]
+
+    o_ref[...] += c1_ref[0, 0] * jnp.dot(
+        s_ref[...], qp_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "bd"))
+def legendre_step(s, q_prev, q_prev2, c1, c2, *, bn=None, bk=None, bd=None):
+    """Fused recursion step as a Pallas call.
+
+    Args:
+      s:       (n, n) symmetric operator tile, ``||S|| <= 1``.
+      q_prev:  (n, d) block ``Q_{r-1}``.
+      q_prev2: (n, d) block ``Q_{r-2}``.
+      c1, c2:  recursion scalars (2 - 1/r) and (1 - 1/r) — passed as scalars,
+               reshaped to (1, 1) so they ride in SMEM-like blocks.
+      bn/bk/bd: tile overrides (testing); default MXU-aligned, clamped to the
+               problem size for small inputs.
+    Returns:
+      (n, d) block ``Q_r``.
+    """
+    n, d = q_prev.shape
+    bn = min(bn or BN, n)
+    bk = min(bk or BK, n)
+    bd = min(bd or d, d)
+    assert n % bn == 0 and n % bk == 0 and d % bd == 0, (n, d, bn, bk, bd)
+
+    c1 = jnp.asarray(c1, jnp.float32).reshape(1, 1)
+    c2 = jnp.asarray(c2, jnp.float32).reshape(1, 1)
+    grid = (n // bn, d // bd, n // bk)
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # c1
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # c2
+            pl.BlockSpec((bn, bk), lambda i, j, k: (i, k)),  # S tile
+            pl.BlockSpec((bk, bd), lambda i, j, k: (k, j)),  # Q_{r-1} tile
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),  # Q_{r-2} tile
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(c1, c2, s, q_prev, q_prev2)

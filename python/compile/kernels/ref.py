@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the L2 model.
+
+Everything in this file is deliberately the *simplest possible* correct
+implementation: dense, un-tiled, no scan. The pytest suite asserts that the
+Pallas kernels (``legendre_step.py``, ``gauss_kernel.py``) and the L2 model
+graphs (``model.py``) match these oracles to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def legendre_step_ref(s, q_prev, q_prev2, c1, c2):
+    """One Legendre three-term recursion step: ``c1 * (S @ Qp) - c2 * Qpp``."""
+    return c1 * (s @ q_prev) - c2 * q_prev2
+
+
+def gauss_kernel_matvec_ref(x, q, alpha):
+    """``K @ Q`` with the Gaussian kernel K(p,q) = exp(-||x_p-x_q||^2 / 2a^2).
+
+    Materializes the full l x l kernel matrix — the thing the Pallas kernel
+    exists to avoid — which makes it a good oracle.
+    """
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    k = jnp.exp(-jnp.maximum(d2, 0.0) / (2.0 * alpha * alpha))
+    return k @ q
+
+
+def legendre_basis_ref(x, order):
+    """Legendre polynomials p(r, x), r = 0..order, on scalar/array x (numpy).
+
+    Recursion: p(r,x) = (2 - 1/r) x p(r-1,x) - (1 - 1/r) p(r-2,x).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    out = [np.ones_like(x), x.copy()]
+    for r in range(2, order + 1):
+        out.append((2.0 - 1.0 / r) * x * out[r - 1] - (1.0 - 1.0 / r) * out[r - 2])
+    return np.stack(out[: order + 1], axis=0)
+
+
+def poly_eval_legendre_ref(coeffs, x):
+    """Evaluate the Legendre series sum_r a(r) p(r,x) pointwise (numpy)."""
+    basis = legendre_basis_ref(x, len(coeffs) - 1)
+    return np.tensordot(np.asarray(coeffs, dtype=np.float64), basis, axes=1)
+
+
+def fastembed_ref(s, omega, coeffs):
+    """Direct (dense, eigh-based) evaluation of f~_L(S) @ Omega.
+
+    Computes the polynomial of the matrix through its eigendecomposition —
+    O(n^3) and exact, used as the oracle for the scan/Pallas recursion.
+    """
+    s = np.asarray(s, dtype=np.float64)
+    lam, v = np.linalg.eigh(s)
+    flam = poly_eval_legendre_ref(coeffs, lam)
+    return (v * flam[None, :]) @ (v.T @ np.asarray(omega, dtype=np.float64))
+
+
+def power_iteration_ref(s, v0, iters):
+    """Spectral-norm lower bound: max column norm growth after `iters` steps."""
+    s = np.asarray(s, dtype=np.float64)
+    v = np.asarray(v0, dtype=np.float64)
+    v = v / np.linalg.norm(v, axis=0, keepdims=True)
+    est = 0.0
+    for _ in range(iters):
+        w = s @ v
+        norms = np.linalg.norm(w, axis=0)
+        est = float(np.max(norms))
+        v = w / np.maximum(norms, 1e-30)
+    return est

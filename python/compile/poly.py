@@ -1,0 +1,70 @@
+"""Legendre-series fitting of spectral weighing functions f(lambda).
+
+Mirrors ``rust/src/poly`` (the runtime-path implementation); this copy feeds
+the build-time L2 graphs and the pytest oracles. Coefficients follow the
+paper §3.4:
+
+    f~_L(x) = sum_{r=0}^{L} a(r) p(r, x),
+    a(r) = (r + 1/2) * integral_{-1}^{1} p(r, x) f(x) dx,
+
+minimizing Delta_L = (1/2) integral |f - f~_L|^2 dx (uniform eigenvalue
+prior). For the step functions the paper actually uses, the integrals have a
+closed form via the Legendre integral identity
+
+    integral p(r, x) dx = (p(r+1, x) - p(r-1, x)) / (2r + 1),
+
+so step coefficients are exact (no quadrature error). General f falls back
+to fixed-order Gauss-Legendre quadrature on a fine partition.
+"""
+
+import numpy as np
+
+from .kernels.ref import legendre_basis_ref
+
+
+def step_coeffs(order, c, hi=1.0):
+    """Exact Legendre coefficients of f(x) = I(c <= x <= hi) on [-1, 1]."""
+    c = float(np.clip(c, -1.0, 1.0))
+    hi = float(np.clip(hi, -1.0, 1.0))
+    if hi <= c:
+        return np.zeros(order + 1)
+    # p(r, x) at both endpoints, orders 0..order+1.
+    basis = legendre_basis_ref(np.array([c, hi]), order + 1)
+    a = np.empty(order + 1)
+    a[0] = 0.5 * (hi - c)
+    for r in range(1, order + 1):
+        # (r + 1/2) * [ (p(r+1,x) - p(r-1,x)) / (2r+1) ]_c^hi
+        prim_hi = (basis[r + 1, 1] - basis[r - 1, 1]) / (2 * r + 1)
+        prim_c = (basis[r + 1, 0] - basis[r - 1, 0]) / (2 * r + 1)
+        a[r] = (r + 0.5) * (prim_hi - prim_c)
+    return a
+
+
+def fit_coeffs(f, order, panels=256, quad_order=8):
+    """Legendre coefficients of arbitrary f via composite Gauss quadrature."""
+    nodes, weights = np.polynomial.legendre.leggauss(quad_order)
+    edges = np.linspace(-1.0, 1.0, panels + 1)
+    mid = 0.5 * (edges[1:] + edges[:-1])
+    half = 0.5 * (edges[1:] - edges[:-1])
+    # All quadrature points (panels * quad_order,) and their weights.
+    x = (mid[:, None] + half[:, None] * nodes[None, :]).ravel()
+    w = (half[:, None] * weights[None, :]).ravel()
+    fx = np.asarray([f(float(xi)) for xi in x])
+    basis = legendre_basis_ref(x, order)  # (order+1, npts)
+    r = np.arange(order + 1)
+    return (r + 0.5) * (basis * (w * fx)[None, :]).sum(axis=1)
+
+
+def recursion_scalars(order):
+    """(c1(r), c2(r)) = (2 - 1/r, 1 - 1/r) for r = 1..order, as arrays."""
+    r = np.arange(1, order + 1, dtype=np.float64)
+    return 2.0 - 1.0 / r, 1.0 - 1.0 / r
+
+
+def max_err(coeffs, f, grid=2001):
+    """delta = max_x |f(x) - f~_L(x)| on a uniform grid (Theorem 1's bound)."""
+    from .kernels.ref import poly_eval_legendre_ref
+
+    x = np.linspace(-1.0, 1.0, grid)
+    fx = np.asarray([f(float(xi)) for xi in x])
+    return float(np.max(np.abs(fx - poly_eval_legendre_ref(coeffs, x))))

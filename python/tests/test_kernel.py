@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/tile sizes; assert_allclose against ref.py.
+Kernels run under interpret=True (CPU), so keep shapes modest.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.legendre_step import legendre_step
+from compile.kernels.gauss_kernel import gauss_kernel_matvec
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _sym(n, dtype=np.float32):
+    a = RNG.standard_normal((n, n)).astype(dtype)
+    a = (a + a.T) / 2
+    return a / (np.abs(np.linalg.eigvalsh(a.astype(np.float64))).max() + 1e-6)
+
+
+# ---------------------------------------------------------------- legendre
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([4, 8, 16]),
+    r=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_legendre_step_matches_ref(n, d, r, seed):
+    rng = np.random.default_rng(seed)
+    s = _sym(n)
+    qp = rng.standard_normal((n, d)).astype(np.float32)
+    qpp = rng.standard_normal((n, d)).astype(np.float32)
+    c1, c2 = 2.0 - 1.0 / r, 1.0 - 1.0 / r
+    got = legendre_step(s, qp, qpp, c1, c2)
+    want = ref.legendre_step_ref(s, qp, qpp, c1, c2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bn,bk,bd", [(8, 8, 4), (16, 32, 8), (32, 16, 16), (64, 64, 16)])
+def test_legendre_step_tilings_agree(bn, bk, bd):
+    """Tiling must not change the numbers (grid/BlockSpec correctness)."""
+    n, d = 64, 16
+    s = _sym(n)
+    qp = RNG.standard_normal((n, d)).astype(np.float32)
+    qpp = RNG.standard_normal((n, d)).astype(np.float32)
+    got = legendre_step(s, qp, qpp, 1.5, 0.5, bn=bn, bk=bk, bd=bd)
+    want = ref.legendre_step_ref(s, qp, qpp, 1.5, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_legendre_step_zero_c2_is_scaled_matmul():
+    n, d = 16, 4
+    s = _sym(n)
+    qp = RNG.standard_normal((n, d)).astype(np.float32)
+    qpp = RNG.standard_normal((n, d)).astype(np.float32)
+    got = legendre_step(s, qp, qpp, 3.0, 0.0)
+    np.testing.assert_allclose(np.asarray(got), 3.0 * (s @ qp), rtol=2e-4, atol=2e-4)
+
+
+def test_legendre_step_identity_operator():
+    """S = I: step reduces to c1*Qp - c2*Qpp exactly."""
+    n, d = 32, 8
+    s = np.eye(n, dtype=np.float32)
+    qp = RNG.standard_normal((n, d)).astype(np.float32)
+    qpp = RNG.standard_normal((n, d)).astype(np.float32)
+    got = legendre_step(s, qp, qpp, 1.75, 0.75)
+    np.testing.assert_allclose(np.asarray(got), 1.75 * qp - 0.75 * qpp, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- gauss
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([8, 16, 32, 64]),
+    f=st.sampled_from([2, 4, 8]),
+    d=st.sampled_from([4, 8]),
+    alpha=st.floats(min_value=0.3, max_value=3.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gauss_matvec_matches_ref(l, f, d, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((l, f)).astype(np.float32)
+    q = rng.standard_normal((l, d)).astype(np.float32)
+    got = gauss_kernel_matvec(x, q, alpha)
+    want = ref.gauss_kernel_matvec_ref(x, q, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bi,bj", [(8, 8), (16, 32), (32, 16), (64, 64)])
+def test_gauss_matvec_tilings_agree(bi, bj):
+    l, f, d = 64, 4, 8
+    x = RNG.standard_normal((l, f)).astype(np.float32)
+    q = RNG.standard_normal((l, d)).astype(np.float32)
+    got = gauss_kernel_matvec(x, q, 1.0, bi=bi, bj=bj)
+    want = ref.gauss_kernel_matvec_ref(x, q, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gauss_matvec_wide_bandwidth_sums_rows():
+    """alpha -> inf: K -> all-ones, so K @ Q -> column sums broadcast."""
+    l, f, d = 16, 3, 4
+    x = 0.01 * RNG.standard_normal((l, f)).astype(np.float32)
+    q = RNG.standard_normal((l, d)).astype(np.float32)
+    got = np.asarray(gauss_kernel_matvec(x, q, 1e4))
+    want = np.tile(q.sum(axis=0), (l, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_gauss_matvec_kernel_row_is_symmetric_psd_effect():
+    """K is symmetric: (K Q)^T e_j == (K e_j)^T Q column-wise check."""
+    l, f = 32, 4
+    x = RNG.standard_normal((l, f)).astype(np.float32)
+    q = np.eye(l, dtype=np.float32)[:, :8]
+    kq = np.asarray(gauss_kernel_matvec(x, q, 1.2))  # first 8 columns of K
+    k_full = np.asarray(ref.gauss_kernel_matvec_ref(x, np.eye(l, dtype=np.float32), 1.2))
+    np.testing.assert_allclose(kq, k_full[:, :8], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(k_full, k_full.T, rtol=1e-4, atol=1e-4)

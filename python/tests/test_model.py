@@ -1,0 +1,123 @@
+"""L2 model graphs vs dense eigh-based oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model, poly
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _sym(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a = (a + a.T) / 2
+    return (a / (np.abs(np.linalg.eigvalsh(a.astype(np.float64))).max() + 1e-6)).astype(np.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32]),
+       d=st.sampled_from([4, 8]),
+       order=st.integers(min_value=0, max_value=12),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_fastembed_matches_eigh_oracle(n, d, order, seed):
+    rng = np.random.default_rng(seed)
+    s = _sym(n, seed)
+    omega = rng.choice([-1.0, 1.0], size=(n, d)).astype(np.float32) / np.sqrt(d)
+    coeffs = poly.fit_coeffs(np.exp, order).astype(np.float32)
+    got = np.asarray(model.fastembed(s, omega, jnp.asarray(coeffs)))
+    want = ref.fastembed_ref(s, omega, coeffs)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_fastembed_order0_and_1():
+    n, d = 16, 4
+    s = _sym(n)
+    omega = RNG.standard_normal((n, d)).astype(np.float32)
+    a0 = np.array([0.7], dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(model.fastembed(s, omega, jnp.asarray(a0))),
+                               0.7 * omega, rtol=1e-6)
+    a1 = np.array([0.3, -1.2], dtype=np.float32)
+    want = 0.3 * omega - 1.2 * (s @ omega)
+    np.testing.assert_allclose(np.asarray(model.fastembed(s, omega, jnp.asarray(a1))),
+                               want, rtol=1e-5, atol=1e-5)
+
+
+def test_cascade_equals_repeated_application():
+    """(g~(S))^b Omega == applying the order-L/b recursion b times."""
+    n, d, order, b = 16, 4, 6, 3
+    s = _sym(n, 3)
+    omega = RNG.standard_normal((n, d)).astype(np.float32)
+    coeffs = jnp.asarray(poly.fit_coeffs(lambda x: 0.5 * (x + 1), order).astype(np.float32))
+    got = np.asarray(model.fastembed_cascade(s, omega, coeffs, b))
+    want = omega
+    for _ in range(b):
+        want = ref.fastembed_ref(s, want, np.asarray(coeffs))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_cascade_sharpens_nulls():
+    """§4: b=2 on g=f^(1/2) suppresses the f=0 band better than b=1 on f.
+
+    Build a matrix with eigenvalues straddling the cut c=0.5 and compare the
+    residual mass that leaks through the null band.
+    """
+    n, d, L = 32, 8, 12
+    rng = np.random.default_rng(11)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.concatenate([np.linspace(0.8, 0.95, 4), np.linspace(-0.4, 0.3, n - 4)])
+    s = (q * lam) @ q.T
+    s = s.astype(np.float32)
+    omega = (rng.choice([-1, 1], size=(n, d)) / np.sqrt(d)).astype(np.float32)
+
+    f = lambda x: 1.0 if x >= 0.5 else 0.0
+    c_b1 = jnp.asarray(poly.step_coeffs(L, 0.5).astype(np.float32))
+    c_b2 = jnp.asarray(poly.step_coeffs(L // 2, 0.5).astype(np.float32))  # g = f^(1/2) = f
+    e_b1 = np.asarray(model.fastembed(s, omega, c_b1))
+    e_b2 = np.asarray(model.fastembed_cascade(s, omega, c_b2, 2))
+    exact = ref.fastembed_ref(s.astype(np.float64), omega, None) if False else None
+
+    # Project embeddings onto the "noise" eigenvectors (lambda < 0.5): the
+    # cascade must leak less.
+    lam_f, v = np.linalg.eigh(s.astype(np.float64))
+    noise = v[:, lam_f < 0.5]
+    leak = lambda e: np.linalg.norm(noise.T @ e) / np.linalg.norm(e)
+    assert leak(e_b2) < leak(e_b1)
+
+
+def test_power_iteration_estimates_norm():
+    n = 48
+    s = _sym(n, 5) * 0.9
+    true = np.abs(np.linalg.eigvalsh(s.astype(np.float64))).max()
+    v0 = RNG.standard_normal((n, 8)).astype(np.float32)
+    est, _ = model.power_iteration(s, v0, iters=30)
+    est = float(est)
+    assert est <= true * 1.001
+    assert est >= true * 0.9
+
+
+def test_gauss_fastembed_matches_dense_oracle():
+    l, f, d, order = 32, 4, 8, 6
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((l, f)).astype(np.float32)
+    alpha = 1.5
+    # Dense kernel matrix, rescaled to ||K||<=1 like the coordinator does.
+    kd = np.asarray(ref.gauss_kernel_matvec_ref(x, np.eye(l, dtype=np.float32), alpha))
+    kappa = np.abs(np.linalg.eigvalsh(kd.astype(np.float64))).max() * 1.01
+    omega = (rng.choice([-1, 1], size=(l, d)) / np.sqrt(d)).astype(np.float32)
+    # Fit f on the *rescaled* spectrum: operator passed in is K, so fold the
+    # 1/kappa into the polynomial argument.
+    fcut = lambda y: 1.0 if y >= 0.2 else 0.0
+    coeffs = poly.fit_coeffs(fcut, order).astype(np.float32)
+    # Evaluate oracle on K/kappa, recursion on K/kappa by scaling x... the
+    # recursion consumes K directly, so instead compare both on K/kappa via
+    # linearity: run model on scaled operator using alpha trick is not
+    # possible; instead validate model.gauss_fastembed against the same
+    # recursion done densely with K.
+    got = np.asarray(model.gauss_fastembed(x, omega, jnp.asarray(coeffs), alpha))
+    want = ref.fastembed_ref(kd, omega, coeffs)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)

@@ -1,0 +1,83 @@
+"""Legendre fitting (compile.poly) — closed forms vs quadrature vs decay."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import poly
+from compile.kernels.ref import legendre_basis_ref, poly_eval_legendre_ref
+
+
+def test_legendre_orthogonality():
+    """integral p(k) p(l) = 2 I(k==l) / (2k+1) via fine quadrature."""
+    x, w = np.polynomial.legendre.leggauss(64)
+    basis = legendre_basis_ref(x, 8)
+    gram = (basis * w[None, :]) @ basis.T
+    want = np.diag([2.0 / (2 * k + 1) for k in range(9)])
+    np.testing.assert_allclose(gram, want, atol=1e-12)
+
+
+def test_legendre_matches_numpy():
+    x = np.linspace(-1, 1, 101)
+    ours = legendre_basis_ref(x, 6)
+    for r in range(7):
+        c = np.zeros(r + 1)
+        c[r] = 1.0
+        np.testing.assert_allclose(ours[r], np.polynomial.legendre.legval(x, c),
+                                   atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(c=st.floats(min_value=-0.95, max_value=0.95),
+       order=st.integers(min_value=0, max_value=40))
+def test_step_coeffs_match_quadrature(c, order):
+    exact = poly.step_coeffs(order, c)
+    quad = poly.fit_coeffs(lambda x: 1.0 if x >= c else 0.0, order, panels=512)
+    # Quadrature sees the discontinuity mid-panel -> O(panel width) error.
+    np.testing.assert_allclose(exact, quad, atol=3e-3)
+
+
+def test_step_coeffs_empty_interval():
+    np.testing.assert_allclose(poly.step_coeffs(10, 1.0), np.zeros(11))
+
+
+def test_step_coeffs_full_interval_is_constant_one():
+    a = poly.step_coeffs(12, -1.0)
+    want = np.zeros(13)
+    want[0] = 1.0
+    np.testing.assert_allclose(a, want, atol=1e-12)
+
+
+def test_delta_decreases_with_order_smooth():
+    """Smooth f: delta(L) decays fast (§4 'smooth functions...')."""
+    f = lambda x: np.exp(x)
+    errs = [poly.max_err(poly.fit_coeffs(f, L), f) for L in (2, 4, 8, 12)]
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+    assert errs[3] < 1e-8
+
+
+def test_delta_nonincreasing_step():
+    f = lambda x: 1.0 if x >= 0.3 else 0.0
+    errs = [poly.max_err(poly.step_coeffs(L, 0.3), f) for L in (5, 20, 80)]
+    # Step functions: maximum error at the discontinuity stays ~0.5 (Gibbs)
+    # but the L2 error and off-jump error fall; check monotone L2 proxy.
+    x = np.linspace(-1, 1, 4001)
+    fx = np.asarray([f(v) for v in x])
+    l2 = [np.sqrt(np.mean((fx - poly_eval_legendre_ref(poly.step_coeffs(L, 0.3), x)) ** 2))
+          for L in (5, 20, 80)]
+    assert l2[0] > l2[1] > l2[2]
+
+
+def test_recursion_scalars():
+    c1, c2 = poly.recursion_scalars(4)
+    np.testing.assert_allclose(c1, [1.0, 1.5, 5.0 / 3, 1.75])
+    np.testing.assert_allclose(c2, [0.0, 0.5, 2.0 / 3, 0.75])
+
+
+def test_commute_time_fit_converges():
+    """f(x) = 1/sqrt(1-x) truncated — the paper's commute-time weighting."""
+    f = lambda x: 1.0 / np.sqrt(max(1.0 - x, 0.05))
+    e8 = poly.max_err(poly.fit_coeffs(f, 8), f)
+    e32 = poly.max_err(poly.fit_coeffs(f, 32), f)
+    # The eps-clamp kink at x = 0.95 limits the rate; ~4x per 4x order.
+    assert e32 < e8 * 0.3

@@ -1,0 +1,560 @@
+//! Benchmark harness regenerating every figure and table of the paper's
+//! evaluation (§5) plus the ablations and §Perf measurements indexed in
+//! DESIGN.md §4. criterion is unavailable offline; this is a custom
+//! `harness = false` binary.
+//!
+//! Usage:
+//!   cargo bench                      # everything (scaled-down defaults)
+//!   cargo bench -- fig1a             # one experiment
+//!   cargo bench -- fig1a fig1b       # several
+//!   CSE_BENCH_N=8000 cargo bench -- runtime   # bigger workload
+//!
+//! Experiments: fig1a fig1b runtime clustering ablation_poly ablation_L
+//!              ablation_jl perf
+//!
+//! Each experiment prints a paper-style table AND writes a TSV under
+//! bench_out/ for external plotting.
+
+use std::path::Path;
+
+use cse::cluster::{kmeans, modularity, KmeansParams};
+use cse::coordinator::{Coordinator, EmbedJob};
+use cse::eigen::lanczos::{lanczos, LanczosParams};
+use cse::eigen::nystrom::nystrom;
+use cse::eigen::rsvd::{rsvd, RsvdParams};
+use cse::eigen::simult::simultaneous_iteration;
+use cse::embed::{FastEmbed, Params};
+use cse::funcs::SpectralFn;
+use cse::linalg::Mat;
+use cse::poly::{cascade, chebyshev, legendre, Basis};
+use cse::sparse::{gen, graph, io, Csr};
+use cse::util::rng::Rng;
+use cse::util::stats;
+use cse::util::timer::Timer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let all = ["fig1a", "fig1b", "runtime", "clustering", "ablation_poly", "ablation_L", "ablation_jl", "perf"];
+    let selected: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|name| args.iter().any(|a| name.starts_with(a.as_str()))).collect()
+    };
+    if selected.is_empty() {
+        eprintln!("no experiment matches {args:?}; available: {all:?}");
+        std::process::exit(2);
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    for name in selected {
+        println!("\n=============================================================");
+        println!("== {name}");
+        println!("=============================================================");
+        match name {
+            "fig1a" => fig1a(),
+            "fig1b" => fig1b(),
+            "runtime" => runtime_table(),
+            "clustering" => clustering_table(),
+            "ablation_poly" => ablation_poly(),
+            "ablation_L" => ablation_order(),
+            "ablation_jl" => ablation_jl(),
+            "perf" => perf(),
+            _ => unreachable!(),
+        }
+    }
+}
+
+fn bench_n(default: usize) -> usize {
+    std::env::var("CSE_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The DBLP-analog workload + exact reference embedding (DESIGN.md §3).
+struct DblpAnalog {
+    na: Csr,
+    /// Exact spectral embedding E = [v_1 .. v_k] for f = I(lambda >= c).
+    e_exact: Mat,
+    /// Threshold used (just below lambda_k).
+    c: f64,
+}
+
+fn dblp_analog_deg(n: usize, k: usize, deg_in: f64, deg_out: f64, rng: &mut Rng) -> DblpAnalog {
+    let g = gen::sbm_by_degree(rng, n, k, deg_in, deg_out);
+    let na = graph::normalized_adjacency(&g.adj);
+    // Exact reference: k leading eigenvectors. The k community
+    // eigenvalues are nearly degenerate, which single-vector Krylov
+    // resolves only through rounding noise; a block method (simultaneous
+    // iteration) captures the whole subspace natively — and for the
+    // reference *embedding* any orthonormal basis of that subspace gives
+    // the same pairwise geometry.
+    let pe = simultaneous_iteration(&na, k, 100, rng);
+    let c = pe.values[k - 1] - 1e-4;
+    let e_exact = pe.vectors.clone();
+    DblpAnalog { na, e_exact, c }
+}
+
+fn dblp_analog(n: usize, k: usize, rng: &mut Rng) -> DblpAnalog {
+    dblp_analog_deg(n, k, 12.0, 0.8, rng)
+}
+
+fn sample_pair_devs(
+    exact: &Mat,
+    approx: &Mat,
+    pairs: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let n = exact.rows;
+    let mut devs = Vec::with_capacity(pairs);
+    while devs.len() < pairs {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        devs.push(approx.row_corr(i, j) - exact.row_corr(i, j));
+    }
+    devs
+}
+
+// ---------------------------------------------------------------- Fig 1a
+
+/// Figure 1a: percentiles of (compressive − exact) normalized correlation
+/// vs the number of random projections d.
+fn fig1a() {
+    let n = bench_n(4000);
+    let k = 40;
+    let order = 180;
+    let mut rng = Rng::new(1);
+    println!("DBLP-analog: n={n}, exact reference = {k} leading eigenvectors");
+    let w = dblp_analog(n, k, &mut rng);
+    println!("threshold c = {:.4} (lambda_{k})", w.c);
+
+    let ds = [1usize, 5, 10, 20, 40, 60, 80, 120];
+    let ps = [1.0, 5.0, 25.0, 50.0, 75.0, 95.0, 99.0];
+    let mut tsv: Vec<Vec<f64>> = Vec::new();
+    println!(
+        "\n{:>4} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}",
+        "d", "p1", "p5", "p25", "p50", "p75", "p95", "p99"
+    );
+    for &d in &ds {
+        let fe = FastEmbed::new(Params { d, order, cascade: 2, ..Params::default() });
+        let mut rng_e = Rng::new(100 + d as u64);
+        let emb = fe.embed(&w.na, &SpectralFn::Step { c: w.c }, &mut rng_e);
+        let mut devs = sample_pair_devs(&w.e_exact, &emb.e, 20_000, &mut rng_e);
+        let row = stats::percentiles(&mut devs, &ps);
+        println!(
+            "{:>4} | {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>7.3}",
+            d, row[0], row[1], row[2], row[3], row[4], row[5], row[6]
+        );
+        let mut line = vec![d as f64];
+        line.extend(row);
+        tsv.push(line);
+    }
+    io::write_tsv(
+        Path::new("bench_out/fig1a.tsv"),
+        &["d", "p1", "p5", "p25", "p50", "p75", "p95", "p99"],
+        &tsv,
+    )
+    .unwrap();
+    println!("\npaper shape: spread shrinks ~1/sqrt(d), saturates at poly-approx error");
+    println!("paper claim @ d=80: 90% of pairs within +-0.2   -> wrote bench_out/fig1a.tsv");
+}
+
+// ---------------------------------------------------------------- Fig 1b
+
+/// Figure 1b: percentile curves of compressive correlation vs exact
+/// correlation, cascade b=1 (biased) vs b=2 (unbiased).
+fn fig1b() {
+    let n = bench_n(4000);
+    let k = 40;
+    // Modest order: the b=1 bias (Fig 1b left) comes from bulk-eigenvalue
+    // leakage, which a very high order would suppress even without
+    // cascading at this reduced n. L=60 ~ the paper's L/n ratio.
+    let order = 60;
+    let d = 80;
+    let mut rng = Rng::new(2);
+    // Marginal community/bulk gap: bulk eigenvalues sit just below the
+    // threshold, so unsharpened nulls (b=1) leak — the regime Fig 1b
+    // demonstrates. (The strong-gap fig1a graph would hide the effect.)
+    let w = dblp_analog_deg(n, k, 5.0, 1.6, &mut rng);
+    println!("n={n}, d={d}, L={order}, threshold c={:.4}", w.c);
+
+    let mut tsv: Vec<Vec<f64>> = Vec::new();
+    for &b in &[1usize, 2] {
+        let fe = FastEmbed::new(Params { d, order, cascade: b, ..Params::default() });
+        let mut rng_e = Rng::new(200);
+        let emb = fe.embed(&w.na, &SpectralFn::Step { c: w.c }, &mut rng_e);
+        // Bin pairs by exact correlation, report percentiles of
+        // compressive correlation per bin.
+        let mut binner = stats::Binner::new(-0.25, 1.0, 10);
+        for _ in 0..60_000 {
+            let i = rng_e.below(n);
+            let j = rng_e.below(n);
+            if i == j {
+                continue;
+            }
+            binner.add(w.e_exact.row_corr(i, j), emb.e.row_corr(i, j));
+        }
+        println!("\n-- cascade b = {b} --");
+        println!("{:>10} | {:>7} {:>7} {:>7} {:>6}", "exact-corr", "p5", "p50", "p95", "count");
+        let centers: Vec<f64> = (0..10).map(|t| binner.bin_center(t)).collect();
+        for (bin, &center) in centers.iter().enumerate() {
+            let vals = &mut binner.bins_mut()[bin];
+            if vals.len() < 10 {
+                continue;
+            }
+            let row = stats::percentiles(vals, &[5.0, 50.0, 95.0]);
+            println!(
+                "{:>10.2} | {:>7.3} {:>7.3} {:>7.3} {:>6}",
+                center,
+                row[0],
+                row[1],
+                row[2],
+                vals.len()
+            );
+            tsv.push(vec![b as f64, center, row[0], row[1], row[2], vals.len() as f64]);
+        }
+    }
+    io::write_tsv(
+        Path::new("bench_out/fig1b.tsv"),
+        &["b", "exact_corr", "p5", "p50", "p95", "count"],
+        &tsv,
+    )
+    .unwrap();
+    println!("\npaper shape: b=1 median curve biased off y=x; bias disappears at b=2");
+    println!("-> wrote bench_out/fig1b.tsv");
+}
+
+// ------------------------------------------------------------- runtime T1
+
+/// §5 runtime claims: FastEmbed vs exact partial eigendecomposition vs
+/// the other solvers, same operator, same machine.
+fn runtime_table() {
+    let n = bench_n(6000);
+    let k = 150; // eigenvectors the embedding must capture
+    let d = 64;
+    let order = 180;
+    let mut rng = Rng::new(3);
+    let g = gen::sbm_by_degree(&mut rng, n, k / 2, 12.0, 0.8);
+    let na = graph::normalized_adjacency(&g.adj);
+    println!("n={n} nnz={} | capture k={k} eigenvectors, d={d}, L={order}", na.nnz());
+
+    // Threshold from a probe Lanczos (not charged to FastEmbed: the
+    // paper treats c as given; we still report it).
+    let t = Timer::start();
+    let probe = lanczos(&na, k, &LanczosParams { subspace: Some(4 * k), ..Default::default() }, &mut rng);
+    let t_probe = t.elapsed_secs();
+    let c = probe.values[k - 1] - 1e-4;
+
+    let mut rows: Vec<(String, f64, usize)> = Vec::new();
+
+    let t = Timer::start();
+    let fe = FastEmbed::new(Params { d, order, cascade: 2, ..Params::default() });
+    let emb = fe.embed(&na, &SpectralFn::Step { c }, &mut rng);
+    rows.push(("FastEmbed (ours)".into(), t.elapsed_secs(), emb.matvecs));
+
+    let t = Timer::start();
+    // 4k subspace = what it actually takes to resolve the near-degenerate
+    // community cluster (matching what ARPACK restarts achieve).
+    let pe = lanczos(&na, k, &LanczosParams { subspace: Some(4 * k), ..Default::default() }, &mut rng);
+    rows.push((format!("Lanczos full-reorth (k={k})"), t.elapsed_secs(), pe.matvecs));
+
+    let t = Timer::start();
+    let si = simultaneous_iteration(&na, k, 40, &mut rng);
+    rows.push((format!("simultaneous iteration (k={k})"), t.elapsed_secs(), si.matvecs));
+
+    let t = Timer::start();
+    let rs = rsvd(&na, k, &RsvdParams::default(), &mut rng);
+    rows.push((format!("randomized SVD (k={k}, q=5, l=10)"), t.elapsed_secs(), rs.matvecs));
+
+    let t = Timer::start();
+    let ny = nystrom(&na, k, (4 * k).min(n), &mut rng);
+    rows.push((format!("Nystrom (k={k}, s={})", (4 * k).min(n)), t.elapsed_secs(), ny.matvecs));
+
+    let fe_time = rows[0].1;
+    println!("\n{:<38} {:>9} {:>12} {:>9}", "method", "time", "col-matvecs", "vs ours");
+    let mut tsv = Vec::new();
+    for (i, (name, secs, mv)) in rows.iter().enumerate() {
+        println!("{name:<38} {secs:>8.2}s {mv:>12} {:>8.1}x", secs / fe_time);
+        tsv.push(vec![i as f64, *secs, *mv as f64]);
+    }
+    println!("(threshold probe, not charged: {t_probe:.2}s)");
+    io::write_tsv(Path::new("bench_out/runtime.tsv"), &["row", "secs", "matvecs"], &tsv).unwrap();
+    println!(
+        "\npaper claim: ~2 orders of magnitude vs exact at n=317k/k=500; at this\n\
+         reduced scale expect >=5x vs Lanczos, growing with n and k \
+         -> wrote bench_out/runtime.tsv"
+    );
+}
+
+// ----------------------------------------------------------- clustering T2
+
+/// §5 Amazon clustering table: K-means modularity across embeddings.
+fn clustering_table() {
+    let n = bench_n(4000);
+    let communities = 50;
+    // d < keep: the compressive embedding packs `keep` eigenvectors into
+    // fewer K-means dimensions than the exact baseline can (the paper's
+    // 500-eigs-in-80-dims argument).
+    let d = 32;
+    let keep = communities;
+    let restarts = 9;
+    let mut rng = Rng::new(4);
+    // Heterogeneous community strengths: structural eigenvalues spread
+    // over a band, so exact-d truncation drops the weak communities —
+    // the regime the paper's Amazon experiment lives in.
+    let g = gen::sbm_hetero(&mut rng, n, communities, 5.0, 18.0, 0.6);
+    let na = graph::normalized_adjacency(&g.adj);
+    println!("Amazon-analog: n={n} communities={communities} nnz={}", na.nnz());
+
+    // Block method: the `keep` community eigenvalues are near-degenerate.
+    let probe = simultaneous_iteration(&na, keep + 8, 100, &mut rng);
+    let c = probe.values[keep - 1] - 1e-3;
+
+    let med_mod = |e: &Mat, seed: u64| -> f64 {
+        let mut r = Rng::new(seed);
+        let mods: Vec<f64> = (0..restarts)
+            .map(|_| {
+                let km = kmeans(e, &KmeansParams { k: communities, max_iters: 25, tol: 1e-5 }, &mut r);
+                modularity(&g.adj, &km.assignment)
+            })
+            .collect();
+        stats::median(&mods)
+    };
+
+    let mut tsv = Vec::new();
+    println!("\n{:<44} {:>9} {:>11}", "embedding", "time", "modularity");
+    let mut report = |name: &str, secs: f64, q: f64, idx: usize| {
+        println!("{name:<44} {secs:>8.2}s {q:>11.4}");
+        tsv.push(vec![idx as f64, secs, q]);
+    };
+
+    let t = Timer::start();
+    let job = EmbedJob::new(
+        Params { d, order: 160, cascade: 2, ..Params::default() },
+        SpectralFn::Step { c },
+        11,
+    );
+    let res = Coordinator::new(1).run(&na, &job);
+    let t_fe = t.elapsed_secs();
+    report(&format!("FastEmbed d={d} capturing {keep} eigs"), t_fe, med_mod(&res.e, 21), 0);
+
+    let t = Timer::start();
+    let e80 = simultaneous_iteration(&na, d, 100, &mut rng);
+    report(&format!("exact {d} eigenvectors"), t.elapsed_secs(), med_mod(&e80.vectors, 22), 1);
+
+    let t = Timer::start();
+    let e120 = simultaneous_iteration(&na, 3 * d / 2, 100, &mut rng);
+    report(
+        &format!("exact {} eigenvectors (K-means on {})", 3 * d / 2, 3 * d / 2),
+        t.elapsed_secs(),
+        med_mod(&e120.vectors, 23),
+        2,
+    );
+
+    let t = Timer::start();
+    let rs = rsvd(&na, d, &RsvdParams::default(), &mut rng);
+    report(&format!("randomized SVD {d} (q=5, l=10)"), t.elapsed_secs(), med_mod(&rs.vectors, 24), 3);
+
+    io::write_tsv(Path::new("bench_out/clustering.tsv"), &["row", "secs", "modularity"], &tsv).unwrap();
+    println!(
+        "\npaper: 0.87 (ours) > 0.845 (exact 120) > 0.835 (exact 80) > 0.748 (RSVD)\n\
+         expected shape: FastEmbed top or tied-top, RSVD worst -> wrote bench_out/clustering.tsv"
+    );
+}
+
+// ------------------------------------------------------------- ablation A1
+
+/// A1: Legendre vs Chebyshev (vs Jackson-damped Chebyshev) fitting error
+/// delta(L) for the two weighing-function families the paper uses.
+fn ablation_poly() {
+    let orders = [10usize, 20, 40, 80, 160, 320];
+    println!("delta = max|f - f~_L| on [-1,1] (Theorem 1's additive distortion)\n");
+    let mut tsv = Vec::new();
+    for (fname, f) in [
+        ("step c=0.7", SpectralFn::Step { c: 0.7 }),
+        ("commute-time", SpectralFn::CommuteTime { c: -1.0, eps: 0.05 }),
+    ] {
+        println!("-- f = {fname} --");
+        println!("{:>5} {:>12} {:>12} {:>14}", "L", "legendre", "chebyshev", "cheb+jackson");
+        for &ll in &orders {
+            let leg = cascade::plan(&f, ll, 1, Basis::Legendre).stage;
+            let che = cascade::plan(&f, ll, 1, Basis::Chebyshev).stage;
+            let dam = chebyshev::damped(&che, &chebyshev::jackson_damping(che.order()));
+            let fe = |x: f64| f.eval(x);
+            // Measure off the discontinuity (+-0.02) where distortion is
+            // actionable; at the jump delta ~ 0.5 for any polynomial.
+            let grid_err = |s: &cse::poly::Series| {
+                (0..2001)
+                    .map(|i| -1.0 + i as f64 / 1000.0)
+                    .filter(|x| match f {
+                        SpectralFn::Step { c } => (x - c).abs() > 0.02,
+                        // measure away from the eps-clamp kink at 1-eps
+                        SpectralFn::CommuteTime { eps, .. } => (x - (1.0 - eps)).abs() > 0.02,
+                        _ => true,
+                    })
+                    .map(|x| (fe(x) - s.eval(x)).abs())
+                    .fold(0.0, f64::max)
+            };
+            let (e1, e2, e3) = (grid_err(&leg), grid_err(&che), grid_err(&dam));
+            println!("{ll:>5} {e1:>12.4e} {e2:>12.4e} {e3:>14.4e}");
+            tsv.push(vec![ll as f64, e1, e2, e3]);
+        }
+        println!();
+    }
+    io::write_tsv(
+        Path::new("bench_out/ablation_poly.tsv"),
+        &["L", "legendre", "chebyshev", "cheb_jackson"],
+        &tsv,
+    )
+    .unwrap();
+    println!("shape: chebyshev converges faster off the jump (paper §4's remark); \
+              jackson kills Gibbs ringing -> wrote bench_out/ablation_poly.tsv");
+}
+
+// ------------------------------------------------------------- ablation A2
+
+/// A2: embedding accuracy vs polynomial order L at fixed d.
+fn ablation_order() {
+    let n = bench_n(3000);
+    let k = 30;
+    let d = 64;
+    let mut rng = Rng::new(5);
+    let w = dblp_analog(n, k, &mut rng);
+    println!("n={n} d={d} threshold c={:.4}\n", w.c);
+    println!("{:>5} | {:>8} {:>8} {:>8}", "L", "p50", "p95", "time(s)");
+    let mut tsv = Vec::new();
+    for &order in &[20usize, 40, 80, 160, 320] {
+        let fe = FastEmbed::new(Params { d, order, cascade: 2, ..Params::default() });
+        let mut rng_e = Rng::new(300);
+        let t = Timer::start();
+        let emb = fe.embed(&w.na, &SpectralFn::Step { c: w.c }, &mut rng_e);
+        let secs = t.elapsed_secs();
+        let mut devs = sample_pair_devs(&w.e_exact, &emb.e, 10_000, &mut rng_e);
+        devs.iter_mut().for_each(|v| *v = v.abs());
+        let row = stats::percentiles(&mut devs, &[50.0, 95.0]);
+        println!("{order:>5} | {:>8.4} {:>8.4} {secs:>8.2}", row[0], row[1]);
+        tsv.push(vec![order as f64, row[0], row[1], secs]);
+    }
+    io::write_tsv(Path::new("bench_out/ablation_L.tsv"), &["L", "p50", "p95", "secs"], &tsv).unwrap();
+    println!("\nshape: deviation falls with L then saturates at the JL floor for this d; \
+              time grows linearly in L -> wrote bench_out/ablation_L.tsv");
+}
+
+// ------------------------------------------------------------- ablation A3
+
+/// A3: empirical JL concentration vs the §3.1 bound.
+fn ablation_jl() {
+    let n = 2000;
+    let points = 150;
+    let mut rng = Rng::new(6);
+    let x = Mat::randn(&mut rng, points, n);
+    println!("{points} random points in R^{n}; measured max pairwise distortion vs d\n");
+    println!("{:>5} | {:>10} {:>16}", "d", "max |eps|", "bound eps(d,beta=1)");
+    let mut tsv = Vec::new();
+    for &d in &[8usize, 16, 32, 64, 128, 256] {
+        let om = cse::embed::omega::rademacher_omega(&mut rng, n, d);
+        let proj = x.matmul(&om);
+        let mut worst: f64 = 0.0;
+        for i in 0..points {
+            for j in 0..i {
+                let orig = x.row_dist(i, &x, j);
+                let emb = proj.row_dist(i, &proj, j);
+                worst = worst.max((emb * emb / (orig * orig) - 1.0).abs());
+            }
+        }
+        // Invert the bound d > (4+2b) ln n' / (e^2/2 - e^3/3) for eps.
+        let mut eps_bound = 1.0f64;
+        for e in (1..200).map(|t| t as f64 * 0.005) {
+            if (6.0 * (points as f64).ln()) / (e * e / 2.0 - e * e * e / 3.0) <= d as f64 {
+                eps_bound = e;
+                break;
+            }
+        }
+        println!("{d:>5} | {worst:>10.4} {eps_bound:>16.4}");
+        tsv.push(vec![d as f64, worst, eps_bound]);
+    }
+    io::write_tsv(Path::new("bench_out/ablation_jl.tsv"), &["d", "measured", "bound"], &tsv).unwrap();
+    println!("\nshape: measured distortion ~ O(sqrt(log n'/d)), comfortably inside the bound\n\
+              -> wrote bench_out/ablation_jl.tsv");
+}
+
+// ------------------------------------------------------------------ §Perf
+
+/// §Perf: the SpMM hot path. Compares the naive per-column matvec loop
+/// (what a straightforward port of Algorithm 1 does) against the blocked
+/// row-major SpMM the library ships, plus allocation behaviour of the
+/// recursion driver. Reports effective GFLOP/s and GB/s.
+fn perf() {
+    let n = bench_n(20_000);
+    let deg = 8;
+    let d = 64;
+    let reps = 5;
+    let mut rng = Rng::new(7);
+    let g = gen::sbm_by_degree(&mut rng, n, 100, deg as f64 - 2.0, 2.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let x = Mat::randn(&mut rng, n, d);
+    let nnz = na.nnz();
+    println!("SpMM workload: n={n} nnz={nnz} d={d} ({} per product)\n", cse::util::human_bytes(8 * nnz));
+
+    // Variant 1: naive — d independent matvecs (column-major access).
+    let naive = cse::util::timer::bench(reps, || {
+        let mut out = Mat::zeros(n, d);
+        for j in 0..d {
+            let col = x.col(j);
+            let y = na.matvec(&col);
+            out.set_col(j, &y);
+        }
+        out
+    });
+
+    // Variant 2: blocked row-major SpMM (the shipped hot path).
+    let blocked = cse::util::timer::bench(reps, || na.spmm(&x));
+
+    // Variant 3: blocked + preallocated output (the recursion's actual loop).
+    let mut y = Mat::zeros(n, d);
+    let prealloc = cse::util::timer::bench(reps, || na.spmm_into(&x, &mut y));
+
+    let flops = (2 * nnz * d) as f64;
+    let bytes = (12 * nnz + 8 * 2 * n * d) as f64; // idx+val stream + in/out blocks
+    println!("{:<34} {:>10} {:>10} {:>10}", "variant", "mean", "GFLOP/s", "GB/s");
+    for (name, s) in [
+        ("naive per-column matvec", &naive),
+        ("blocked row-major SpMM", &blocked),
+        ("blocked + preallocated out", &prealloc),
+    ] {
+        println!(
+            "{name:<34} {:>9.1}ms {:>10.2} {:>10.2}",
+            s.mean_secs * 1e3,
+            flops / s.mean_secs / 1e9,
+            bytes / s.mean_secs / 1e9
+        );
+    }
+    println!(
+        "\nspeedup blocked vs naive: {:.2}x | prealloc vs blocked: {:.2}x",
+        naive.mean_secs / blocked.mean_secs,
+        blocked.mean_secs / prealloc.mean_secs
+    );
+
+    // End-to-end recursion throughput (the shipped driver).
+    let series = legendre::step_coeffs(60, 0.8);
+    let e2e = cse::util::timer::bench(3, || {
+        let mut mv = 0;
+        cse::embed::fastembed::apply_series(&na, &series, &x, &mut mv)
+    });
+    println!(
+        "\nfull order-60 recursion over d={d}: {:.1}ms ({:.2} GFLOP/s sustained)",
+        e2e.mean_secs * 1e3,
+        (60.0 * flops) / e2e.mean_secs / 1e9
+    );
+    io::write_tsv(
+        Path::new("bench_out/perf.tsv"),
+        &["variant", "mean_secs"],
+        &[
+            vec![0.0, naive.mean_secs],
+            vec![1.0, blocked.mean_secs],
+            vec![2.0, prealloc.mean_secs],
+            vec![3.0, e2e.mean_secs],
+        ],
+    )
+    .unwrap();
+    println!("-> wrote bench_out/perf.tsv (see EXPERIMENTS.md §Perf for the iteration log)");
+}

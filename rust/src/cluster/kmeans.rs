@@ -1,0 +1,224 @@
+//! K-means (k-means++ seeding + Lloyd) over embedding rows — the paper's
+//! downstream task for the Amazon experiment (K = 200, 25 restarts,
+//! median modularity reported).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansParams {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative cost-improvement threshold for early stop.
+    pub tol: f64,
+}
+
+impl Default for KmeansParams {
+    fn default() -> Self {
+        KmeansParams { k: 8, max_iters: 50, tol: 1e-6 }
+    }
+}
+
+pub struct KmeansResult {
+    pub assignment: Vec<usize>,
+    pub centroids: Mat,
+    /// Final within-cluster sum of squares.
+    pub cost: f64,
+    pub iters: usize,
+}
+
+/// Lloyd's algorithm with k-means++ initialization on the rows of `x`.
+pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
+    let (n, dim) = (x.rows, x.cols);
+    let k = params.k.min(n).max(1);
+    let mut centroids = kmeanspp_init(x, k, rng);
+    let mut assignment = vec![0usize; n];
+    let mut prev_cost = f64::INFINITY;
+    let mut iters = 0;
+
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        // Assign.
+        let mut cost = 0.0;
+        for i in 0..n {
+            let (best, d2) = nearest(x.row(i), &centroids);
+            assignment[i] = best;
+            cost += d2;
+        }
+        // Update.
+        let mut counts = vec![0usize; k];
+        let mut sums = Mat::zeros(k, dim);
+        for i in 0..n {
+            let c = assignment[i];
+            counts[c] += 1;
+            for (s, v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: reseed at the point farthest from its
+                // centroid (standard fix).
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = dist2(x.row(a), centroids.row(assignment[a]));
+                        let db = dist2(x.row(b), centroids.row(assignment[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for (cv, sv) in centroids.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *cv = sv * inv;
+                }
+            }
+        }
+        if (prev_cost - cost).abs() <= params.tol * prev_cost.max(1e-300) {
+            break;
+        }
+        prev_cost = cost;
+    }
+    // Final assignment/cost against the last centroids.
+    let mut cost = 0.0;
+    for i in 0..n {
+        let (best, d2) = nearest(x.row(i), &centroids);
+        assignment[i] = best;
+        cost += d2;
+    }
+    KmeansResult { assignment, centroids, cost, iters }
+}
+
+fn kmeanspp_init(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = x.rows;
+    let mut centroids = Mat::zeros(k, x.cols);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2 = vec![0.0f64; n];
+    for i in 0..n {
+        d2[i] = dist2(x.row(i), centroids.row(0));
+    }
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            // Sample proportional to squared distance.
+            let mut target = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    chosen = i;
+                    break;
+                }
+                target -= w;
+            }
+            chosen
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(dist2(x.row(i), centroids.row(c)));
+        }
+    }
+    centroids
+}
+
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn nearest(row: &[f64], centroids: &Mat) -> (usize, f64) {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for c in 0..centroids.rows {
+        let d = dist2(row, centroids.row(c));
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::gaussian_mixture;
+    use crate::testing::prop::{check, forall};
+
+    #[test]
+    fn recovers_separated_gaussian_clusters() {
+        let mut rng = Rng::new(191);
+        let (pts, labels) = gaussian_mixture(&mut rng, 300, 4, 3, 12.0);
+        let x = Mat::from_vec(300, 4, pts);
+        let res = kmeans(&x, &KmeansParams { k: 3, ..Default::default() }, &mut rng);
+        // Clustering should agree with ground truth up to permutation:
+        // check pairs.
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in 0..300 {
+            for j in 0..i {
+                total += 1;
+                let same_true = labels[i] == labels[j];
+                let same_got = res.assignment[i] == res.assignment[j];
+                if same_true == same_got {
+                    agree += 1;
+                }
+            }
+        }
+        let rate = agree as f64 / total as f64;
+        assert!(rate > 0.97, "pair agreement {rate}");
+    }
+
+    #[test]
+    fn cost_decreases_with_more_clusters() {
+        forall(
+            192,
+            6,
+            |r| Mat::randn(r, 80, 3),
+            |x| {
+                let mut r1 = Rng::new(5);
+                let c2 = kmeans(x, &KmeansParams { k: 2, ..Default::default() }, &mut r1).cost;
+                let mut r2 = Rng::new(5);
+                let c8 = kmeans(x, &KmeansParams { k: 8, ..Default::default() }, &mut r2).cost;
+                check(c8 <= c2 + 1e-9, format!("k=8 cost {c8} > k=2 cost {c2}"))
+            },
+        );
+    }
+
+    #[test]
+    fn k_one_gives_total_variance() {
+        let mut rng = Rng::new(193);
+        let x = Mat::randn(&mut rng, 50, 2);
+        let res = kmeans(&x, &KmeansParams { k: 1, ..Default::default() }, &mut rng);
+        // Centroid = mean; cost = sum of squared deviations.
+        let mut mean = vec![0.0; 2];
+        for i in 0..50 {
+            for (m, v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v / 50.0;
+            }
+        }
+        let want: f64 = (0..50).map(|i| dist2(x.row(i), &mean)).sum();
+        assert!((res.cost - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(194);
+        let x = Mat::randn(&mut rng, 5, 2);
+        let res = kmeans(&x, &KmeansParams { k: 50, ..Default::default() }, &mut rng);
+        assert!(res.cost < 1e-18, "each point its own cluster, cost {}", res.cost);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let x = Mat::randn(&mut Rng::new(1), 60, 3);
+        let a = kmeans(&x, &KmeansParams { k: 4, ..Default::default() }, &mut r1);
+        let b = kmeans(&x, &KmeansParams { k: 4, ..Default::default() }, &mut r2);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.cost, b.cost);
+    }
+}

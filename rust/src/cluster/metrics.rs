@@ -1,0 +1,147 @@
+//! Clustering quality metrics: Newman modularity [28] (the paper's
+//! reported score) and NMI against planted ground truth (ours, since the
+//! SBM substitution gives us true labels).
+
+use crate::sparse::Csr;
+
+/// Newman modularity of a hard partition on an undirected graph:
+/// `Q = Σ_c [ e_c / m − (deg_c / 2m)² ]`, Q ∈ [−1/2, 1).
+pub fn modularity(adj: &Csr, assignment: &[usize]) -> f64 {
+    assert_eq!(adj.rows, assignment.len());
+    let two_m: f64 = adj.values.iter().sum(); // = 2m for symmetric adjacency
+    if two_m <= 0.0 {
+        return 0.0;
+    }
+    let k = assignment.iter().copied().max().map_or(0, |m| m + 1);
+    let mut internal = vec![0.0f64; k]; // 2 * within-community edge weight
+    let mut degree = vec![0.0f64; k];
+    for i in 0..adj.rows {
+        let (idx, val) = adj.row(i);
+        let ci = assignment[i];
+        for (&j, &v) in idx.iter().zip(val) {
+            degree[ci] += v;
+            if assignment[j as usize] == ci {
+                internal[ci] += v;
+            }
+        }
+    }
+    (0..k)
+        .map(|c| internal[c] / two_m - (degree[c] / two_m) * (degree[c] / two_m))
+        .sum()
+}
+
+/// Normalized mutual information between two hard partitions (0..=1).
+pub fn nmi(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = a.iter().copied().max().unwrap_or(0) + 1;
+    let kb = b.iter().copied().max().unwrap_or(0) + 1;
+    let mut joint = vec![0.0f64; ka * kb];
+    let mut pa = vec![0.0f64; ka];
+    let mut pb = vec![0.0f64; kb];
+    let inv = 1.0 / n as f64;
+    for (&x, &y) in a.iter().zip(b) {
+        joint[x * kb + y] += inv;
+        pa[x] += inv;
+        pb[y] += inv;
+    }
+    let mut mi = 0.0;
+    for x in 0..ka {
+        for y in 0..kb {
+            let p = joint[x * kb + y];
+            if p > 0.0 {
+                mi += p * (p / (pa[x] * pb[y])).ln();
+            }
+        }
+    }
+    let ent = |p: &[f64]| -> f64 { -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>() };
+    let (ha, hb) = (ent(&pa), ent(&pb));
+    if ha <= 0.0 && hb <= 0.0 {
+        return 1.0; // both partitions trivial and identical in structure
+    }
+    let denom = (ha * hb).sqrt();
+    if denom <= 0.0 {
+        0.0
+    } else {
+        (mi / denom).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen::sbm;
+    use crate::util::rng::Rng;
+
+    fn two_cliques() -> Csr {
+        // Two 4-cliques joined by one edge.
+        let mut edges = Vec::new();
+        for block in 0..2 {
+            let off = block * 4;
+            for i in 0..4 {
+                for j in 0..i {
+                    edges.push((off + j, off + i));
+                }
+            }
+        }
+        edges.push((3, 4));
+        Csr::from_coo(&Coo::from_undirected_edges(8, &edges))
+    }
+
+    #[test]
+    fn modularity_of_planted_partition_is_high() {
+        let adj = two_cliques();
+        let good = [0, 0, 0, 0, 1, 1, 1, 1];
+        let q = modularity(&adj, &good);
+        assert!(q > 0.4, "good partition q = {q}");
+        // Random-ish partition scores lower.
+        let bad = [0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(modularity(&adj, &bad) < q);
+    }
+
+    #[test]
+    fn modularity_single_community_is_zero() {
+        let adj = two_cliques();
+        let q = modularity(&adj, &[0; 8]);
+        assert!(q.abs() < 1e-12);
+    }
+
+    #[test]
+    fn modularity_bounds() {
+        let mut rng = Rng::new(201);
+        let g = sbm(&mut rng, 200, 4, 0.2, 0.01);
+        let labels = g.labels.unwrap();
+        let q = modularity(&g.adj, &labels);
+        assert!(q > -0.5 && q < 1.0);
+        assert!(q > 0.5, "planted SBM labels give q = {q}");
+    }
+
+    #[test]
+    fn nmi_identity_and_permutation_invariance() {
+        let a = [0, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let b = [2, 2, 0, 0, 1, 1]; // relabeled
+        assert!((nmi(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_independent_partitions_low() {
+        let mut rng = Rng::new(202);
+        let n = 4000;
+        let a: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        assert!(nmi(&a, &b) < 0.02);
+    }
+
+    #[test]
+    fn nmi_degenerate_cases() {
+        assert!((nmi(&[], &[]) - 1.0).abs() < 1e-12);
+        assert!((nmi(&[0, 0, 0], &[0, 0, 0]) - 1.0).abs() < 1e-12);
+        // One trivial, one informative: NMI 0 (denominator guard).
+        assert_eq!(nmi(&[0, 0, 0, 0], &[0, 1, 2, 3]), 0.0);
+    }
+}

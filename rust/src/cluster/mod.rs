@@ -1,0 +1,9 @@
+//! Downstream inference: K-means clustering on embedding rows and the
+//! graph-quality metrics the paper reports.
+
+pub mod kmeans;
+pub mod metrics;
+pub mod pic;
+
+pub use kmeans::{kmeans, KmeansParams, KmeansResult};
+pub use metrics::{modularity, nmi};

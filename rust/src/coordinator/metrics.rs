@@ -1,0 +1,100 @@
+//! Atomic runtime metrics exported by the coordinator and the service.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Counters shared across workers. All methods are lock-free.
+#[derive(Default)]
+pub struct Metrics {
+    pub matvecs: AtomicUsize,
+    pub shards_done: AtomicUsize,
+    pub shards_total: AtomicUsize,
+    pub queries: AtomicUsize,
+    /// Cumulative query latency in nanoseconds.
+    pub query_ns: AtomicU64,
+    pub rows_flushed: AtomicUsize,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Snapshot {
+    pub matvecs: usize,
+    pub shards_done: usize,
+    pub shards_total: usize,
+    pub queries: usize,
+    pub query_ns: u64,
+    pub rows_flushed: usize,
+}
+
+impl Metrics {
+    pub fn add_matvecs(&self, n: usize) {
+        self.matvecs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn shard_done(&self) {
+        self.shards_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_query(&self, ns: u64) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.query_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            matvecs: self.matvecs.load(Ordering::Relaxed),
+            shards_done: self.shards_done.load(Ordering::Relaxed),
+            shards_total: self.shards_total.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            query_ns: self.query_ns.load(Ordering::Relaxed),
+            rows_flushed: self.rows_flushed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mean query latency in microseconds (NaN when no queries).
+    pub fn mean_query_us(&self) -> f64 {
+        let q = self.queries.load(Ordering::Relaxed);
+        if q == 0 {
+            return f64::NAN;
+        }
+        self.query_ns.load(Ordering::Relaxed) as f64 / q as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add_matvecs(10);
+        m.add_matvecs(5);
+        m.shard_done();
+        m.record_query(2_000);
+        m.record_query(4_000);
+        let s = m.snapshot();
+        assert_eq!(s.matvecs, 15);
+        assert_eq!(s.shards_done, 1);
+        assert_eq!(s.queries, 2);
+        assert!((m.mean_query_us() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.add_matvecs(1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().matvecs, 4000);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer-3 coordination: turning Algorithm 1 into a deployable system.
+//!
+//! The paper's key systems observation (§1, §3.2) is that the embedding
+//! factorizes into `d` *independent* column chains — "a sequence of 2L
+//! matrix-vector products … run in parallel across d randomly chosen
+//! starting vectors". This module owns that execution strategy:
+//!
+//! * [`queue`]   — bounded blocking queue (the backpressure primitive;
+//!   no tokio offline, so std sync primitives).
+//! * [`scheduler`] — the column-shard scheduler: splits Ω into column
+//!   shards, runs the recursion per shard on a worker pool, reassembles.
+//!   Shard execution is bit-exact with the unsharded driver (property-
+//!   tested), so parallelism is purely an execution concern.
+//! * [`service`] — the similarity-query service: owns a finished
+//!   embedding and answers normalized-correlation / top-k queries, the
+//!   "downstream inference" interface (§1) batched behind a queue.
+//! * [`metrics`] — atomic counters/gauges exported by the CLI.
+
+pub mod metrics;
+pub mod queue;
+pub mod scheduler;
+pub mod service;
+
+pub use scheduler::{Coordinator, EmbedJob, JobResult};
+pub use service::{QueryBatch, SimilarityService};

@@ -1,0 +1,266 @@
+//! The column-shard scheduler: the paper's "run the 2L matrix-vector
+//! chains in parallel across the d starting vectors", implemented as a
+//! worker pool over column shards of Ω.
+//!
+//! Sharding is *exact*: each shard runs the identical recursion on a
+//! column subset of Ω, and column chains never interact, so the
+//! reassembled embedding is bit-identical to the unsharded driver
+//! (property-tested below). Shard width also bounds worker memory:
+//! 3 ping-pong blocks of n × shard_width doubles.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use crate::embed::fastembed::{apply_series, plan_scaled};
+use crate::embed::norm::spectral_norm;
+use crate::embed::omega::rademacher_omega;
+use crate::embed::op::{Operator, ScaledOp};
+use crate::embed::Params;
+use crate::funcs::SpectralFn;
+use crate::linalg::Mat;
+use crate::poly::cascade::CascadePlan;
+use crate::util::rng::Rng;
+
+/// An embedding job specification.
+#[derive(Clone, Debug)]
+pub struct EmbedJob {
+    pub params: Params,
+    pub f: SpectralFn,
+    /// Column-shard width (starting vectors per work item).
+    pub shard_width: usize,
+    pub seed: u64,
+}
+
+impl EmbedJob {
+    pub fn new(params: Params, f: SpectralFn, seed: u64) -> Self {
+        EmbedJob { params, f, shard_width: 8, seed }
+    }
+}
+
+/// Result: the reassembled embedding + execution telemetry.
+pub struct JobResult {
+    pub e: Mat,
+    pub plan: CascadePlan,
+    pub norm_estimate: f64,
+    pub matvecs: usize,
+    pub shards: usize,
+}
+
+/// Worker-pool coordinator. `workers` is the pool size (on this testbed
+/// 1 core, but the pool exercises the real concurrency structure).
+pub struct Coordinator {
+    pub workers: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+/// A shard work item: columns [start, end) of Ω.
+struct Shard {
+    start: usize,
+    omega: Mat,
+}
+
+impl Coordinator {
+    pub fn new(workers: usize) -> Self {
+        Coordinator { workers: workers.max(1), metrics: Arc::new(Metrics::default()) }
+    }
+
+    /// Run an embedding job over `op`, sharding Ω's columns across the
+    /// worker pool. Deterministic given `job.seed`.
+    pub fn run<O: Operator + Sync + ?Sized>(&self, op: &O, job: &EmbedJob) -> JobResult {
+        let n = op.dim();
+        let mut rng = Rng::new(job.seed);
+        let d = if job.params.d > 0 {
+            job.params.d
+        } else {
+            (6.0 * (n.max(2) as f64).ln()).ceil() as usize
+        };
+        let omega = rademacher_omega(&mut rng, n, d);
+        self.run_with_omega(op, job, omega)
+    }
+
+    /// Same, with caller-supplied Ω (tests / resumable jobs).
+    pub fn run_with_omega<O: Operator + Sync + ?Sized>(
+        &self,
+        op: &O,
+        job: &EmbedJob,
+        omega: Mat,
+    ) -> JobResult {
+        let n = op.dim();
+        assert_eq!(omega.rows, n);
+        let d = omega.cols;
+        let mut rng = Rng::new(job.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let kappa = match &job.params.norm_est {
+            Some(pe) => spectral_norm(op, pe, &mut rng).max(1e-300),
+            None => 1.0,
+        };
+        let plan = plan_scaled(
+            &job.f,
+            kappa,
+            job.params.order,
+            job.params.cascade,
+            job.params.basis,
+        );
+
+        // Build shards (column slices of Ω).
+        let width = job.shard_width.clamp(1, d);
+        let queue: BoundedQueue<Shard> = BoundedQueue::new(2 * self.workers.max(1));
+        let nshards = d.div_ceil(width);
+        self.metrics.shards_total.store(nshards, Ordering::Relaxed);
+        self.metrics.shards_done.store(0, Ordering::Relaxed);
+
+        let scaled = ScaledOp::new(op, 1.0 / kappa, 0.0);
+        let total_matvecs = AtomicUsize::new(0);
+        let results: Vec<std::sync::Mutex<Option<Mat>>> =
+            (0..nshards).map(|_| std::sync::Mutex::new(None)).collect();
+
+        std::thread::scope(|scope| {
+            // Workers.
+            for _ in 0..self.workers {
+                let queue = &queue;
+                let plan = &plan;
+                let scaled = &scaled;
+                let results = &results;
+                let total = &total_matvecs;
+                let metrics = Arc::clone(&self.metrics);
+                scope.spawn(move || {
+                    while let Some(shard) = queue.pop() {
+                        let mut mv = 0usize;
+                        let mut e = shard.omega;
+                        for _ in 0..plan.b {
+                            e = apply_series(scaled, &plan.stage, &e, &mut mv);
+                        }
+                        total.fetch_add(mv, Ordering::Relaxed);
+                        metrics.add_matvecs(mv);
+                        let idx = shard.start / width;
+                        *results[idx].lock().unwrap() = Some(e);
+                        metrics.shard_done();
+                    }
+                });
+            }
+            // Producer: slice Ω into shards (backpressure via the queue).
+            let mut start = 0;
+            while start < d {
+                let end = (start + width).min(d);
+                let mut cols = Mat::zeros(n, end - start);
+                for i in 0..n {
+                    cols.row_mut(i)
+                        .copy_from_slice(&omega.row(i)[start..end]);
+                }
+                queue
+                    .push(Shard { start, omega: cols })
+                    .unwrap_or_else(|_| panic!("queue closed early"));
+                start = end;
+            }
+            queue.close();
+        });
+
+        // Reassemble.
+        let mut e = Mat::zeros(n, d);
+        for (s, slot) in results.iter().enumerate() {
+            let shard = slot.lock().unwrap().take().expect("missing shard result");
+            let start = s * width;
+            for i in 0..n {
+                e.row_mut(i)[start..start + shard.cols].copy_from_slice(shard.row(i));
+            }
+        }
+        JobResult {
+            e,
+            plan,
+            norm_estimate: kappa,
+            matvecs: total_matvecs.into_inner(),
+            shards: nshards,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::FastEmbed;
+    use crate::poly::Basis;
+    use crate::sparse::{gen, graph};
+    use crate::testing::prop::{check, forall};
+
+    fn job(d: usize, order: usize, cascade: usize, width: usize) -> EmbedJob {
+        EmbedJob {
+            params: Params { d, order, cascade, basis: Basis::Legendre, norm_est: None },
+            f: SpectralFn::Step { c: 0.5 },
+            shard_width: width,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn sharded_equals_unsharded_bitexact() {
+        forall(
+            211,
+            6,
+            |r| {
+                let n = 30 + r.below(40);
+                let g = gen::erdos_renyi(r, n, n * 3);
+                let width = 1 + r.below(5);
+                let workers = 1 + r.below(4);
+                (graph::normalized_adjacency(&g.adj), width, workers)
+            },
+            |(na, width, workers)| {
+                let j = job(16, 24, 2, *width);
+                let mut rng = Rng::new(j.seed);
+                let omega = rademacher_omega(&mut rng, na.rows, 16);
+
+                let coord = Coordinator::new(*workers);
+                let sharded = coord.run_with_omega(na, &j, omega.clone());
+
+                let fe = FastEmbed::new(j.params.clone());
+                let mut rng2 = Rng::new(0);
+                let direct = fe.embed_with_omega(na, &j.f, omega, &mut rng2);
+
+                check(
+                    sharded.e.max_abs_diff(&direct.e) == 0.0,
+                    format!("shard mismatch {}", sharded.e.max_abs_diff(&direct.e)),
+                )?;
+                check(sharded.matvecs == direct.matvecs, "matvec accounting")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shard_count_and_metrics() {
+        let mut rng = Rng::new(212);
+        let g = gen::erdos_renyi(&mut rng, 60, 180);
+        let na = graph::normalized_adjacency(&g.adj);
+        let coord = Coordinator::new(3);
+        let j = job(20, 12, 1, 6);
+        let res = coord.run(&na, &j);
+        assert_eq!(res.shards, 4); // ceil(20/6)
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.shards_done, 4);
+        assert_eq!(snap.shards_total, 4);
+        assert_eq!(snap.matvecs, res.matvecs);
+        assert_eq!(res.e.cols, 20);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mut rng = Rng::new(213);
+        let g = gen::sbm_by_degree(&mut rng, 80, 4, 6.0, 1.0);
+        let na = graph::normalized_adjacency(&g.adj);
+        let j = job(12, 20, 2, 3);
+        let a = Coordinator::new(1).run(&na, &j);
+        let b = Coordinator::new(4).run(&na, &j);
+        assert_eq!(a.e.data, b.e.data);
+    }
+
+    #[test]
+    fn auto_d_used_when_zero() {
+        let mut rng = Rng::new(214);
+        let g = gen::erdos_renyi(&mut rng, 50, 100);
+        let na = graph::normalized_adjacency(&g.adj);
+        let j = job(0, 8, 1, 4);
+        let res = Coordinator::new(2).run(&na, &j);
+        let want = (6.0 * (50f64).ln()).ceil() as usize;
+        assert_eq!(res.e.cols, want);
+    }
+}

@@ -1,0 +1,207 @@
+//! Similarity-query service over a finished embedding.
+//!
+//! The embedding exists to answer ℓ₂-derived similarity queries (§1);
+//! this is the serving half of the system: normalized-correlation and
+//! top-k neighbour queries over the rows of Ẽ, batched behind a bounded
+//! queue and executed by a worker pool. Row norms are precomputed once,
+//! so a pairwise query is O(d) and a top-k scan O(n·d).
+
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use crate::linalg::Mat;
+
+/// A single query.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// Normalized correlation between two vertices.
+    Corr { i: usize, j: usize },
+    /// Top-k most correlated vertices to `i` (excluding `i`).
+    TopK { i: usize, k: usize },
+}
+
+/// A query answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Answer {
+    Corr(f64),
+    TopK(Vec<(usize, f64)>),
+}
+
+/// The service: an embedding with precomputed row norms.
+pub struct SimilarityService {
+    e: Mat,
+    norms: Vec<f64>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl SimilarityService {
+    pub fn new(e: Mat) -> Self {
+        let norms = (0..e.rows).map(|i| e.row_norm(i)).collect();
+        SimilarityService { e, norms, metrics: Arc::new(Metrics::default()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.e.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.e.rows == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.e.cols
+    }
+
+    /// Normalized correlation of rows i, j (0 for zero rows).
+    pub fn corr(&self, i: usize, j: usize) -> f64 {
+        let (ni, nj) = (self.norms[i], self.norms[j]);
+        if ni < 1e-300 || nj < 1e-300 {
+            return 0.0;
+        }
+        self.e.row_dot(i, j) / (ni * nj)
+    }
+
+    /// Top-k most correlated vertices to `i` (linear scan + bounded heap).
+    pub fn top_k(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        use std::cmp::Ordering;
+        let mut heap: Vec<(usize, f64)> = Vec::with_capacity(k + 1); // min at end
+        for j in 0..self.e.rows {
+            if j == i {
+                continue;
+            }
+            let c = self.corr(i, j);
+            if heap.len() < k {
+                heap.push((j, c));
+                heap.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal));
+            } else if let Some(last) = heap.last() {
+                if c > last.1 {
+                    heap.pop();
+                    let pos = heap
+                        .binary_search_by(|p| {
+                            c.partial_cmp(&p.1).unwrap_or(Ordering::Equal)
+                        })
+                        .unwrap_or_else(|e| e);
+                    heap.insert(pos, (j, c));
+                }
+            }
+        }
+        heap
+    }
+
+    /// Answer one query, recording latency.
+    pub fn answer(&self, q: &Query) -> Answer {
+        let t = std::time::Instant::now();
+        let ans = match *q {
+            Query::Corr { i, j } => Answer::Corr(self.corr(i, j)),
+            Query::TopK { i, k } => Answer::TopK(self.top_k(i, k)),
+        };
+        self.metrics.record_query(t.elapsed().as_nanos() as u64);
+        ans
+    }
+}
+
+/// A batch executor: pushes queries through a bounded queue to a worker
+/// pool, preserving input order in the answer vector.
+pub struct QueryBatch;
+
+impl QueryBatch {
+    /// Execute `queries` with `workers` threads over `service`.
+    pub fn run(service: &SimilarityService, queries: &[Query], workers: usize) -> Vec<Answer> {
+        let workers = workers.max(1);
+        let queue: BoundedQueue<(usize, Query)> = BoundedQueue::new(4 * workers);
+        let slots: Vec<std::sync::Mutex<Option<Answer>>> =
+            queries.iter().map(|_| std::sync::Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = &queue;
+                let slots = &slots;
+                scope.spawn(move || {
+                    while let Some((idx, q)) = queue.pop() {
+                        *slots[idx].lock().unwrap() = Some(service.answer(&q));
+                    }
+                });
+            }
+            for (idx, q) in queries.iter().enumerate() {
+                queue.push((idx, q.clone())).ok();
+            }
+            queue.close();
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("missing answer"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn service(n: usize, d: usize, seed: u64) -> SimilarityService {
+        let mut rng = Rng::new(seed);
+        SimilarityService::new(Mat::randn(&mut rng, n, d))
+    }
+
+    #[test]
+    fn corr_agrees_with_mat_row_corr() {
+        let s = service(20, 6, 221);
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((s.corr(i, j) - s.e.row_corr(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_matches_exhaustive_sort() {
+        let s = service(50, 5, 222);
+        for &i in &[0, 7, 49] {
+            let got = s.top_k(i, 5);
+            let mut all: Vec<(usize, f64)> =
+                (0..50).filter(|&j| j != i).map(|j| (j, s.corr(i, j))).collect();
+            all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let want: Vec<usize> = all[..5].iter().map(|p| p.0).collect();
+            let got_idx: Vec<usize> = got.iter().map(|p| p.0).collect();
+            assert_eq!(got_idx, want, "top-k mismatch at {i}");
+            // Scores descending.
+            for w in got.windows(2) {
+                assert!(w[0].1 >= w[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_k_larger_than_n() {
+        let s = service(5, 3, 223);
+        let got = s.top_k(0, 100);
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn batch_preserves_order_and_matches_serial() {
+        let s = service(40, 4, 224);
+        let queries: Vec<Query> = (0..30)
+            .map(|t| {
+                if t % 2 == 0 {
+                    Query::Corr { i: t % 40, j: (t * 7) % 40 }
+                } else {
+                    Query::TopK { i: t % 40, k: 3 }
+                }
+            })
+            .collect();
+        let serial: Vec<Answer> = queries.iter().map(|q| s.answer(q)).collect();
+        let batched = QueryBatch::run(&s, &queries, 4);
+        assert_eq!(serial, batched);
+        assert!(s.metrics.snapshot().queries >= 60);
+    }
+
+    #[test]
+    fn zero_row_corr_is_zero() {
+        let mut e = Mat::zeros(3, 4);
+        e.row_mut(1).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+        let s = SimilarityService::new(e);
+        assert_eq!(s.corr(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Eigensolver baselines the paper compares against.
+//!
+//! * [`lanczos`] — full-reorthogonalization Lanczos: our stand-in for the
+//!   ARPACK/`eigs` "exact" baseline (DESIGN.md §3), also the ground truth
+//!   for every accuracy experiment.
+//! * [`simult`] — simultaneous (orthogonal) iteration, the other classic
+//!   `Ω(kT)` iterative solver named in §2.
+//! * [`rsvd`] — Randomized SVD (Halko et al. [8]), the approximate
+//!   baseline of the Amazon clustering experiment (q=5, l=10).
+//! * [`nystrom`] — Nyström column-sampling approximation [6][7].
+//!
+//! All solvers work on any [`crate::embed::op::Operator`], so they drive
+//! the same SpMM hot path as FastEmbed — timing comparisons measure
+//! algorithmic cost, not implementation skew.
+
+pub mod lanczos;
+pub mod nystrom;
+pub mod rsvd;
+pub mod simult;
+
+use crate::linalg::Mat;
+
+/// A partial eigendecomposition: `k` eigenvalues (descending by the
+/// solver's ordering criterion) with eigenvectors as columns of `vectors`.
+pub struct PartialEig {
+    pub values: Vec<f64>,
+    /// n×k, column i pairs with values[i].
+    pub vectors: Mat,
+    /// Operator applications consumed.
+    pub matvecs: usize,
+}
+
+impl PartialEig {
+    /// The spectral embedding E = [f(λ₁)v₁ … f(λ_k)v_k] (n×k) this
+    /// decomposition induces — what FastEmbed approximates compressively.
+    pub fn spectral_embedding(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let mut e = self.vectors.clone();
+        for (j, &l) in self.values.iter().enumerate() {
+            let fl = f(l);
+            for i in 0..e.rows {
+                e[(i, j)] *= fl;
+            }
+        }
+        e
+    }
+}

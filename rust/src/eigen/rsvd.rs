@@ -1,0 +1,131 @@
+//! Randomized SVD (Halko, Martinsson, Tropp [8]) for symmetric operators —
+//! the approximate baseline of the paper's Amazon clustering comparison
+//! (power iterates q=5, oversampling l=10).
+
+use super::PartialEig;
+use crate::embed::op::Operator;
+use crate::linalg::eigh::jacobi_eigh;
+use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Parameters (paper's comparison settings as defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct RsvdParams {
+    /// Power iterations q.
+    pub power_iters: usize,
+    /// Oversampling l (sketch width is k + l).
+    pub oversample: usize,
+}
+
+impl Default for RsvdParams {
+    fn default() -> Self {
+        RsvdParams { power_iters: 5, oversample: 10 }
+    }
+}
+
+/// Rank-k randomized eigendecomposition of a symmetric operator:
+/// range finder Y = S^{q+1} Ω with re-orthonormalization between powers,
+/// then Rayleigh–Ritz on the captured subspace.
+pub fn rsvd(
+    op: &(impl Operator + ?Sized),
+    k: usize,
+    params: &RsvdParams,
+    rng: &mut Rng,
+) -> PartialEig {
+    let n = op.dim();
+    let k = k.min(n);
+    let p = (k + params.oversample).min(n);
+    let mut q = Mat::randn(rng, n, p);
+    let mut y = Mat::zeros(n, p);
+    let mut matvecs = 0;
+    op.apply_into(&q, &mut y);
+    matvecs += p;
+    std::mem::swap(&mut q, &mut y);
+    mgs_orthonormalize(&mut q, 1e-12);
+    for _ in 0..params.power_iters {
+        op.apply_into(&q, &mut y);
+        matvecs += p;
+        std::mem::swap(&mut q, &mut y);
+        mgs_orthonormalize(&mut q, 1e-12);
+    }
+    // B = Qᵀ S Q (p×p), eigendecompose, keep top k by |λ|.
+    op.apply_into(&q, &mut y);
+    matvecs += p;
+    let b = q.tmatmul(&y);
+    let mut bs = b.clone();
+    for i in 0..p {
+        for j in 0..p {
+            bs[(i, j)] = (b[(i, j)] + b[(j, i)]) / 2.0;
+        }
+    }
+    let (theta, z) = jacobi_eigh(&bs);
+    // jacobi returns descending by value; for embeddings of normalized
+    // adjacencies the top-k algebraic is what partial SVD keeps.
+    let zk = z.take_cols(k);
+    let vectors = q.matmul(&zk);
+    PartialEig { values: theta[..k].to_vec(), vectors, matvecs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eigen::lanczos::{lanczos, LanczosParams};
+    use crate::sparse::{gen, graph};
+
+    #[test]
+    fn rsvd_close_to_lanczos_on_gapped_spectrum() {
+        let mut rng = Rng::new(171);
+        // deg_out = 2 keeps communities well connected (single lambda = 1,
+        // no near-degenerate cluster that slows single-vector Lanczos).
+        let g = gen::sbm_by_degree(&mut rng, 400, 4, 10.0, 2.0);
+        let na = graph::normalized_adjacency(&g.adj);
+        let exact = lanczos(
+            &na,
+            6,
+            &LanczosParams { subspace: Some(120), ..Default::default() },
+            &mut rng,
+        );
+        let approx = rsvd(&na, 6, &RsvdParams::default(), &mut rng);
+        // q=5 power iterations leave O(1e-3..1e-2) error on the sub-leading
+        // community eigenvalues — exactly the lossiness the paper observes.
+        for i in 0..4 {
+            assert!(
+                (exact.values[i] - approx.values[i]).abs() < 1e-2,
+                "eig {i}: {} vs {}",
+                exact.values[i],
+                approx.values[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fewer_power_iters_is_less_accurate() {
+        // The q=5 vs q=0 accuracy ordering that motivates the paper's
+        // "RSVD is fast but lossy" observation.
+        let mut rng = Rng::new(172);
+        let g = gen::sbm_by_degree(&mut rng, 500, 10, 6.0, 2.0);
+        let na = graph::normalized_adjacency(&g.adj);
+        let exact = lanczos(&na, 12, &LanczosParams::default(), &mut rng);
+        let sum_err = |q: usize| -> f64 {
+            let mut r2 = Rng::new(42);
+            let pe = rsvd(&na, 12, &RsvdParams { power_iters: q, oversample: 10 }, &mut r2);
+            exact
+                .values
+                .iter()
+                .zip(&pe.values)
+                .map(|(a, b)| (a - b).abs())
+                .sum()
+        };
+        assert!(sum_err(0) > sum_err(5), "q=0 err {} vs q=5 err {}", sum_err(0), sum_err(5));
+    }
+
+    #[test]
+    fn matvec_budget_accounting() {
+        let mut rng = Rng::new(173);
+        let g = gen::erdos_renyi(&mut rng, 100, 300);
+        let na = graph::normalized_adjacency(&g.adj);
+        let pe = rsvd(&na, 5, &RsvdParams { power_iters: 2, oversample: 5 }, &mut rng);
+        assert_eq!(pe.matvecs, 10 * 4); // (k+l) * (1 + q + 1)
+    }
+}

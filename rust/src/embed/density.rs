@@ -1,0 +1,219 @@
+//! Spectral density / eigenvalue counting — the §2-adjacent application
+//! of the same machinery (kernel polynomial method, refs [25][26] of the
+//! paper): estimate how many eigenvalues of S fall in a band [a, b]
+//! without any eigendecomposition.
+//!
+//! count(a, b) = tr I_{[a,b]}(S) ≈ (n/m)·Σ_j ωⱼᵀ f̃_L(S) ωⱼ / ‖ωⱼ‖² —
+//! a Hutchinson trace estimator over the same Rademacher vectors and the
+//! same three-term recursion FastEmbed already runs. This is how the
+//! library picks the step threshold c "capture the top k eigenvectors"
+//! without the Lanczos probe (see [`count_above`] / [`threshold_for_count`]).
+
+use super::fastembed::apply_series;
+use super::op::Operator;
+use crate::linalg::Mat;
+use crate::poly::{chebyshev, legendre, Basis, Series};
+use crate::util::rng::Rng;
+
+/// Parameters for the KPM eigenvalue counter.
+#[derive(Clone, Copy, Debug)]
+pub struct DensityParams {
+    /// Polynomial order of the band-indicator approximation.
+    pub order: usize,
+    /// Number of Hutchinson probe vectors.
+    pub probes: usize,
+    /// Basis (Chebyshev + Jackson damping is the classic KPM choice).
+    pub basis: Basis,
+    /// Apply Jackson damping (Chebyshev only) to suppress Gibbs ringing.
+    pub jackson: bool,
+}
+
+impl Default for DensityParams {
+    fn default() -> Self {
+        DensityParams { order: 120, probes: 16, basis: Basis::Chebyshev, jackson: true }
+    }
+}
+
+fn band_series(a: f64, b: f64, p: &DensityParams) -> Series {
+    match p.basis {
+        Basis::Legendre => legendre::indicator_coeffs(p.order, a, b),
+        Basis::Chebyshev => {
+            // I(a <= x <= b) = I(x >= a) - I(x > b).
+            let lo = chebyshev::step_coeffs(p.order, a);
+            let hi = chebyshev::step_coeffs(p.order, b);
+            let mut s = Series {
+                basis: Basis::Chebyshev,
+                coeffs: lo.coeffs.iter().zip(&hi.coeffs).map(|(l, h)| l - h).collect(),
+            };
+            // I(x >= b) excludes b itself from [a, b]; add it back only in
+            // the limit sense — for counting purposes the measure-zero
+            // endpoint is immaterial.
+            if p.jackson {
+                s = chebyshev::damped(&s, &chebyshev::jackson_damping(p.order));
+            }
+            s
+        }
+    }
+}
+
+/// Estimated number of eigenvalues of `op` (with ‖S‖ ≤ 1) in `[a, b]`.
+pub fn count_in_band(
+    op: &(impl Operator + ?Sized),
+    a: f64,
+    b: f64,
+    params: &DensityParams,
+    rng: &mut Rng,
+) -> f64 {
+    assert!(b >= a, "empty band");
+    let n = op.dim();
+    let m = params.probes.max(1);
+    let series = band_series(a.clamp(-1.0, 1.0), b.clamp(-1.0, 1.0), params);
+    // Probe block: Rademacher entries, E[ω ωᵀ] = I.
+    let mut omega = Mat::zeros(n, m);
+    for v in omega.data.iter_mut() {
+        *v = rng.rademacher();
+    }
+    let mut mv = 0;
+    let fo = apply_series(op, &series, &omega, &mut mv);
+    // tr f(S) ≈ (1/m) Σ_j ωⱼᵀ f(S) ωⱼ / (ωⱼᵀωⱼ/n) ; ωⱼᵀωⱼ = n exactly.
+    let mut acc = 0.0;
+    for j in 0..m {
+        let mut dot = 0.0;
+        for i in 0..n {
+            dot += omega[(i, j)] * fo[(i, j)];
+        }
+        acc += dot;
+    }
+    acc / m as f64
+}
+
+/// Estimated number of eigenvalues ≥ `c`.
+pub fn count_above(
+    op: &(impl Operator + ?Sized),
+    c: f64,
+    params: &DensityParams,
+    rng: &mut Rng,
+) -> f64 {
+    count_in_band(op, c, 1.0, params, rng)
+}
+
+/// Find a threshold `c` such that ≈ `k` eigenvalues lie above it, by
+/// bisection on the KPM counter — the SVD-free way to set the paper's
+/// f = I(λ ≥ λ_k) weighing function ("an elegant approach for implicitly
+/// optimizing over k", §5).
+pub fn threshold_for_count(
+    op: &(impl Operator + ?Sized),
+    k: usize,
+    params: &DensityParams,
+    rng: &mut Rng,
+) -> f64 {
+    let (mut lo, mut hi) = (-1.0f64, 1.0f64); // count(hi)=0 <= k <= count(lo)=n
+    for _ in 0..24 {
+        let mid = (lo + hi) / 2.0;
+        let cnt = count_above(op, mid, params, rng);
+        if cnt > k as f64 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo + hi) / 2.0
+}
+
+/// Full spectral-density histogram: eigenvalue counts over `bins` uniform
+/// bands of [-1, 1] (the [25][26] use case).
+pub fn spectral_histogram(
+    op: &(impl Operator + ?Sized),
+    bins: usize,
+    params: &DensityParams,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    (0..bins)
+        .map(|t| {
+            let a = -1.0 + 2.0 * t as f64 / bins as f64;
+            let b = -1.0 + 2.0 * (t + 1) as f64 / bins as f64;
+            count_in_band(op, a, b, params, rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::op::DenseOp;
+    use crate::sparse::{gen, graph};
+
+    fn diag_op(vals: &[f64]) -> DenseOp {
+        let n = vals.len();
+        let mut m = Mat::zeros(n, n);
+        for (i, &v) in vals.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        DenseOp(m)
+    }
+
+    #[test]
+    fn counts_known_diagonal_spectrum() {
+        // 10 eigenvalues at 0.9, 30 at 0.1, 20 at -0.5.
+        let mut vals = vec![0.9; 10];
+        vals.extend(vec![0.1; 30]);
+        vals.extend(vec![-0.5; 20]);
+        let op = diag_op(&vals);
+        let mut rng = Rng::new(71);
+        let p = DensityParams { probes: 32, ..Default::default() };
+        let hi = count_in_band(&op, 0.5, 1.0, &p, &mut rng);
+        let mid = count_in_band(&op, -0.1, 0.3, &p, &mut rng);
+        let lo = count_in_band(&op, -0.7, -0.3, &p, &mut rng);
+        assert!((hi - 10.0).abs() < 2.5, "hi band {hi}");
+        assert!((mid - 30.0).abs() < 5.0, "mid band {mid}");
+        assert!((lo - 20.0).abs() < 4.0, "lo band {lo}");
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let mut rng = Rng::new(72);
+        let g = gen::erdos_renyi(&mut rng, 300, 900);
+        let na = graph::normalized_adjacency(&g.adj);
+        let p = DensityParams { probes: 24, ..Default::default() };
+        let hist = spectral_histogram(&na, 8, &p, &mut rng);
+        let total: f64 = hist.iter().sum();
+        assert!((total - 300.0).abs() < 20.0, "histogram total {total}");
+    }
+
+    #[test]
+    fn count_above_finds_community_cluster() {
+        let mut rng = Rng::new(73);
+        let g = gen::sbm_by_degree(&mut rng, 800, 8, 12.0, 0.8);
+        let na = graph::normalized_adjacency(&g.adj);
+        let p = DensityParams { probes: 24, ..Default::default() };
+        // 8 community eigenvalues near 0.9, bulk below ~0.6.
+        let cnt = count_above(&na, 0.75, &p, &mut rng);
+        assert!((cnt - 8.0).abs() < 2.5, "community count {cnt}");
+    }
+
+    #[test]
+    fn threshold_for_count_brackets_lambda_k() {
+        let mut vals: Vec<f64> = (0..50).map(|i| 0.95 - 0.015 * i as f64).collect();
+        vals.extend(vec![-0.2; 50]);
+        let op = diag_op(&vals);
+        let mut rng = Rng::new(74);
+        let p = DensityParams { probes: 32, order: 160, ..Default::default() };
+        let c = threshold_for_count(&op, 20, &p, &mut rng);
+        // lambda_20 = 0.95 - 0.015*19 = 0.665; lambda_21 = 0.65.
+        assert!(c > 0.55 && c < 0.75, "threshold {c}");
+    }
+
+    #[test]
+    fn legendre_basis_also_works() {
+        let op = diag_op(&[0.8, 0.8, -0.3, -0.3, -0.3, 0.0]);
+        let mut rng = Rng::new(75);
+        let p = DensityParams {
+            basis: Basis::Legendre,
+            jackson: false,
+            probes: 48,
+            order: 100,
+        };
+        let cnt = count_in_band(&op, 0.6, 1.0, &p, &mut rng);
+        assert!((cnt - 2.0).abs() < 1.0, "legendre count {cnt}");
+    }
+}

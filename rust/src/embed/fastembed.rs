@@ -1,0 +1,496 @@
+//! Algorithm 1 (FASTEMBEDEIG) + §3.5 general-matrix embedding + §4
+//! cascading, generic over [`Operator`].
+
+use super::norm::{spectral_norm, NormEstParams};
+use super::omega::rademacher_omega;
+use super::op::{Operator, ScaledOp};
+use crate::funcs::SpectralFn;
+use crate::linalg::Mat;
+use crate::poly::cascade::{self, CascadePlan};
+use crate::poly::{chebyshev, legendre, Basis, Series};
+use crate::sparse::{graph, Csr};
+use crate::util::rng::Rng;
+
+/// FastEmbed parameters.
+#[derive(Clone, Debug)]
+pub struct Params {
+    /// Embedding dimension d; 0 → auto `ceil(6 log n)` (paper's choice).
+    pub d: usize,
+    /// Total matrix-vector budget L per starting vector.
+    pub order: usize,
+    /// Cascade factor b (§4); 1 disables cascading.
+    pub cascade: usize,
+    /// Polynomial basis (Legendre = paper default).
+    pub basis: Basis,
+    /// Spectral-norm estimation; `None` asserts ‖S‖ ≤ 1 already
+    /// (e.g. normalized adjacencies).
+    pub norm_est: Option<NormEstParams>,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            d: 0,
+            order: 120,
+            cascade: 2,
+            basis: Basis::Legendre,
+            norm_est: None,
+        }
+    }
+}
+
+/// Result of an embedding run.
+pub struct Embedding {
+    /// n×d compressive embedding Ẽ; rows approximate rows of E up to
+    /// Theorem 1's distortion.
+    pub e: Mat,
+    /// The cascade plan actually executed (stage series + b).
+    pub plan: CascadePlan,
+    /// ‖S‖ estimate used for rescaling (1.0 when `norm_est` is None).
+    pub norm_estimate: f64,
+    /// Total operator applications performed (L·(cascade stages)).
+    pub matvecs: usize,
+}
+
+/// §3.5 output for general m×n matrices.
+pub struct GeneralEmbedding {
+    /// m×d embedding of the **rows** of A (≈ rows of [f(σ)u …]).
+    pub rows: Mat,
+    /// n×d embedding of the **columns** of A (≈ rows of [f(σ)v …]).
+    pub cols: Mat,
+    pub norm_estimate: f64,
+    pub matvecs: usize,
+}
+
+/// The FastEmbed driver.
+pub struct FastEmbed {
+    pub params: Params,
+}
+
+impl FastEmbed {
+    pub fn new(params: Params) -> Self {
+        assert!(params.cascade >= 1, "cascade must be >= 1");
+        assert!(params.order >= 1, "order must be >= 1");
+        FastEmbed { params }
+    }
+
+    fn auto_d(&self, n: usize) -> usize {
+        if self.params.d > 0 {
+            self.params.d
+        } else {
+            (6.0 * (n.max(2) as f64).ln()).ceil() as usize
+        }
+    }
+
+    /// Embed a symmetric operator with weighing function `f`.
+    pub fn embed(&self, op: &(impl Operator + ?Sized), f: &SpectralFn, rng: &mut Rng) -> Embedding {
+        let n = op.dim();
+        let omega = rademacher_omega(rng, n, self.auto_d(n));
+        self.embed_with_omega(op, f, omega, rng)
+    }
+
+    /// Embed with a caller-supplied Ω (deterministic tests; the
+    /// coordinator shards Ω's columns across workers and calls this).
+    pub fn embed_with_omega(
+        &self,
+        op: &(impl Operator + ?Sized),
+        f: &SpectralFn,
+        omega: Mat,
+        rng: &mut Rng,
+    ) -> Embedding {
+        assert_eq!(omega.rows, op.dim(), "Ω row count must match operator");
+        let kappa = match &self.params.norm_est {
+            Some(pe) => spectral_norm(op, pe, rng).max(1e-300),
+            None => 1.0,
+        };
+        let plan = plan_scaled(f, kappa, self.params.order, self.params.cascade, self.params.basis);
+        let scaled = ScaledOp::new(op, 1.0 / kappa, 0.0);
+        let mut matvecs = 0;
+        let mut e = omega;
+        for _ in 0..plan.b {
+            e = apply_series(&scaled, &plan.stage, &e, &mut matvecs);
+        }
+        Embedding { e, plan, norm_estimate: kappa, matvecs }
+    }
+
+    /// §3.5: embed a general (possibly rectangular) matrix A through the
+    /// symmetric dilation S = [[0, Aᵀ],[A, 0]] with the odd extension
+    /// f'(x) = f(x)I(x≥0) − f(−x)I(x<0).
+    ///
+    /// Cascading is disabled on this path (the odd extension takes
+    /// negative values, so a b-th-root stage function does not exist);
+    /// the full `order` budget goes to a single stage.
+    pub fn embed_general(&self, a: &Csr, f: &SpectralFn, rng: &mut Rng) -> GeneralEmbedding {
+        let (m, n) = (a.rows, a.cols);
+        let s = graph::dilation(a);
+        let kappa = match &self.params.norm_est {
+            Some(pe) => spectral_norm(&s, pe, rng).max(1e-300),
+            None => 1.0,
+        };
+        let series = odd_extension_series(f, kappa, self.params.order, self.params.basis);
+        let scaled = ScaledOp::new(&s, 1.0 / kappa, 0.0);
+        let omega = rademacher_omega(rng, m + n, self.auto_d(m + n));
+        let mut matvecs = 0;
+        let e_all = apply_series(&scaled, &series, &omega, &mut matvecs);
+        // First n rows ↔ columns of A, last m rows ↔ rows of A (§3.5).
+        let d = e_all.cols;
+        let mut cols = Mat::zeros(n, d);
+        cols.data.copy_from_slice(&e_all.data[..n * d]);
+        let mut rows = Mat::zeros(m, d);
+        rows.data.copy_from_slice(&e_all.data[n * d..]);
+        GeneralEmbedding { rows, cols, norm_estimate: kappa, matvecs }
+    }
+}
+
+/// Evaluate `f̃(S)·Q₀` by the three-term recursion (Algorithm 1 lines
+/// 5–8), with ping-pong buffers so the hot loop performs zero allocations
+/// beyond the three blocks. `matvecs` counts *column* matvecs (one block
+/// application of width w adds w), matching the paper's L·d accounting.
+pub fn apply_series(
+    op: &(impl Operator + ?Sized),
+    series: &Series,
+    q0: &Mat,
+    matvecs: &mut usize,
+) -> Mat {
+    let a = &series.coeffs;
+    assert!(!a.is_empty(), "empty series");
+    let mut e = q0.clone();
+    e.scale(a[0]);
+    if a.len() == 1 {
+        return e;
+    }
+    // q1 = S q0 (p(1, x) = x in both bases).
+    let mut q_prev2 = q0.clone();
+    let mut q_prev = op.apply(q0);
+    *matvecs += q0.cols;
+    e.axpy(a[1], &q_prev);
+    let mut q_new = Mat::zeros(q0.rows, q0.cols);
+    for r in 2..a.len() {
+        let (c1, c2) = series.recursion_scalars(r);
+        // q_new = c1 * S q_prev − c2 * q_prev2
+        op.apply_into(&q_prev, &mut q_new);
+        *matvecs += q0.cols;
+        for ((qn, qp2), _) in q_new
+            .data
+            .iter_mut()
+            .zip(q_prev2.data.iter())
+            .zip(std::iter::repeat(()))
+        {
+            *qn = c1 * *qn - c2 * *qp2;
+        }
+        e.axpy(a[r], &q_new);
+        // Rotate buffers: prev2 <- prev <- new (reuse prev2's storage).
+        std::mem::swap(&mut q_prev2, &mut q_prev);
+        std::mem::swap(&mut q_prev, &mut q_new);
+    }
+    e
+}
+
+/// Build the cascade plan for f on an operator rescaled by 1/kappa:
+/// the stage approximates g(x) = f(kappa·x)^{1/b} on [-1, 1].
+/// Indicators transport exactly (closed form); general f is fit by
+/// quadrature on the transported closure.
+pub fn plan_scaled(f: &SpectralFn, kappa: f64, order: usize, b: usize, basis: Basis) -> CascadePlan {
+    debug_assert!(kappa > 0.0);
+    if (kappa - 1.0).abs() < 1e-15 {
+        return cascade::plan(f, order, b, basis);
+    }
+    // Exact transport for indicators.
+    let transported = match f {
+        SpectralFn::Step { c } => Some(SpectralFn::Step { c: c / kappa }),
+        SpectralFn::Band { a, b: hi } => Some(SpectralFn::Band { a: a / kappa, b: hi / kappa }),
+        _ => None,
+    };
+    if let Some(t) = transported {
+        return cascade::plan(&t, order, b, basis);
+    }
+    let stage_order = (order / b).max(1);
+    let g = |x: f64| crate::poly::cascade::nth_root_nonneg(f.eval(kappa * x).max(0.0), b);
+    let stage = match basis {
+        Basis::Legendre => legendre::fit(g, stage_order, 512),
+        Basis::Chebyshev => chebyshev::fit(g, stage_order, 8192),
+    };
+    CascadePlan { stage, b }
+}
+
+/// Series for the §3.5 odd extension f'(x) = f(x)I(x≥0) − f(−x)I(x<0) on
+/// the 1/kappa-rescaled spectrum. Step/Band get exact coefficients as a
+/// difference of indicators; general f is fit by quadrature.
+pub fn odd_extension_series(f: &SpectralFn, kappa: f64, order: usize, basis: Basis) -> Series {
+    match (f, basis) {
+        (SpectralFn::Step { c }, Basis::Legendre) => {
+            let c = (c / kappa).max(0.0);
+            let pos = legendre::indicator_coeffs(order, c, 1.0);
+            let neg = legendre::indicator_coeffs(order, -1.0, -c);
+            Series {
+                basis,
+                coeffs: pos.coeffs.iter().zip(&neg.coeffs).map(|(p, n)| p - n).collect(),
+            }
+        }
+        (SpectralFn::Band { a, b: hi }, Basis::Legendre) => {
+            let (a, hi) = ((a / kappa).max(0.0), (hi / kappa).max(0.0));
+            let pos = legendre::indicator_coeffs(order, a, hi);
+            let neg = legendre::indicator_coeffs(order, -hi, -a);
+            Series {
+                basis,
+                coeffs: pos.coeffs.iter().zip(&neg.coeffs).map(|(p, n)| p - n).collect(),
+            }
+        }
+        _ => {
+            let g = |x: f64| {
+                if x >= 0.0 {
+                    f.eval(kappa * x)
+                } else {
+                    -f.eval(-kappa * x)
+                }
+            };
+            match basis {
+                Basis::Legendre => legendre::fit(g, order, 512),
+                Basis::Chebyshev => chebyshev::fit(g, order, 8192),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::op::DenseOp;
+    use crate::linalg::eigh::jacobi_eigh;
+    use crate::sparse::coo::Coo;
+    use crate::testing::prop::{check, forall};
+
+    /// Dense oracle: E' = f̃(S) Ω via eigendecomposition of S.
+    fn oracle(s: &Mat, omega: &Mat, eval: impl Fn(f64) -> f64) -> Mat {
+        let (lam, v) = jacobi_eigh(s);
+        let mut vt_o = v.tmatmul(omega);
+        for (i, &l) in lam.iter().enumerate() {
+            let fl = eval(l);
+            for j in 0..vt_o.cols {
+                vt_o[(i, j)] *= fl;
+            }
+        }
+        v.matmul(&vt_o)
+    }
+
+    fn random_sym(rng: &mut Rng, n: usize) -> Mat {
+        let mut a = Mat::randn(rng, n, n);
+        for i in 0..n {
+            for j in 0..i {
+                let v = (a[(i, j)] + a[(j, i)]) / 2.0;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let (lam, _) = jacobi_eigh(&a);
+        let norm = lam.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-9);
+        a.scale(1.0 / norm);
+        a
+    }
+
+    #[test]
+    fn apply_series_matches_matrix_polynomial_oracle() {
+        forall(
+            141,
+            8,
+            |r| {
+                let n = 4 + r.below(8);
+                (random_sym(r, n), Mat::randn(r, n, 5))
+            },
+            |(s, omega)| {
+                // A smooth function fit to low order: recursion output must
+                // equal the eigen-space evaluation of the same polynomial.
+                let series = legendre::fit(|x| (1.5 * x).exp(), 10, 64);
+                let mut mv = 0;
+                let got = apply_series(&DenseOp(s.clone()), &series, omega, &mut mv);
+                let want = oracle(s, omega, |x| series.eval(x));
+                check(mv == 10 * omega.cols, format!("matvec count {mv}"))?;
+                check(
+                    got.max_abs_diff(&want) < 1e-9,
+                    format!("recursion vs oracle: {}", got.max_abs_diff(&want)),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn apply_series_chebyshev_basis_agrees_too() {
+        let mut rng = Rng::new(142);
+        let s = random_sym(&mut rng, 9);
+        let omega = Mat::randn(&mut rng, 9, 4);
+        let series = chebyshev::fit(|x| 0.5 + x * x, 6, 512);
+        let mut mv = 0;
+        let got = apply_series(&DenseOp(s.clone()), &series, &omega, &mut mv);
+        let want = oracle(&s, &omega, |x| series.eval(x));
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn order_zero_and_one() {
+        let mut rng = Rng::new(143);
+        let s = random_sym(&mut rng, 6);
+        let omega = Mat::randn(&mut rng, 6, 3);
+        let mut mv = 0;
+        let s0 = Series { basis: Basis::Legendre, coeffs: vec![2.0] };
+        let e0 = apply_series(&DenseOp(s.clone()), &s0, &omega, &mut mv);
+        let mut want0 = omega.clone();
+        want0.scale(2.0);
+        assert!(e0.max_abs_diff(&want0) < 1e-14);
+        assert_eq!(mv, 0);
+
+        let s1 = Series { basis: Basis::Legendre, coeffs: vec![0.5, -1.0] };
+        let e1 = apply_series(&DenseOp(s.clone()), &s1, &omega, &mut mv);
+        let mut want1 = omega.clone();
+        want1.scale(0.5);
+        want1.axpy(-1.0, &s.matmul(&omega));
+        assert!(e1.max_abs_diff(&want1) < 1e-12);
+        assert_eq!(mv, 3); // one block application of 3 columns
+    }
+
+    #[test]
+    fn embed_approximates_exact_spectral_embedding_distances() {
+        // End-to-end Theorem 1 check on a small dense matrix with a clean
+        // spectral gap: pairwise distances of Ẽ ≈ those of E within
+        // JL ± polynomial distortion.
+        let mut rng = Rng::new(144);
+        let n = 24;
+        // Matrix with 4 eigenvalues near 1, rest spread in [-0.4, 0.4].
+        let q = {
+            let mut m = Mat::randn(&mut rng, n, n);
+            crate::linalg::qr::mgs_orthonormalize(&mut m, 1e-12);
+            m
+        };
+        let mut lam = vec![0.0; n];
+        for (i, l) in lam.iter_mut().enumerate() {
+            *l = if i < 4 { 0.96 + 0.01 * i as f64 } else { -0.4 + 0.8 * (i as f64 / n as f64) };
+        }
+        let mut s = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                let mut acc = 0.0;
+                for t in 0..n {
+                    acc += q[(r, t)] * lam[t] * q[(c, t)];
+                }
+                s[(r, c)] = acc;
+            }
+        }
+        let f = SpectralFn::Step { c: 0.9 };
+        let fe = FastEmbed::new(Params { d: 96, order: 80, cascade: 2, ..Params::default() });
+        let emb = fe.embed(&DenseOp(s.clone()), &f, &mut rng);
+        assert_eq!(emb.matvecs, 80 * 96); // L column-chains of d = 96
+        // Exact embedding distances = distances between rows of f(S).
+        let exact = oracle(&s, &Mat::eye(n), |x| f.eval(x));
+        let mut worst: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..i {
+                let de = exact.row_dist(i, &exact, j);
+                let dg = emb.e.row_dist(i, &emb.e, j);
+                worst = worst.max((dg - de).abs());
+            }
+        }
+        // Additive distortion delta*sqrt(2) + JL eps; generous bound.
+        assert!(worst < 0.35, "worst distance deviation {worst}");
+    }
+
+    #[test]
+    fn norm_estimation_rescales_unnormalized_operators() {
+        // Same matrix scaled by 10 with threshold scaled by 10 must give
+        // (nearly) the same embedding when norm_est is enabled.
+        let mut rng = Rng::new(145);
+        let s = random_sym(&mut rng, 12);
+        let omega = rademacher_omega(&mut rng, 12, 32);
+        let f1 = SpectralFn::Step { c: 0.5 };
+        let fe_plain = FastEmbed::new(Params { d: 32, order: 40, cascade: 1, ..Params::default() });
+        let e1 = fe_plain.embed_with_omega(&DenseOp(s.clone()), &f1, omega.clone(), &mut rng);
+
+        let mut s10 = s.clone();
+        s10.scale(10.0);
+        let f10 = SpectralFn::Step { c: 5.0 };
+        let fe_est = FastEmbed::new(Params {
+            d: 32,
+            order: 40,
+            cascade: 1,
+            norm_est: Some(NormEstParams { iters: 60, ..Default::default() }),
+            ..Params::default()
+        });
+        let e10 = fe_est.embed_with_omega(&DenseOp(s10), &f10, omega, &mut rng);
+        assert!((e10.norm_estimate / 10.0 - 1.0).abs() < 0.02);
+        // Threshold in rescaled units differs by ~1% (norm safety factor);
+        // embeddings agree closely since the spectrum has a gap at 0.5.
+        assert!(
+            e1.e.max_abs_diff(&e10.e) < 0.2,
+            "rescale mismatch {}",
+            e1.e.max_abs_diff(&e10.e)
+        );
+    }
+
+    #[test]
+    fn general_matrix_embedding_matches_svd_oracle() {
+        // Rectangular A: check row/col embeddings against the dense SVD
+        // computed through the dilation's eigendecomposition.
+        let mut rng = Rng::new(146);
+        let (m, n) = (10, 7);
+        let mut coo = Coo::new(m, n);
+        for _ in 0..30 {
+            coo.push(rng.below(m), rng.below(n), rng.normal() * 0.3);
+        }
+        let a = Csr::from_coo(&coo);
+        let f = SpectralFn::Step { c: 0.4 };
+        let fe = FastEmbed::new(Params {
+            d: 64,
+            order: 60,
+            cascade: 1,
+            norm_est: Some(NormEstParams { iters: 60, ..Default::default() }),
+            ..Params::default()
+        });
+        let ge = fe.embed_general(&a, &f, &mut rng);
+        assert_eq!(ge.rows.rows, m);
+        assert_eq!(ge.cols.rows, n);
+        // Oracle: f'(S/kappa) with S the dilation.
+        let s = graph::dilation(&a).to_dense();
+        let kappa = ge.norm_estimate;
+        let mut s_scaled = s.clone();
+        s_scaled.scale(1.0 / kappa);
+        let fo = |x: f64| {
+            if x >= 0.0 {
+                f.eval(kappa * x)
+            } else {
+                -f.eval(-kappa * x)
+            }
+        };
+        let exact = oracle(&s_scaled, &Mat::eye(m + n), fo);
+        // Distances between rows of A's row-embedding vs oracle's last m rows.
+        let mut worst: f64 = 0.0;
+        for i in 0..m {
+            for j in 0..i {
+                let de = exact.row_dist(n + i, &exact, n + j);
+                let dg = ge.rows.row_dist(i, &ge.rows, j);
+                worst = worst.max((dg - de).abs());
+            }
+        }
+        assert!(worst < 0.4, "general embed worst deviation {worst}");
+    }
+
+    #[test]
+    fn plan_scaled_transports_step_threshold() {
+        let p = plan_scaled(&SpectralFn::Step { c: 0.8 }, 2.0, 40, 2, Basis::Legendre);
+        // Stage approximates I(x >= 0.4) on [-1, 1].
+        assert!((p.stage.eval(0.9) - 1.0).abs() < 0.1);
+        assert!(p.stage.eval(0.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn odd_extension_series_is_odd() {
+        let s = odd_extension_series(&SpectralFn::Step { c: 0.5 }, 1.0, 60, Basis::Legendre);
+        for &x in &[0.1, 0.3, 0.7, 0.95] {
+            assert!(
+                (s.eval(x) + s.eval(-x)).abs() < 1e-10,
+                "not odd at {x}: {} vs {}",
+                s.eval(x),
+                s.eval(-x)
+            );
+        }
+        assert!((s.eval(0.8) - 1.0).abs() < 0.1);
+        assert!((s.eval(-0.8) + 1.0).abs() < 0.1);
+    }
+}

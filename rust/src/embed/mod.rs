@@ -1,0 +1,20 @@
+//! The paper's algorithm: compressive spectral embedding (FastEmbed).
+//!
+//! * [`omega`] — JL random-projection blocks Ω (±1/√d entries) and the
+//!   JL dimension bound of §3.1.
+//! * [`op`] — the [`op::Operator`] abstraction the recursion iterates:
+//!   native CSR, dense, affine-rescaled wrappers; the PJRT tile operator
+//!   lives in `crate::runtime` and plugs in through the same trait.
+//! * [`norm`] — §4 spectral-norm estimation (power iteration).
+//! * [`fastembed`] — Algorithm 1 + §3.5 general-matrix embedding + §4
+//!   cascading, over any operator.
+//! * [`density`] — KPM eigenvalue counting / spectral density with the
+//!   same recursion (refs [25][26]); SVD-free threshold selection.
+
+pub mod density;
+pub mod fastembed;
+pub mod norm;
+pub mod omega;
+pub mod op;
+
+pub use fastembed::{Embedding, FastEmbed, GeneralEmbedding, Params};

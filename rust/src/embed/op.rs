@@ -1,0 +1,169 @@
+//! The operator abstraction iterated by the recursion.
+//!
+//! FastEmbed only ever touches the matrix through block products `S·Q`
+//! (paper's key structural property), so the driver is generic over
+//! [`Operator`]. Implementations here: CSR (the scalable native path),
+//! dense (oracles/tests), and an affine wrapper for §3.4 spectrum
+//! rescaling. `crate::runtime::PjrtOp` adds the AOT/PJRT tile path.
+
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+
+/// A symmetric linear operator usable by the recursion.
+pub trait Operator {
+    /// Dimension n (operator is n×n).
+    fn dim(&self) -> usize;
+
+    /// `y ← S x` for a block `x` (n×d). Must not allocate per call beyond
+    /// what the implementation needs internally.
+    fn apply_into(&self, x: &Mat, y: &mut Mat);
+
+    /// Convenience allocating form.
+    fn apply(&self, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(self.dim(), x.cols);
+        self.apply_into(x, &mut y);
+        y
+    }
+
+    /// Number of stored non-zeros (T in the paper's complexity bounds);
+    /// used for flop accounting and bench reporting.
+    fn nnz(&self) -> usize;
+}
+
+impl Operator for Csr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "operator must be square");
+        self.rows
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+        self.spmm_into(x, y);
+    }
+
+    fn nnz(&self) -> usize {
+        Csr::nnz(self)
+    }
+}
+
+/// Dense symmetric operator (tests and small oracles).
+pub struct DenseOp(pub Mat);
+
+impl Operator for DenseOp {
+    fn dim(&self) -> usize {
+        assert_eq!(self.0.rows, self.0.cols);
+        self.0.rows
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+        let out = self.0.matmul(x);
+        y.data.copy_from_slice(&out.data);
+    }
+
+    fn nnz(&self) -> usize {
+        self.0.rows * self.0.cols
+    }
+}
+
+/// Affine spectrum rescale `S' = alpha·S + beta·I` (paper §3.4) without
+/// materializing a second matrix.
+pub struct ScaledOp<'a, O: Operator + ?Sized> {
+    pub inner: &'a O,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl<'a, O: Operator + ?Sized> ScaledOp<'a, O> {
+    pub fn new(inner: &'a O, alpha: f64, beta: f64) -> Self {
+        ScaledOp { inner, alpha, beta }
+    }
+}
+
+impl<O: Operator + ?Sized> Operator for ScaledOp<'_, O> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+        self.inner.apply_into(x, y);
+        if self.alpha != 1.0 {
+            y.scale(self.alpha);
+        }
+        if self.beta != 0.0 {
+            y.axpy(self.beta, x);
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.nnz() + self.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::testing::prop::{all_close, forall};
+    use crate::util::rng::Rng;
+
+    fn random_sym_csr(rng: &mut Rng, n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..2 * n {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            coo.push_sym(i.min(j), i.max(j), rng.normal());
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn csr_and_dense_ops_agree() {
+        forall(
+            121,
+            16,
+            |r| {
+                let n = 3 + r.below(10);
+                (random_sym_csr(r, n), Mat::randn(r, n, 4))
+            },
+            |(a, x)| {
+                let dense = DenseOp(a.to_dense());
+                all_close(&Operator::apply(a, x).data, &dense.apply(x).data, 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn scaled_op_is_affine() {
+        forall(
+            122,
+            16,
+            |r| {
+                let n = 3 + r.below(8);
+                (
+                    random_sym_csr(r, n),
+                    Mat::randn(r, n, 3),
+                    r.uniform(-2.0, 2.0),
+                    r.uniform(-2.0, 2.0),
+                )
+            },
+            |(a, x, alpha, beta)| {
+                let s = ScaledOp::new(a, *alpha, *beta);
+                let got = s.apply(x);
+                let mut want = Operator::apply(a, x);
+                want.scale(*alpha);
+                want.axpy(*beta, x);
+                all_close(&got.data, &want.data, 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn scaled_identity_coefficients() {
+        let a = Csr::eye(5);
+        let s = ScaledOp::new(&a, 2.0, -0.5);
+        let x = Mat::eye(5);
+        let y = s.apply(&x);
+        for i in 0..5 {
+            assert!((y[(i, i)] - 1.5).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Spectral weighing functions f(λ) and spectrum rescaling.
+//!
+//! The embedding is `E = [f(λ₁)v₁ … f(λₙ)vₙ]`; the paper's examples:
+//! * `f(x) = x`                      — PCA / plain spectral projection,
+//! * `f(x) = I(x ≥ c)`               — rank-selection used for graph cuts
+//!                                     and in both paper experiments,
+//! * `f(x) = 1`                      — unit weighting on a band,
+//! * `f(x) = 1/sqrt(1-x)`            — commute-time embedding,
+//! * `f(x) = I(x ≥ c)/sqrt(1-x)`     — commute time with small-eigenvector
+//!                                     suppression (§2's flexibility note).
+
+use crate::poly::cascade::nth_root_nonneg;
+
+/// A spectral weighing function over λ ∈ [-1, 1].
+#[derive(Clone, Debug)]
+pub enum SpectralFn {
+    /// f(x) = I(x ≥ c) — keep the eigenspace above threshold `c`.
+    Step { c: f64 },
+    /// f(x) = I(a ≤ x ≤ b) — band indicator (eigenvalue-count estimation,
+    /// [25][26]-style filters).
+    Band { a: f64, b: f64 },
+    /// f(x) = x — PCA weighting.
+    Pca,
+    /// f(x) = |x| — PCA magnitude weighting (sign-free, §3.5 dilations).
+    AbsPca,
+    /// f(x) = I(x ≥ c) / sqrt(1 - x), clamped at `1 - eps` — regularized
+    /// commute-time embedding with small-eigenvector suppression.
+    CommuteTime { c: f64, eps: f64 },
+    /// f(x) = exp(t (x - 1)) — diffusion/heat-kernel embedding at time t.
+    Diffusion { t: f64 },
+}
+
+impl SpectralFn {
+    /// Point evaluation.
+    pub fn eval(&self, x: f64) -> f64 {
+        match *self {
+            SpectralFn::Step { c } => {
+                if x >= c {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            SpectralFn::Band { a, b } => {
+                if x >= a && x <= b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            SpectralFn::Pca => x,
+            SpectralFn::AbsPca => x.abs(),
+            SpectralFn::CommuteTime { c, eps } => {
+                if x >= c {
+                    1.0 / (1.0 - x).max(eps).sqrt()
+                } else {
+                    0.0
+                }
+            }
+            SpectralFn::Diffusion { t } => (t * (x - 1.0)).exp(),
+        }
+    }
+
+    /// The cascade stage function g with g^b = f (paper §4): evaluate
+    /// f^{1/b}. All our f are non-negative, so the real root is safe.
+    pub fn eval_root(&self, x: f64, b: usize) -> f64 {
+        nth_root_nonneg(self.eval(x).max(0.0), b)
+    }
+
+    /// Whether f is a {0,1} indicator (closed-form Legendre coefficients
+    /// are available and cascading is exact: f^{1/b} = f).
+    pub fn is_indicator(&self) -> bool {
+        matches!(self, SpectralFn::Step { .. } | SpectralFn::Band { .. })
+    }
+
+    /// The odd extension used to embed general matrices through the
+    /// dilation S = [[0, Aᵀ],[A, 0]] (paper §3.5):
+    /// f'(x) = f(x) I(x ≥ 0) − f(−x) I(x < 0).
+    pub fn dilated(&self) -> DilatedFn<'_> {
+        DilatedFn { inner: self }
+    }
+}
+
+/// View of a [`SpectralFn`] through the §3.5 odd extension.
+pub struct DilatedFn<'a> {
+    inner: &'a SpectralFn,
+}
+
+impl DilatedFn<'_> {
+    pub fn eval(&self, x: f64) -> f64 {
+        if x >= 0.0 {
+            self.inner.eval(x)
+        } else {
+            -self.inner.eval(-x)
+        }
+    }
+}
+
+/// Affine spectrum rescaling (paper §3.4): given bounds
+/// `sigma_min <= λ <= sigma_max`, maps the operator `S` to
+/// `S' = 2S/(σmax−σmin) − (σmax+σmin)/(σmax−σmin) I` with spectrum in
+/// [-1, 1], and transports f accordingly.
+#[derive(Clone, Copy, Debug)]
+pub struct Rescale {
+    pub sigma_min: f64,
+    pub sigma_max: f64,
+}
+
+impl Rescale {
+    pub fn new(sigma_min: f64, sigma_max: f64) -> Self {
+        assert!(sigma_max > sigma_min, "need sigma_max > sigma_min");
+        Rescale { sigma_min, sigma_max }
+    }
+
+    /// Identity rescale for operators already in [-1, 1].
+    pub fn unit() -> Self {
+        Rescale { sigma_min: -1.0, sigma_max: 1.0 }
+    }
+
+    /// Coefficients (alpha, beta) of S' = alpha S + beta I.
+    pub fn operator_coeffs(&self) -> (f64, f64) {
+        let span = self.sigma_max - self.sigma_min;
+        (2.0 / span, -(self.sigma_max + self.sigma_min) / span)
+    }
+
+    /// Map a rescaled eigenvalue x ∈ [-1,1] back to the original λ.
+    pub fn to_original(&self, x: f64) -> f64 {
+        let span = self.sigma_max - self.sigma_min;
+        x * span / 2.0 + (self.sigma_max + self.sigma_min) / 2.0
+    }
+
+    /// Map an original eigenvalue λ to the rescaled x.
+    pub fn to_unit(&self, lam: f64) -> f64 {
+        let (a, b) = self.operator_coeffs();
+        a * lam + b
+    }
+
+    /// Transport f: f'(x) = f(λ(x)).
+    pub fn transport<'a>(&'a self, f: &'a SpectralFn) -> impl Fn(f64) -> f64 + 'a {
+        move |x| f.eval(self.to_original(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, close, forall};
+
+    #[test]
+    fn step_and_band() {
+        let f = SpectralFn::Step { c: 0.5 };
+        assert_eq!(f.eval(0.6), 1.0);
+        assert_eq!(f.eval(0.5), 1.0);
+        assert_eq!(f.eval(0.49), 0.0);
+        let g = SpectralFn::Band { a: -0.2, b: 0.2 };
+        assert_eq!(g.eval(0.0), 1.0);
+        assert_eq!(g.eval(0.3), 0.0);
+        assert!(f.is_indicator() && g.is_indicator());
+        assert!(!SpectralFn::Pca.is_indicator());
+    }
+
+    #[test]
+    fn commute_time_regularized() {
+        let f = SpectralFn::CommuteTime { c: 0.0, eps: 0.01 };
+        assert!((f.eval(0.0) - 1.0).abs() < 1e-12);
+        // Clamped near 1:
+        assert!((f.eval(0.9999) - 10.0).abs() < 1e-9);
+        assert_eq!(f.eval(-0.5), 0.0);
+    }
+
+    #[test]
+    fn root_recomposes() {
+        forall(
+            71,
+            64,
+            |r| (r.uniform(-1.0, 1.0), 1 + r.below(4)),
+            |&(x, b)| {
+                let f = SpectralFn::Diffusion { t: 2.0 };
+                let root = f.eval_root(x, b);
+                close(root.powi(b as i32), f.eval(x), 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn indicator_root_is_itself() {
+        let f = SpectralFn::Step { c: 0.3 };
+        for &x in &[-0.5, 0.2, 0.31, 0.9] {
+            assert_eq!(f.eval_root(x, 3), f.eval(x));
+        }
+    }
+
+    #[test]
+    fn dilated_is_odd_extension() {
+        let f = SpectralFn::Step { c: 0.5 };
+        let d = f.dilated();
+        assert_eq!(d.eval(0.7), 1.0);
+        assert_eq!(d.eval(-0.7), -1.0);
+        assert_eq!(d.eval(0.2), 0.0);
+        assert_eq!(d.eval(-0.2), 0.0);
+    }
+
+    #[test]
+    fn rescale_roundtrip() {
+        forall(
+            72,
+            64,
+            |r| {
+                let lo = r.uniform(-5.0, 0.0);
+                let hi = lo + r.uniform(0.5, 10.0);
+                (lo, hi, r.uniform(lo, hi))
+            },
+            |&(lo, hi, lam)| {
+                let rs = Rescale::new(lo, hi);
+                let x = rs.to_unit(lam);
+                check(x >= -1.0 - 1e-9 && x <= 1.0 + 1e-9, format!("x={x} outside"))?;
+                close(rs.to_original(x), lam, 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn rescale_operator_coeffs_map_endpoints() {
+        let rs = Rescale::new(2.0, 6.0);
+        let (a, b) = rs.operator_coeffs();
+        assert!((a * 2.0 + b + 1.0).abs() < 1e-12); // sigma_min -> -1
+        assert!((a * 6.0 + b - 1.0).abs() < 1e-12); // sigma_max -> +1
+    }
+
+    #[test]
+    fn transport_matches_composition() {
+        let rs = Rescale::new(0.0, 4.0);
+        let f = SpectralFn::Step { c: 3.0 };
+        let ft = rs.transport(&f);
+        assert_eq!(ft(rs.to_unit(3.5)), 1.0);
+        assert_eq!(ft(rs.to_unit(2.9)), 0.0);
+    }
+}

@@ -1,0 +1,47 @@
+//! # cse — Compressive Spectral Embedding
+//!
+//! A production-grade reproduction of *"Compressive spectral embedding:
+//! sidestepping the SVD"* (Ramasamy & Madhow, NIPS 2015): compute an
+//! `O(log n)`-dimensional embedding that approximates pairwise ℓ₂
+//! geometry of the SVD-based spectral embedding
+//! `E = [f(λ₁)v₁ … f(λₙ)vₙ]` — in time `O((T + n) log n)`, independent of
+//! how many singular vectors the weighing function `f` touches.
+//!
+//! ## Layers
+//! * **Rust (this crate)** — the scalable runtime: sparse operators,
+//!   the FastEmbed driver, eigensolver baselines, K-means/modularity,
+//!   the column-shard coordinator and the similarity-query service, and a
+//!   PJRT runtime that executes JAX/Pallas-authored HLO artifacts for
+//!   dense tiles.
+//! * **Python (`python/compile`)** — build-time only: Pallas kernels
+//!   (L1) and JAX graphs (L2), AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use cse::embed::{FastEmbed, Params};
+//! use cse::funcs::SpectralFn;
+//! use cse::sparse::{gen, graph};
+//! use cse::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let g = gen::sbm_by_degree(&mut rng, 2000, 20, 5.0, 1.0);
+//! let s = graph::normalized_adjacency(&g.adj);
+//! let params = Params { d: 48, order: 120, cascade: 2, ..Params::default() };
+//! let emb = FastEmbed::new(params).embed(&s, &SpectralFn::Step { c: 0.7 }, &mut rng);
+//! // rows of `emb.e` now approximate rows of [I(λ≥0.7)·v₁ … ] up to JL distortion
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! harness regenerating every figure/table in the paper.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod eigen;
+pub mod embed;
+pub mod funcs;
+pub mod linalg;
+pub mod poly;
+pub mod runtime;
+pub mod sparse;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,341 @@
+//! Row-major dense matrix.
+
+use crate::util::rng::Rng;
+
+/// Row-major `rows x cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal()).collect(),
+        }
+    }
+
+    /// Rademacher ±1/sqrt(cols') JL projection block is built in
+    /// `crate::embed::omega`; this is plain ±1.
+    pub fn rademacher(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.rademacher()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other`, blocked i-k-j loop order (cache friendly row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    orow[j] += aik * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn tmatmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "tmatmul shape mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    orow[j] += aki * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// `self += s * other`.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum::<f64>().sqrt()
+    }
+
+    pub fn row_norm(&self, i: usize) -> f64 {
+        self.row(i).iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Dot product of rows i and j.
+    pub fn row_dot(&self, i: usize, j: usize) -> f64 {
+        self.row(i).iter().zip(self.row(j)).map(|(a, b)| a * b).sum()
+    }
+
+    /// Euclidean distance between rows of two (possibly different) matrices.
+    pub fn row_dist(&self, i: usize, other: &Mat, j: usize) -> f64 {
+        assert_eq!(self.cols, other.cols);
+        self.row(i)
+            .iter()
+            .zip(other.row(j))
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Normalized correlation between rows i, j (0 when either is ~0).
+    pub fn row_corr(&self, i: usize, j: usize) -> f64 {
+        let ni = self.row_norm(i);
+        let nj = self.row_norm(j);
+        if ni < 1e-300 || nj < 1e-300 {
+            return 0.0;
+        }
+        self.row_dot(i, j) / (ni * nj)
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Take a subset of columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Symmetric check (tests).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in 0..i {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{all_close, check, forall};
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(&mut rng, 7, 5);
+        let c = a.matmul(&Mat::eye(5));
+        assert!(a.max_abs_diff(&c) < 1e-14);
+    }
+
+    #[test]
+    fn tmatmul_matches_explicit_transpose() {
+        forall(
+            2,
+            16,
+            |r| (Mat::randn(r, 6, 4), Mat::randn(r, 6, 3)),
+            |(a, b)| {
+                let got = a.tmatmul(b);
+                let want = a.transpose().matmul(b);
+                all_close(&got.data, &want.data, 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(&mut rng, 5, 8);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(&mut rng, 3, 3);
+        let b = Mat::randn(&mut rng, 3, 3);
+        let mut c = a.clone();
+        c.axpy(-1.0, &b);
+        assert!(c.max_abs_diff(&a.sub(&b)) < 1e-15);
+    }
+
+    #[test]
+    fn row_corr_properties() {
+        forall(
+            5,
+            32,
+            |r| Mat::randn(r, 4, 6),
+            |m| {
+                for i in 0..4 {
+                    check(
+                        (m.row_corr(i, i) - 1.0).abs() < 1e-12,
+                        format!("self-corr row {i}"),
+                    )?;
+                    for j in 0..4 {
+                        let c = m.row_corr(i, j);
+                        check(c.abs() <= 1.0 + 1e-12, format!("|corr| <= 1, got {c}"))?;
+                        check(
+                            (c - m.row_corr(j, i)).abs() < 1e-12,
+                            "corr symmetric",
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn row_corr_zero_row_is_zero() {
+        let m = Mat::from_rows(&[&[0.0, 0.0], &[1.0, 2.0]]);
+        assert_eq!(m.row_corr(0, 1), 0.0);
+    }
+
+    #[test]
+    fn row_dist_matches_norm_of_diff() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 2.0]]);
+        let b = Mat::from_rows(&[&[0.0, 0.0, 0.0]]);
+        assert!((a.row_dist(0, &b, 0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn take_cols_prefix() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = a.take_cols(2);
+        assert_eq!(b.data, vec![1.0, 2.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,282 @@
+//! Symmetric eigendecomposition.
+//!
+//! Two solvers:
+//! * [`jacobi_eigh`] — cyclic Jacobi for small dense symmetric matrices
+//!   (oracles, RSVD cores). Robust, O(n^3) with a modest constant.
+//! * [`tridiag_eigh`] — implicit-shift QL for symmetric tridiagonal
+//!   matrices (the Lanczos inner solve); classic `tql2` algorithm.
+
+use super::dense::Mat;
+
+/// Cyclic Jacobi. Returns `(eigenvalues, eigenvectors)` with eigenvalues
+/// sorted **descending** and eigenvectors as the *columns* of the returned
+/// matrix (column i pairs with eigenvalue i).
+pub fn jacobi_eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate rotations.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut lam: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // Sort descending, permuting eigenvector columns alongside.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| lam[j].partial_cmp(&lam[i]).unwrap());
+    let sorted_lam: Vec<f64> = order.iter().map(|&i| lam[i]).collect();
+    let mut sorted_v = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        let col = v.col(oldj);
+        sorted_v.set_col(newj, &col);
+    }
+    lam = sorted_lam;
+    (lam, sorted_v)
+}
+
+/// Implicit-shift QL for a symmetric tridiagonal matrix given by its
+/// diagonal `d` (length n) and sub-diagonal `e` (length n-1).
+/// Returns `(eigenvalues desc, eigenvectors as columns)`.
+pub fn tridiag_eigh(diag: &[f64], sub: &[f64]) -> (Vec<f64>, Mat) {
+    let n = diag.len();
+    assert_eq!(sub.len(), n.saturating_sub(1));
+    if n == 0 {
+        return (Vec::new(), Mat::zeros(0, 0));
+    }
+    let mut d = diag.to_vec();
+    let mut e = vec![0.0; n];
+    e[..n - 1].copy_from_slice(sub);
+    let mut z = Mat::eye(n);
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal to split.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 100, "tridiag_eigh failed to converge");
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = (g * g + 1.0).sqrt();
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = (f * f + g * g).sqrt();
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let lam: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut v = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        let col = z.col(oldj);
+        v.set_col(newj, &col);
+    }
+    (lam, v)
+}
+
+/// Spectral norm of a small dense symmetric matrix (max |eigenvalue|).
+pub fn dense_spectral_norm(a: &Mat) -> f64 {
+    let (lam, _) = jacobi_eigh(a);
+    lam.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen::sym_contraction;
+    use crate::testing::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    fn reconstruct(lam: &[f64], v: &Mat) -> Mat {
+        // V diag(lam) V^T
+        let n = v.rows;
+        let mut vd = v.clone();
+        for j in 0..lam.len() {
+            for i in 0..n {
+                vd[(i, j)] *= lam[j];
+            }
+        }
+        vd.matmul(&v.transpose())
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (lam, v) = jacobi_eigh(&a);
+        assert!((lam[0] - 3.0).abs() < 1e-12);
+        assert!((lam[1] - 1.0).abs() < 1e-12);
+        assert!(reconstruct(&lam, &v).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_reconstruction_property() {
+        forall(
+            21,
+            10,
+            |r| {
+                let n = 2 + r.below(9);
+                let data = sym_contraction(r, n);
+                Mat::from_vec(n, n, data)
+            },
+            |a| {
+                let (lam, v) = jacobi_eigh(a);
+                let rec = reconstruct(&lam, &v);
+                check(rec.max_abs_diff(a) < 1e-10, format!("err {}", rec.max_abs_diff(a)))?;
+                // Descending.
+                for w in lam.windows(2) {
+                    check(w[0] >= w[1] - 1e-12, "not sorted descending")?;
+                }
+                // Orthonormal columns.
+                let g = v.tmatmul(&v.clone());
+                for i in 0..g.rows {
+                    for j in 0..g.cols {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        check((g[(i, j)] - want).abs() < 1e-10, "V not orthonormal")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tridiag_matches_jacobi() {
+        forall(
+            22,
+            10,
+            |r| {
+                let n = 2 + r.below(12);
+                let d: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let e: Vec<f64> = (0..n - 1).map(|_| r.normal()).collect();
+                (d, e)
+            },
+            |(d, e)| {
+                let n = d.len();
+                let mut full = Mat::zeros(n, n);
+                for i in 0..n {
+                    full[(i, i)] = d[i];
+                }
+                for i in 0..n - 1 {
+                    full[(i, i + 1)] = e[i];
+                    full[(i + 1, i)] = e[i];
+                }
+                let (lam_t, v_t) = tridiag_eigh(d, e);
+                let (lam_j, _) = jacobi_eigh(&full);
+                for (a, b) in lam_t.iter().zip(&lam_j) {
+                    check((a - b).abs() < 1e-9, format!("eval mismatch {a} vs {b}"))?;
+                }
+                let rec = reconstruct(&lam_t, &v_t);
+                check(rec.max_abs_diff(&full) < 1e-9, "tridiag reconstruction")?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tridiag_diagonal_only() {
+        let (lam, _) = tridiag_eigh(&[3.0, -1.0, 2.0], &[0.0, 0.0]);
+        assert_eq!(lam, vec![3.0, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn tridiag_empty_and_single() {
+        let (lam, _) = tridiag_eigh(&[], &[]);
+        assert!(lam.is_empty());
+        let (lam, v) = tridiag_eigh(&[5.0], &[]);
+        assert_eq!(lam, vec![5.0]);
+        assert_eq!(v[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn spectral_norm_of_contraction_at_most_one() {
+        let mut rng = Rng::new(23);
+        let n = 8;
+        let a = Mat::from_vec(n, n, sym_contraction(&mut rng, n));
+        assert!(dense_spectral_norm(&a) <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK offline).
+//!
+//! [`dense::Mat`] is a row-major `f64` matrix with the operations the rest
+//! of the library needs: matmul, transpose, column ops ([`dense`]);
+//! Householder thin-QR ([`qr`]); symmetric eigendecomposition — cyclic
+//! Jacobi for dense matrices and implicit-shift QL for the tridiagonal
+//! matrices produced by Lanczos ([`eigh`]).
+//!
+//! Sizes here are "small": dense paths are used for oracles, for the
+//! (k+p)-sized cores of randomized SVD, and for PJRT tile staging. The
+//! scalable path is `crate::sparse`.
+
+pub mod dense;
+pub mod eigh;
+pub mod qr;
+
+pub use dense::Mat;

@@ -1,0 +1,199 @@
+//! Householder thin QR, plus modified Gram–Schmidt re-orthonormalization.
+//!
+//! Used by the Lanczos full-reorthogonalization step, simultaneous
+//! iteration, and randomized SVD's range finder.
+
+use super::dense::Mat;
+
+/// Thin QR of an `m x n` matrix (`m >= n`): returns `Q` (`m x n`, columns
+/// orthonormal) and `R` (`n x n`, upper triangular).
+pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin_qr needs m >= n (got {m} x {n})");
+    // Work on the transpose so columns are contiguous.
+    let mut at = a.transpose(); // n x m, row j = column j of a
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+    let mut r = Mat::zeros(n, n);
+
+    for j in 0..n {
+        // Apply previous reflectors to column j.
+        // (we apply lazily: each reflector v_k zeroes below-diagonal of col k)
+        // Column j currently holds a_j with reflectors 0..j applied.
+        // Compute Householder vector on subvector [j..m].
+        let col = at.row_mut(j);
+        let norm_x: f64 = col[j..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm_x < 1e-300 {
+            // Zero column: R entry 0, identity reflector.
+            vs.push(vec![0.0; m - j]);
+            r[(j, j)] = 0.0;
+            continue;
+        }
+        let alpha = if col[j] >= 0.0 { -norm_x } else { norm_x };
+        let mut v: Vec<f64> = col[j..].to_vec();
+        v[0] -= alpha;
+        let vnorm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if vnorm > 1e-300 {
+            for x in v.iter_mut() {
+                *x /= vnorm;
+            }
+        }
+        // Applying the reflector to column j itself gives alpha * e1 by
+        // construction — write that directly.
+        r[(j, j)] = alpha;
+        col[j] = alpha;
+        for t in col[j + 1..].iter_mut() {
+            *t = 0.0;
+        }
+        // Apply the reflector to the remaining columns and record R.
+        for jj in (j + 1)..n {
+            let cjj = at.row_mut(jj);
+            let dot: f64 = v.iter().zip(&cjj[j..]).map(|(a, b)| a * b).sum();
+            for (t, rv) in cjj[j..].iter_mut().zip(v.iter()) {
+                *t -= 2.0 * dot * rv;
+            }
+        }
+        vs.push(v);
+    }
+    // R is the upper triangle of the fully transformed columns.
+    for j in 0..n {
+        for i in 0..=j {
+            r[(i, j)] = at[(j, i)];
+        }
+    }
+
+    // Build thin Q by applying reflectors to the first n columns of I.
+    let mut qt = Mat::zeros(n, m); // row j = column j of Q
+    for j in 0..n {
+        qt[(j, j)] = 1.0;
+    }
+    for j in 0..n {
+        let ej = qt.row_mut(j);
+        // Apply H_{n-1} ... H_0 in reverse to e_j.
+        for (k, v) in vs.iter().enumerate().rev() {
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let dot: f64 = v.iter().zip(&ej[k..]).map(|(a, b)| a * b).sum();
+            for (t, rv) in ej[k..].iter_mut().zip(v.iter()) {
+                *t -= 2.0 * dot * rv;
+            }
+        }
+    }
+    (qt.transpose(), r)
+}
+
+/// Orthonormalize the columns of `a` in place via two rounds of modified
+/// Gram–Schmidt (twice-is-enough). Returns the rank found (columns with
+/// norm below `tol` are zeroed and not counted).
+pub fn mgs_orthonormalize(a: &mut Mat, tol: f64) -> usize {
+    let n = a.cols;
+    let mut rank = 0;
+    for _round in 0..2 {
+        rank = 0;
+        for j in 0..n {
+            let mut col = a.col(j);
+            for k in 0..j {
+                let ck = a.col(k);
+                let dot: f64 = col.iter().zip(&ck).map(|(x, y)| x * y).sum();
+                for (x, y) in col.iter_mut().zip(&ck) {
+                    *x -= dot * y;
+                }
+            }
+            let norm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > tol {
+                for x in col.iter_mut() {
+                    *x /= norm;
+                }
+                rank += 1;
+            } else {
+                col.iter_mut().for_each(|x| *x = 0.0);
+            }
+            a.set_col(j, &col);
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    fn assert_orthonormal(q: &Mat, tol: f64) {
+        let g = q.tmatmul(q);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g[(i, j)] - want).abs() < tol,
+                    "gram[{i},{j}] = {}",
+                    g[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthonormal() {
+        forall(
+            11,
+            12,
+            |r| {
+                let m = 4 + r.below(8);
+                let n = 1 + r.below(m.min(5));
+                Mat::randn(r, m, n)
+            },
+            |a| {
+                let (q, r) = thin_qr(a);
+                let qr = q.matmul(&r);
+                check(qr.max_abs_diff(a) < 1e-10, format!("A != QR, err {}", qr.max_abs_diff(a)))?;
+                let g = q.tmatmul(&q);
+                for i in 0..g.rows {
+                    for j in 0..g.cols {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        check((g[(i, j)] - want).abs() < 1e-10, "Q not orthonormal")?;
+                    }
+                }
+                // R upper triangular
+                for i in 0..r.rows {
+                    for j in 0..i {
+                        check(r[(i, j)].abs() < 1e-12, "R not upper triangular")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn qr_rank_deficient_column() {
+        let mut rng = Rng::new(12);
+        let mut a = Mat::randn(&mut rng, 6, 3);
+        // Make col 1 a copy of col 0 (rank deficiency).
+        let c0 = a.col(0);
+        a.set_col(1, &c0);
+        let (q, r) = thin_qr(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+        assert!(r[(1, 1)].abs() < 1e-10, "R[1,1] should be ~0");
+    }
+
+    #[test]
+    fn mgs_orthonormalizes_full_rank() {
+        let mut rng = Rng::new(13);
+        let mut a = Mat::randn(&mut rng, 10, 4);
+        let rank = mgs_orthonormalize(&mut a, 1e-12);
+        assert_eq!(rank, 4);
+        assert_orthonormal(&a, 1e-10);
+    }
+
+    #[test]
+    fn mgs_detects_rank_deficiency() {
+        let mut rng = Rng::new(14);
+        let mut a = Mat::randn(&mut rng, 8, 3);
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let rank = mgs_orthonormalize(&mut a, 1e-8);
+        assert_eq!(rank, 2);
+    }
+}

@@ -1,0 +1,333 @@
+//! `cse` — command-line launcher for the compressive-spectral-embedding
+//! system. Subcommands:
+//!
+//! ```text
+//! cse gen-graph  --kind sbm --n 20000 --k 200 --deg-in 5 --deg-out 1.6 --out g.txt
+//! cse embed      --graph g.txt --d 80 --order 180 --cascade 2 --out emb.tsv
+//! cse eig        --graph g.txt --solver lanczos --k 100
+//! cse cluster    --graph g.txt --kmeans-k 200 --d 80 --order 180
+//! cse serve      --graph g.txt --queries 1000 --topk 10
+//! cse artifacts  [--dir artifacts]
+//! ```
+//!
+//! Run any subcommand with `--help` for the full option list.
+
+use std::path::Path;
+
+use cse::cluster::{kmeans, modularity, KmeansParams};
+use cse::coordinator::{Coordinator, EmbedJob, QueryBatch, SimilarityService};
+use cse::coordinator::service::Query;
+use cse::eigen::lanczos::{lanczos, LanczosParams};
+use cse::eigen::rsvd::{rsvd, RsvdParams};
+use cse::eigen::simult::simultaneous_iteration;
+use cse::embed::Params;
+use cse::funcs::SpectralFn;
+use cse::poly::Basis;
+use cse::sparse::{gen, graph, io, Csr};
+use cse::util::args::{usage, Args, Opt};
+use cse::util::rng::Rng;
+use cse::util::timer::Timer;
+use cse::util::{human_bytes, human_secs};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", top_usage());
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "gen-graph" => cmd_gen_graph(argv),
+        "embed" => cmd_embed(argv),
+        "eig" => cmd_eig(argv),
+        "cluster" => cmd_cluster(argv),
+        "serve" => cmd_serve(argv),
+        "artifacts" => cmd_artifacts(argv),
+        "--help" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n{}", top_usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn top_usage() -> String {
+    "cse — compressive spectral embedding (NIPS 2015 reproduction)\n\
+     subcommands: gen-graph | embed | eig | cluster | serve | artifacts\n\
+     run `cse <subcommand> --help` for options"
+        .to_string()
+}
+
+/// Load a graph from `--graph FILE`, or generate per `--kind/--n/...`.
+fn load_or_gen(a: &Args) -> Result<(Csr, Option<Vec<usize>>), String> {
+    if let Some(path) = a.get("graph") {
+        let (adj, _) = io::read_edge_list(Path::new(path)).map_err(|e| e.to_string())?;
+        eprintln!("loaded {}: n={} nnz={}", path, adj.rows, adj.nnz());
+        return Ok((adj, None));
+    }
+    let mut rng = Rng::new(a.u64("seed", 0)?);
+    let n = a.usize("n", 20_000)?;
+    let kind = a.get_or("kind", "sbm");
+    match kind {
+        "sbm" => {
+            let k = a.usize("k", 200)?;
+            let g = gen::sbm_by_degree(
+                &mut rng,
+                n,
+                k,
+                a.f64("deg-in", 5.0)?,
+                a.f64("deg-out", 1.6)?,
+            );
+            eprintln!("generated SBM: n={n} k={k} nnz={}", g.adj.nnz());
+            Ok((g.adj, g.labels))
+        }
+        "er" => {
+            let m = a.usize("m", n * 3)?;
+            let g = gen::erdos_renyi(&mut rng, n, m);
+            Ok((g.adj, None))
+        }
+        "ba" => {
+            let m = a.usize("m", 3)?;
+            let g = gen::barabasi_albert(&mut rng, n, m);
+            Ok((g.adj, None))
+        }
+        other => Err(format!("unknown graph kind '{other}' (sbm|er|ba)")),
+    }
+}
+
+fn embed_params(a: &Args) -> Result<Params, String> {
+    Ok(Params {
+        d: a.usize("d", 0)?,
+        order: a.usize("order", 120)?,
+        cascade: a.usize("cascade", 2)?,
+        basis: match a.get_or("basis", "legendre") {
+            "legendre" => Basis::Legendre,
+            "chebyshev" => Basis::Chebyshev,
+            b => return Err(format!("unknown basis '{b}'")),
+        },
+        norm_est: None, // normalized adjacency: ||S|| <= 1 by construction
+    })
+}
+
+const COMMON_OPTS: &[Opt] = &[
+    Opt { name: "graph", help: "edge-list file (SNAP format); omit to generate", default: None },
+    Opt { name: "kind", help: "generator when no --graph: sbm|er|ba", default: Some("sbm") },
+    Opt { name: "n", help: "generated graph size", default: Some("20000") },
+    Opt { name: "k", help: "SBM community count", default: Some("200") },
+    Opt { name: "deg-in", help: "SBM within-community degree", default: Some("5.0") },
+    Opt { name: "deg-out", help: "SBM between-community degree", default: Some("1.6") },
+    Opt { name: "seed", help: "RNG seed", default: Some("0") },
+];
+
+fn cmd_gen_graph(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        println!(
+            "{}",
+            usage("cse gen-graph", "Generate a synthetic graph and write an edge list", COMMON_OPTS)
+        );
+        return Ok(());
+    }
+    let (adj, labels) = load_or_gen(&a)?;
+    let out = a.get_or("out", "graph.txt");
+    io::write_edge_list(Path::new(out), &adj, "generated by cse gen-graph")
+        .map_err(|e| e.to_string())?;
+    println!("wrote {out}: n={} edges={} ({})", adj.rows, adj.nnz() / 2, human_bytes(adj.mem_bytes()));
+    if let Some(l) = labels {
+        let lab_out = format!("{out}.labels");
+        let rows: Vec<Vec<f64>> = l.iter().map(|&x| vec![x as f64]).collect();
+        io::write_tsv(Path::new(&lab_out), &["label"], &rows).map_err(|e| e.to_string())?;
+        println!("wrote {lab_out}");
+    }
+    Ok(())
+}
+
+fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        let mut opts = COMMON_OPTS.to_vec();
+        opts.extend_from_slice(&[
+            Opt { name: "d", help: "embedding dimension (0 = 6 log n)", default: Some("0") },
+            Opt { name: "order", help: "polynomial order L (matvec budget)", default: Some("120") },
+            Opt { name: "cascade", help: "cascade factor b", default: Some("2") },
+            Opt { name: "basis", help: "legendre|chebyshev", default: Some("legendre") },
+            Opt { name: "c", help: "step threshold f = I(lambda >= c)", default: Some("0.7") },
+            Opt { name: "workers", help: "worker threads", default: Some("1") },
+            Opt { name: "shard", help: "columns per shard", default: Some("8") },
+            Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
+        ]);
+        println!("{}", usage("cse embed", "Compressive spectral embedding of a graph", &opts));
+        return Ok(());
+    }
+    let (adj, _) = load_or_gen(&a)?;
+    let na = graph::normalized_adjacency(&adj);
+    let params = embed_params(&a)?;
+    let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
+    let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
+    job.shard_width = a.usize("shard", 8)?;
+    let coord = Coordinator::new(a.usize("workers", 1)?);
+    let t = Timer::start();
+    let res = coord.run(&na, &job);
+    let secs = t.elapsed_secs();
+    println!(
+        "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards) in {}",
+        na.rows,
+        res.e.cols,
+        job.params.order,
+        res.plan.b,
+        res.matvecs,
+        res.shards,
+        human_secs(secs)
+    );
+    let out = a.get_or("out", "embedding.tsv");
+    let rows: Vec<Vec<f64>> = (0..res.e.rows).map(|i| res.e.row(i).to_vec()).collect();
+    let header: Vec<String> = (0..res.e.cols).map(|j| format!("e{j}")).collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    io::write_tsv(Path::new(out), &header_refs, &rows).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        let mut opts = COMMON_OPTS.to_vec();
+        opts.extend_from_slice(&[
+            Opt { name: "solver", help: "lanczos|rsvd|simult", default: Some("lanczos") },
+            Opt { name: "eig-k", help: "number of eigenpairs", default: Some("50") },
+        ]);
+        println!("{}", usage("cse eig", "Partial eigendecomposition baselines", &opts));
+        return Ok(());
+    }
+    let (adj, _) = load_or_gen(&a)?;
+    let na = graph::normalized_adjacency(&adj);
+    let k = a.usize("eig-k", 50)?;
+    let mut rng = Rng::new(a.u64("seed", 0)?);
+    let t = Timer::start();
+    let pe = match a.get_or("solver", "lanczos") {
+        "lanczos" => lanczos(&na, k, &LanczosParams::default(), &mut rng),
+        "rsvd" => rsvd(&na, k, &RsvdParams::default(), &mut rng),
+        "simult" => simultaneous_iteration(&na, k, 100, &mut rng),
+        s => return Err(format!("unknown solver '{s}'")),
+    };
+    println!(
+        "{} eigenpairs in {} ({} matvecs)",
+        pe.values.len(),
+        human_secs(t.elapsed_secs()),
+        pe.matvecs
+    );
+    for (i, v) in pe.values.iter().enumerate().take(10) {
+        println!("  lambda[{i}] = {v:.6}");
+    }
+    if pe.values.len() > 10 {
+        println!("  ... lambda[{}] = {:.6}", pe.values.len() - 1, pe.values.last().unwrap());
+    }
+    Ok(())
+}
+
+fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        let mut opts = COMMON_OPTS.to_vec();
+        opts.extend_from_slice(&[
+            Opt { name: "kmeans-k", help: "number of clusters K", default: Some("200") },
+            Opt { name: "d", help: "embedding dimension", default: Some("80") },
+            Opt { name: "order", help: "polynomial order", default: Some("120") },
+            Opt { name: "c", help: "step threshold", default: Some("0.7") },
+            Opt { name: "restarts", help: "k-means restarts (median reported)", default: Some("5") },
+        ]);
+        println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
+        return Ok(());
+    }
+    let (adj, labels) = load_or_gen(&a)?;
+    let na = graph::normalized_adjacency(&adj);
+    let params = Params { d: a.usize("d", 80)?, ..embed_params(&a)? };
+    let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
+    let job = EmbedJob::new(params, f, a.u64("seed", 0)?);
+    let coord = Coordinator::new(a.usize("workers", 1)?);
+    let t = Timer::start();
+    let res = coord.run(&na, &job);
+    println!("embedding: {}", human_secs(t.elapsed_secs()));
+    let kk = a.usize("kmeans-k", 200)?;
+    let restarts = a.usize("restarts", 5)?;
+    let mut rng = Rng::new(a.u64("seed", 0)? + 1);
+    let mut mods = Vec::new();
+    for r in 0..restarts {
+        let km = kmeans(&res.e, &KmeansParams { k: kk, max_iters: 30, tol: 1e-5 }, &mut rng);
+        let q = modularity(&adj, &km.assignment);
+        println!("  restart {r}: modularity = {q:.4} (cost {:.2}, {} iters)", km.cost, km.iters);
+        mods.push(q);
+        if let Some(ref l) = labels {
+            println!("    nmi vs planted = {:.4}", cse::cluster::nmi(&km.assignment, l));
+        }
+    }
+    println!("median modularity = {:.4}", cse::util::stats::median(&mods));
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        let mut opts = COMMON_OPTS.to_vec();
+        opts.extend_from_slice(&[
+            Opt { name: "queries", help: "number of random queries", default: Some("1000") },
+            Opt { name: "topk", help: "k for top-k queries", default: Some("10") },
+            Opt { name: "workers", help: "service worker threads", default: Some("2") },
+        ]);
+        println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
+        return Ok(());
+    }
+    let (adj, _) = load_or_gen(&a)?;
+    let na = graph::normalized_adjacency(&adj);
+    let job = EmbedJob::new(embed_params(&a)?, SpectralFn::Step { c: a.f64("c", 0.7)? }, a.u64("seed", 0)?);
+    let res = Coordinator::new(a.usize("workers", 2)?).run(&na, &job);
+    let service = SimilarityService::new(res.e);
+    let nq = a.usize("queries", 1000)?;
+    let topk = a.usize("topk", 10)?;
+    let mut rng = Rng::new(a.u64("seed", 0)? + 7);
+    let queries: Vec<Query> = (0..nq)
+        .map(|t| {
+            if t % 4 == 0 {
+                Query::TopK { i: rng.below(service.len()), k: topk }
+            } else {
+                Query::Corr { i: rng.below(service.len()), j: rng.below(service.len()) }
+            }
+        })
+        .collect();
+    let t = Timer::start();
+    let answers = QueryBatch::run(&service, &queries, a.usize("workers", 2)?);
+    let secs = t.elapsed_secs();
+    println!(
+        "{} queries in {} ({:.0} qps, mean latency {:.1} µs)",
+        answers.len(),
+        human_secs(secs),
+        answers.len() as f64 / secs,
+        service.metrics.mean_query_us()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(argv: Vec<String>) -> Result<(), String> {
+    let a = Args::parse(argv, &["help"])?;
+    if a.flag("help") {
+        println!("cse artifacts [--dir artifacts] — list AOT artifacts");
+        return Ok(());
+    }
+    let dir = a.get_or("dir", "artifacts");
+    let arts = cse::runtime::Artifacts::load(Path::new(dir))?;
+    println!("{} artifacts in {dir}:", arts.entries.len());
+    for e in &arts.entries {
+        let shapes: Vec<String> = e
+            .params
+            .iter()
+            .map(|s| format!("[{}]", s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")))
+            .collect();
+        println!("  {:<40} params: {}", e.name, shapes.join(" "));
+    }
+    println!("tile geometry: {:?}", arts.tile);
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! §4 "denoising by cascading": approximate `f` as `(g̃_{L/b})^b` with
+//! `g = f^{1/b}`, so the `x^b` non-linearity re-sharpens the nulls that a
+//! single order-L fit would blur.
+
+use super::Series;
+use crate::funcs::SpectralFn;
+use crate::poly::{chebyshev, legendre, Basis};
+
+/// Real b-th root for non-negative inputs (cascading stage function).
+pub fn nth_root_nonneg(v: f64, b: usize) -> f64 {
+    debug_assert!(v >= 0.0 && b >= 1);
+    match b {
+        1 => v,
+        2 => v.sqrt(),
+        _ => v.powf(1.0 / b as f64),
+    }
+}
+
+/// A cascade plan: run the stage series `b` times.
+#[derive(Clone, Debug)]
+pub struct CascadePlan {
+    /// Series approximating g = f^{1/b} at order ~L/b.
+    pub stage: Series,
+    /// Number of applications b.
+    pub b: usize,
+}
+
+impl CascadePlan {
+    /// Total matrix-vector products per starting vector (= b * stage order).
+    pub fn total_matvecs(&self) -> usize {
+        self.b * self.stage.order()
+    }
+
+    /// Effective end-to-end function value: (g̃(x))^b.
+    pub fn eval(&self, x: f64) -> f64 {
+        self.stage.eval(x).powi(self.b as i32)
+    }
+
+    /// End-to-end max deviation from f on a grid.
+    pub fn max_err(&self, f: impl Fn(f64) -> f64, grid: usize) -> f64 {
+        (0..grid)
+            .map(|i| -1.0 + 2.0 * i as f64 / (grid - 1) as f64)
+            .map(|x| (f(x) - self.eval(x)).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Build a cascade plan for `f` with total matvec budget `order` split
+/// into `b` stages (paper uses b=2 for the DBLP/Amazon experiments).
+/// Indicators use closed-form stage coefficients (f^{1/b} = f); other f
+/// are fit by quadrature on f^{1/b}.
+pub fn plan(f: &SpectralFn, order: usize, b: usize, basis: Basis) -> CascadePlan {
+    assert!(b >= 1, "cascade factor must be >= 1");
+    let stage_order = (order / b).max(1);
+    let stage = match (f, basis) {
+        (SpectralFn::Step { c }, Basis::Legendre) => legendre::step_coeffs(stage_order, *c),
+        (SpectralFn::Step { c }, Basis::Chebyshev) => chebyshev::step_coeffs(stage_order, *c),
+        (SpectralFn::Band { a, b: hi }, Basis::Legendre) => {
+            legendre::indicator_coeffs(stage_order, *a, *hi)
+        }
+        (g, Basis::Legendre) => legendre::fit(|x| g.eval_root(x, b), stage_order, 512),
+        (g, Basis::Chebyshev) => chebyshev::fit(|x| g.eval_root(x, b), stage_order, 8192),
+    };
+    CascadePlan { stage, b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, close, forall};
+
+    #[test]
+    fn nth_root_inverts_power() {
+        forall(
+            101,
+            64,
+            |r| (r.uniform(0.0, 5.0), 1 + r.below(4)),
+            |&(v, b)| close(nth_root_nonneg(v, b).powi(b as i32), v, 1e-10),
+        );
+    }
+
+    #[test]
+    fn plan_splits_budget() {
+        let f = SpectralFn::Step { c: 0.5 };
+        let p = plan(&f, 120, 2, Basis::Legendre);
+        assert_eq!(p.stage.order(), 60);
+        assert_eq!(p.total_matvecs(), 120);
+        let p1 = plan(&f, 120, 1, Basis::Legendre);
+        assert_eq!(p1.stage.order(), 120);
+    }
+
+    #[test]
+    fn cascade_improves_null_suppression_for_step() {
+        // The paper's Figure 1b effect, at function level: evaluate the
+        // end-to-end approximation of I(x >= 0.9) in the null region.
+        let f = SpectralFn::Step { c: 0.9 };
+        let null_leak = |p: &CascadePlan| -> f64 {
+            (0..800)
+                .map(|i| -1.0 + i as f64 * 1.7 / 800.0) // x in [-1, 0.7]
+                .map(|x| p.eval(x).abs())
+                .fold(0.0, f64::max)
+        };
+        let b1 = plan(&f, 80, 1, Basis::Legendre);
+        let b2 = plan(&f, 80, 2, Basis::Legendre);
+        assert!(
+            null_leak(&b2) < null_leak(&b1),
+            "b2 leak {} !< b1 leak {}",
+            null_leak(&b2),
+            null_leak(&b1)
+        );
+    }
+
+    #[test]
+    fn cascade_preserves_passband_for_step() {
+        let f = SpectralFn::Step { c: 0.8 };
+        let p = plan(&f, 120, 2, Basis::Legendre);
+        // Well inside the passband the cascade should give ~1.
+        for &x in &[0.95, 0.99] {
+            check((p.eval(x) - 1.0).abs() < 0.15, format!("passband at {x}: {}", p.eval(x)))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn smooth_function_cascade_recomposes() {
+        // f = ((x+1)/2)^2 with b=2: g = (x+1)/2 is exactly order-1.
+        let f = SpectralFn::Diffusion { t: 1.0 }; // exp(x-1): g = exp((x-1)/2)
+        let p = plan(&f, 16, 2, Basis::Legendre);
+        let err = p.max_err(|x| f.eval(x), 501);
+        assert!(err < 1e-6, "cascade err {err}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Chebyshev-series fitting — the §4 alternative prior
+//! `p(λ) ∝ 1/√(1−λ²)`, known for uniform (minimax-like) convergence.
+//! Used by ablation A1 to compare against the Legendre default.
+
+use super::{Basis, Series};
+
+/// Chebyshev basis values T(0..=order, x).
+pub fn basis(x: f64, order: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(order + 1);
+    out.push(1.0);
+    if order == 0 {
+        return out;
+    }
+    out.push(x);
+    for r in 2..=order {
+        let t = 2.0 * x * out[r - 1] - out[r - 2];
+        out.push(t);
+    }
+    out
+}
+
+/// Fit f by Chebyshev–Gauss quadrature with `npts` nodes:
+/// `a_k = (2 − δ_{k0})/N · Σ_j f(cos θ_j) cos(k θ_j)`,
+/// `θ_j = π (j + 1/2) / N`.
+pub fn fit(f: impl Fn(f64) -> f64, order: usize, npts: usize) -> Series {
+    let n = npts.max(order + 1);
+    let mut coeffs = vec![0.0; order + 1];
+    for j in 0..n {
+        let theta = std::f64::consts::PI * (j as f64 + 0.5) / n as f64;
+        let fx = f(theta.cos());
+        if fx == 0.0 {
+            continue;
+        }
+        for (k, c) in coeffs.iter_mut().enumerate() {
+            *c += fx * (k as f64 * theta).cos();
+        }
+    }
+    for (k, c) in coeffs.iter_mut().enumerate() {
+        *c *= if k == 0 { 1.0 } else { 2.0 } / n as f64;
+    }
+    Series { basis: Basis::Chebyshev, coeffs }
+}
+
+/// Exact Chebyshev coefficients for the step f = I(x ≥ c): with
+/// `θc = arccos c`, f(cos θ) = 1 on θ ∈ [0, θc], so
+/// `a_0 = θc/π`, `a_k = 2 sin(k θc)/(k π)`.
+pub fn step_coeffs(order: usize, c: f64) -> Series {
+    let c = c.clamp(-1.0, 1.0);
+    let theta_c = c.acos();
+    let mut coeffs = vec![0.0; order + 1];
+    coeffs[0] = theta_c / std::f64::consts::PI;
+    for k in 1..=order {
+        coeffs[k] = 2.0 * (k as f64 * theta_c).sin() / (k as f64 * std::f64::consts::PI);
+    }
+    Series { basis: Basis::Chebyshev, coeffs }
+}
+
+/// Jackson damping factors g_k — multiply onto step/band coefficients to
+/// suppress Gibbs oscillation (kernel-polynomial method [25]).
+pub fn jackson_damping(order: usize) -> Vec<f64> {
+    let np = order as f64 + 2.0;
+    (0..=order)
+        .map(|k| {
+            let kf = k as f64;
+            let a = (np - kf) * (std::f64::consts::PI * kf / np).cos();
+            let b = (std::f64::consts::PI / np).tan().recip() * (std::f64::consts::PI * kf / np).sin();
+            (a + b) / np
+        })
+        .collect()
+}
+
+/// Apply damping factors to a series (returns a damped copy).
+pub fn damped(s: &Series, factors: &[f64]) -> Series {
+    assert_eq!(s.coeffs.len(), factors.len());
+    Series {
+        basis: s.basis,
+        coeffs: s.coeffs.iter().zip(factors).map(|(c, g)| c * g).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{all_close, check, forall};
+
+    #[test]
+    fn basis_known_values() {
+        let x = 0.3;
+        let b = basis(x, 3);
+        assert!((b[2] - (2.0 * x * x - 1.0)).abs() < 1e-14);
+        assert!((b[3] - (4.0 * x.powi(3) - 3.0 * x)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn basis_is_cosine_of_multiples() {
+        forall(
+            91,
+            64,
+            |r| r.uniform(-1.0, 1.0),
+            |&x| {
+                let theta = x.acos();
+                for (k, t) in basis(x, 12).iter().enumerate() {
+                    check(
+                        (t - (k as f64 * theta).cos()).abs() < 1e-10,
+                        format!("T_{k}({x})"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn step_coeffs_match_quadrature() {
+        forall(
+            92,
+            10,
+            |r| (r.uniform(-0.9, 0.9), 2 + r.below(30)),
+            |&(c, order)| {
+                let exact = step_coeffs(order, c);
+                let quad = fit(|x| if x >= c { 1.0 } else { 0.0 }, order, 20_000);
+                all_close(&exact.coeffs, &quad.coeffs, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn fit_smooth_converges_fast() {
+        let f = |x: f64| x.exp();
+        let e4 = fit(f, 4, 256).max_err(f, 1001);
+        let e12 = fit(f, 12, 256).max_err(f, 1001);
+        assert!(e12 < 1e-9 && e12 < e4 * 1e-3);
+    }
+
+    #[test]
+    fn fit_reproduces_chebyshev_polynomial() {
+        let f = |x: f64| 4.0 * x.powi(3) - 3.0 * x; // T_3
+        let s = fit(f, 5, 64);
+        let mut want = vec![0.0; 6];
+        want[3] = 1.0;
+        all_close(&s.coeffs, &want, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn jackson_damping_shape() {
+        let g = jackson_damping(16);
+        assert!((g[0] - 1.0).abs() < 1e-9, "g0 = {}", g[0]);
+        // Monotone decreasing toward ~0.
+        for w in g.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+        assert!(g[16] < 0.05);
+    }
+
+    #[test]
+    fn damped_step_suppresses_overshoot() {
+        let c = 0.2;
+        let f = |x: f64| if x >= c { 1.0 } else { 0.0 };
+        let raw = step_coeffs(40, c);
+        let dam = damped(&raw, &jackson_damping(40));
+        // Gibbs overshoot: raw max error ~0.5 near jump stays, but the
+        // *plateau* oscillation away from the jump shrinks.
+        let plateau_err = |s: &Series| {
+            (0..200)
+                .map(|i| -1.0 + i as f64 * (c - 0.15 + 1.0) / 200.0)
+                .map(|x| (f(x) - s.eval(x)).abs())
+                .fold(0.0, f64::max)
+        };
+        assert!(plateau_err(&dam) < plateau_err(&raw));
+    }
+}

@@ -1,0 +1,189 @@
+//! Legendre-series fitting (the paper's Algorithm 1 coefficients).
+//!
+//! `a(r) = (r + 1/2) ∫_{-1}^{1} p(r, x) f(x) dx`, minimizing the uniform-
+//! prior L2 error Δ_L. Indicator functions get **exact** coefficients via
+//! the primitive identity `∫ p_r = (p_{r+1} − p_{r−1})/(2r+1)`; general f
+//! uses composite Gauss–Legendre quadrature.
+
+use super::{Basis, Series};
+
+/// Legendre basis values p(0..=order, x).
+pub fn basis(x: f64, order: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(order + 1);
+    out.push(1.0);
+    if order == 0 {
+        return out;
+    }
+    out.push(x);
+    for r in 2..=order {
+        let rf = r as f64;
+        let p = (2.0 - 1.0 / rf) * x * out[r - 1] - (1.0 - 1.0 / rf) * out[r - 2];
+        out.push(p);
+    }
+    out
+}
+
+/// Exact coefficients for the indicator f(x) = I(a ≤ x ≤ b), a,b ∈ [-1,1].
+pub fn indicator_coeffs(order: usize, a: f64, b: f64) -> Series {
+    let a = a.clamp(-1.0, 1.0);
+    let b = b.clamp(-1.0, 1.0);
+    let mut coeffs = vec![0.0; order + 1];
+    if b > a {
+        let pa = basis(a, order + 1);
+        let pb = basis(b, order + 1);
+        coeffs[0] = 0.5 * (b - a);
+        for r in 1..=order {
+            let prim_b = (pb[r + 1] - pb[r - 1]) / (2.0 * r as f64 + 1.0);
+            let prim_a = (pa[r + 1] - pa[r - 1]) / (2.0 * r as f64 + 1.0);
+            coeffs[r] = (r as f64 + 0.5) * (prim_b - prim_a);
+        }
+    }
+    Series { basis: Basis::Legendre, coeffs }
+}
+
+/// Exact coefficients for the step f(x) = I(x ≥ c).
+pub fn step_coeffs(order: usize, c: f64) -> Series {
+    indicator_coeffs(order, c, 1.0)
+}
+
+// 8-point Gauss–Legendre nodes/weights on [-1, 1] (Abramowitz & Stegun).
+const GL8_X: [f64; 8] = [
+    -0.960_289_856_497_536_2,
+    -0.796_666_477_413_626_7,
+    -0.525_532_409_916_329_0,
+    -0.183_434_642_495_649_8,
+    0.183_434_642_495_649_8,
+    0.525_532_409_916_329_0,
+    0.796_666_477_413_626_7,
+    0.960_289_856_497_536_2,
+];
+const GL8_W: [f64; 8] = [
+    0.101_228_536_290_376_26,
+    0.222_381_034_453_374_47,
+    0.313_706_645_877_887_3,
+    0.362_683_783_378_362_0,
+    0.362_683_783_378_362_0,
+    0.313_706_645_877_887_3,
+    0.222_381_034_453_374_47,
+    0.101_228_536_290_376_26,
+];
+
+/// Fit arbitrary f by composite 8-point Gauss quadrature over `panels`
+/// uniform panels of [-1, 1].
+pub fn fit(f: impl Fn(f64) -> f64, order: usize, panels: usize) -> Series {
+    let mut coeffs = vec![0.0; order + 1];
+    let h = 2.0 / panels as f64;
+    for p in 0..panels {
+        let lo = -1.0 + p as f64 * h;
+        let mid = lo + h / 2.0;
+        for (node, w) in GL8_X.iter().zip(GL8_W.iter()) {
+            let x = mid + node * h / 2.0;
+            let fx = f(x);
+            if fx == 0.0 {
+                continue;
+            }
+            let ps = basis(x, order);
+            let scale = w * h / 2.0 * fx;
+            for (r, pv) in ps.iter().enumerate() {
+                coeffs[r] += scale * pv;
+            }
+        }
+    }
+    for (r, c) in coeffs.iter_mut().enumerate() {
+        *c *= r as f64 + 0.5;
+    }
+    Series { basis: Basis::Legendre, coeffs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{all_close, check, forall};
+
+    #[test]
+    fn basis_first_few_polynomials() {
+        let x = 0.4;
+        let b = basis(x, 4);
+        assert!((b[0] - 1.0).abs() < 1e-15);
+        assert!((b[1] - x).abs() < 1e-15);
+        assert!((b[2] - (1.5 * x * x - 0.5)).abs() < 1e-14);
+        assert!((b[3] - (2.5 * x.powi(3) - 1.5 * x)).abs() < 1e-14);
+        assert!((b[4] - (4.375 * x.powi(4) - 3.75 * x * x + 0.375)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn basis_bounded_by_one_on_interval() {
+        forall(
+            81,
+            128,
+            |r| r.uniform(-1.0, 1.0),
+            |&x| {
+                for (r, p) in basis(x, 30).iter().enumerate() {
+                    check(p.abs() <= 1.0 + 1e-12, format!("|P_{r}({x})| = {p}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn step_coeffs_match_quadrature() {
+        forall(
+            82,
+            12,
+            |r| (r.uniform(-0.9, 0.9), 1 + r.below(25)),
+            |&(c, order)| {
+                let exact = step_coeffs(order, c);
+                let quad = fit(|x| if x >= c { 1.0 } else { 0.0 }, order, 4096);
+                all_close(&exact.coeffs, &quad.coeffs, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn full_interval_step_is_constant_one() {
+        let s = step_coeffs(12, -1.0);
+        assert!((s.coeffs[0] - 1.0).abs() < 1e-14);
+        assert!(s.coeffs[1..].iter().all(|c| c.abs() < 1e-14));
+    }
+
+    #[test]
+    fn empty_interval_is_zero() {
+        let s = indicator_coeffs(10, 0.5, 0.4);
+        assert!(s.coeffs.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn band_is_difference_of_steps() {
+        let band = indicator_coeffs(20, -0.3, 0.6);
+        let lo = step_coeffs(20, -0.3);
+        let hi = step_coeffs(20, 0.6);
+        let diff: Vec<f64> = lo.coeffs.iter().zip(&hi.coeffs).map(|(a, b)| a - b).collect();
+        all_close(&band.coeffs, &diff, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn fit_reproduces_polynomial_exactly() {
+        // f already a polynomial of degree <= order: fit must recover it.
+        let f = |x: f64| 3.0 * x * x - x + 0.5;
+        let s = fit(f, 4, 32);
+        assert!(s.max_err(f, 501) < 1e-10);
+    }
+
+    #[test]
+    fn fit_smooth_function_converges() {
+        let f = |x: f64| (2.0 * x).sin();
+        let e4 = fit(f, 4, 64).max_err(f, 1001);
+        let e12 = fit(f, 12, 64).max_err(f, 1001);
+        assert!(e12 < e4 * 1e-3, "e4={e4} e12={e12}");
+        assert!(e12 < 1e-9);
+    }
+
+    #[test]
+    fn step_series_value_at_plateaus() {
+        // Away from the jump, the truncated series approaches 0 / 1.
+        let s = step_coeffs(120, 0.2);
+        assert!((s.eval(0.8) - 1.0).abs() < 0.02);
+        assert!(s.eval(-0.6).abs() < 0.02);
+    }
+}

@@ -1,0 +1,131 @@
+//! Polynomial approximation of spectral weighing functions (paper §3.4).
+//!
+//! * [`legendre`] — the paper's choice: fit minimizing
+//!   `∫|f − f̃_L|²dx` (uniform eigenvalue prior) via Legendre series, with
+//!   **closed-form** coefficients for the step/band indicators the
+//!   experiments use.
+//! * [`chebyshev`] — the §4 alternative (`p(λ) ∝ 1/√(1−λ²)` prior),
+//!   implemented for the ablation A1.
+//! * [`cascade`] — §4 "denoising by cascading": split f into b stages of
+//!   g = f^{1/b} at order L/b.
+//!
+//! Both bases share the same three-term matrix recursion driver in
+//! `crate::embed`; a [`Series`] carries its own recursion scalars.
+
+pub mod cascade;
+pub mod chebyshev;
+pub mod legendre;
+
+/// Which orthogonal basis a series is expressed in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Basis {
+    Legendre,
+    Chebyshev,
+}
+
+/// A truncated orthogonal-polynomial series `sum_r a(r) p(r, x)`.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub basis: Basis,
+    pub coeffs: Vec<f64>,
+}
+
+impl Series {
+    pub fn order(&self) -> usize {
+        self.coeffs.len().saturating_sub(1)
+    }
+
+    /// Recursion scalars (c1(r), c2(r)) with
+    /// `p(r, x) = c1(r)·x·p(r−1, x) − c2(r)·p(r−2, x)`, r ≥ 2.
+    /// (Both bases have p(0)=1; Legendre p(1)=x, Chebyshev T(1)=x.)
+    pub fn recursion_scalars(&self, r: usize) -> (f64, f64) {
+        debug_assert!(r >= 2);
+        match self.basis {
+            Basis::Legendre => (2.0 - 1.0 / r as f64, 1.0 - 1.0 / r as f64),
+            Basis::Chebyshev => (2.0, 1.0),
+        }
+    }
+
+    /// Pointwise evaluation of the series.
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.coeffs.is_empty() {
+            return 0.0;
+        }
+        let mut acc = self.coeffs[0];
+        if self.coeffs.len() == 1 {
+            return acc;
+        }
+        let (mut p_prev2, mut p_prev) = (1.0, x);
+        acc += self.coeffs[1] * p_prev;
+        for r in 2..self.coeffs.len() {
+            let (c1, c2) = self.recursion_scalars(r);
+            let p = c1 * x * p_prev - c2 * p_prev2;
+            acc += self.coeffs[r] * p;
+            p_prev2 = p_prev;
+            p_prev = p;
+        }
+        acc
+    }
+
+    /// `δ = max_x |f(x) − f̃_L(x)|` on a uniform grid — the additive
+    /// distortion bound of Theorem 1.
+    pub fn max_err(&self, f: impl Fn(f64) -> f64, grid: usize) -> f64 {
+        (0..grid)
+            .map(|i| -1.0 + 2.0 * i as f64 / (grid - 1) as f64)
+            .map(|x| (f(x) - self.eval(x)).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// RMS error on a uniform grid (∝ √Δ_L of §3.4).
+    pub fn rms_err(&self, f: impl Fn(f64) -> f64, grid: usize) -> f64 {
+        let s: f64 = (0..grid)
+            .map(|i| -1.0 + 2.0 * i as f64 / (grid - 1) as f64)
+            .map(|x| {
+                let e = f(x) - self.eval(x);
+                e * e
+            })
+            .sum();
+        (s / grid as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_constant_and_linear() {
+        let s = Series { basis: Basis::Legendre, coeffs: vec![2.0] };
+        assert_eq!(s.eval(0.3), 2.0);
+        let s = Series { basis: Basis::Legendre, coeffs: vec![1.0, 2.0] };
+        assert!((s.eval(0.5) - 2.0).abs() < 1e-12); // 1 + 2*0.5
+    }
+
+    #[test]
+    fn empty_series_is_zero() {
+        let s = Series { basis: Basis::Chebyshev, coeffs: vec![] };
+        assert_eq!(s.eval(0.7), 0.0);
+        assert_eq!(s.order(), 0);
+    }
+
+    #[test]
+    fn eval_matches_direct_basis_combination() {
+        // sum over explicitly computed basis polynomials.
+        let coeffs = vec![0.5, -1.0, 2.0, 0.25];
+        for &basis in &[Basis::Legendre, Basis::Chebyshev] {
+            let s = Series { basis, coeffs: coeffs.clone() };
+            for i in 0..21 {
+                let x = -1.0 + 0.1 * i as f64;
+                // direct recursion
+                let mut ps = vec![1.0, x];
+                for r in 2..coeffs.len() {
+                    let (c1, c2) = s.recursion_scalars(r);
+                    let p = c1 * x * ps[r - 1] - c2 * ps[r - 2];
+                    ps.push(p);
+                }
+                let want: f64 = coeffs.iter().zip(&ps).map(|(a, p)| a * p).sum();
+                assert!((s.eval(x) - want).abs() < 1e-12);
+            }
+        }
+    }
+}

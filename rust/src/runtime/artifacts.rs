@@ -1,0 +1,149 @@
+//! Artifact registry: parse `manifest.json`, validate shapes, locate HLO
+//! text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One artifact's metadata from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    /// Parameter shapes in order (e.g. [[256,256],[256,32],[256,32],[2]]).
+    pub params: Vec<Vec<usize>>,
+}
+
+/// The registry of AOT artifacts in a directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactInfo>,
+    /// Tile geometry recorded by aot.py (`_tile` key), name → value.
+    pub tile: std::collections::BTreeMap<String, usize>,
+}
+
+impl Artifacts {
+    /// Load `dir/manifest.json`. Fails with a readable error when the
+    /// artifacts have not been built (`make artifacts`).
+    pub fn load(dir: &Path) -> Result<Artifacts, String> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| format!("bad manifest: {e}"))?;
+        let mut entries = Vec::new();
+        let mut tile = std::collections::BTreeMap::new();
+        for key in json.keys() {
+            if key == "_tile" {
+                if let Json::Obj(m) = json.get(key).unwrap() {
+                    for (k, v) in m {
+                        if let Some(u) = v.as_usize() {
+                            tile.insert(k.clone(), u);
+                        }
+                    }
+                }
+                continue;
+            }
+            if key.starts_with('_') {
+                continue; // reference data blocks
+            }
+            let entry = json.get(key).unwrap();
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| format!("artifact {key}: missing file"))?;
+            let params = entry
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| format!("artifact {key}: missing params"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            entries.push(ArtifactInfo {
+                name: key.clone(),
+                file: dir.join(file),
+                params,
+            });
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), entries, tile })
+    }
+
+    /// Default location: `$CSE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CSE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find an artifact by prefix (e.g. "legendre_step").
+    pub fn find_prefix(&self, prefix: &str) -> Option<&ArtifactInfo> {
+        self.entries.iter().find(|e| e.name.starts_with(prefix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("cse_artifacts_test");
+        write_manifest(
+            &dir,
+            r#"{"step": {"file": "step.hlo.txt", "params": [[4,4],[4,2],[2]], "dtype": "f32"},
+                "_tile": {"n": 4, "d": 2},
+                "_ref": [1.0, 2.0]}"#,
+        );
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.entries.len(), 1);
+        let e = a.get("step").unwrap();
+        assert_eq!(e.params, vec![vec![4, 4], vec![4, 2], vec![2]]);
+        assert_eq!(a.tile["n"], 4);
+        assert!(a.find_prefix("st").is_some());
+        assert!(a.get("missing").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable_error() {
+        let dir = std::env::temp_dir().join("cse_artifacts_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = match Artifacts::load(&dir) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing manifest"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When the repo's artifacts are built, validate the real manifest.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let a = Artifacts::load(&dir).unwrap();
+            assert!(a.find_prefix("legendre_step").is_some());
+            assert!(a.find_prefix("gauss_matvec").is_some());
+            for e in &a.entries {
+                assert!(e.file.exists(), "missing {}", e.file.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! PJRT CPU client wrapper + Literal ⇄ Mat plumbing + executable cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables
+/// keyed by artifact path. Compilation happens once per artifact per
+/// process; execution is the request path.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.display().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f32 literals; unwraps the 1-element result tuple that
+    /// `return_tuple=True` lowering produces.
+    pub fn execute_tuple1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Execute and decompose an n-tuple result.
+    pub fn execute_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Mat (f64, row-major) → f32 literal of shape (rows, cols).
+pub fn literal_from_mat(m: &Mat) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.data.iter().map(|&x| x as f32).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// f32 vector literal of shape (len,).
+pub fn literal_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 literal (rows, cols) → Mat (f64).
+pub fn mat_from_literal(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v: Vec<f32> = lit.to_vec()?;
+    anyhow::ensure!(
+        v.len() == rows * cols,
+        "literal has {} elements, expected {}x{}",
+        v.len(),
+        rows,
+        cols
+    );
+    Ok(Mat::from_vec(rows, cols, v.into_iter().map(|x| x as f64).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_literal_roundtrip() {
+        let m = Mat::from_rows(&[&[1.0, 2.5], &[-3.0, 0.25], &[0.0, 9.0]]);
+        let lit = literal_from_mat(&m).unwrap();
+        let back = mat_from_literal(&lit, 3, 2).unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-7);
+    }
+
+    #[test]
+    fn mat_from_literal_shape_mismatch_errors() {
+        let lit = xla::Literal::vec1(&[1f32, 2.0, 3.0]);
+        assert!(mat_from_literal(&lit, 2, 2).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load the JAX/Pallas-authored HLO artifacts and execute
+//! them from the Rust request path (python never runs at serve time).
+//!
+//! * [`artifacts`] — manifest-driven registry of `artifacts/*.hlo.txt`
+//!   (written by `python/compile/aot.py`), with shape validation.
+//! * [`client`] — PJRT CPU client + compiled-executable cache and the
+//!   f32 Literal ⇄ [`crate::linalg::Mat`] plumbing.
+//! * [`ops`] — the tile operators: [`ops::PjrtStepOp`] drives the fused
+//!   Pallas recursion-step kernel (one compiled executable serves *any*
+//!   polynomial order — Rust owns the loop), and [`ops::GaussKernelOp`]
+//!   exposes the implicit Gaussian-kernel operator for kernel PCA.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized protos which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+pub mod artifacts;
+pub mod client;
+pub mod ops;
+
+pub use artifacts::Artifacts;
+pub use client::Runtime;

@@ -1,0 +1,173 @@
+//! Tile operators backed by AOT artifacts.
+//!
+//! [`PjrtStepOp`] wraps the fused Pallas recursion-step kernel
+//! (`legendre_step_{n}x{d}`): `Q_r = c1·(S@Q_{r-1}) − c2·Q_{r-2}`. The
+//! Rust loop supplies (c1, c2, a_r) per step, so one compiled executable
+//! serves any order, basis and weighing function. With (c1, c2) = (1, 0)
+//! it doubles as a plain `S@Q` [`Operator`], which lets every native
+//! driver (power iteration, FastEmbed, Lanczos) run on the PJRT path.
+//!
+//! [`GaussKernelOp`] wraps `gauss_matvec_{l}x{f}x{d}`: the implicit
+//! Gaussian-kernel product `K@Q` with K never materialized (kernel PCA).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::Artifacts;
+use super::client::{literal_from_mat, literal_vec, mat_from_literal, Runtime};
+use crate::embed::op::Operator;
+use crate::linalg::Mat;
+use crate::poly::Series;
+
+/// Dense-tile recursion operator over the AOT step kernel.
+pub struct PjrtStepOp {
+    rt: Arc<Runtime>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    /// S tile, uploaded once per operator.
+    s_lit: xla::Literal,
+    pub n: usize,
+    pub d: usize,
+    nnz: usize,
+}
+
+impl PjrtStepOp {
+    /// Build from the registry: finds `legendre_step_{n}x{d}`, validates
+    /// that `s` matches the baked tile shape.
+    pub fn new(rt: Arc<Runtime>, arts: &Artifacts, s: &Mat) -> Result<PjrtStepOp> {
+        let info = arts
+            .find_prefix("legendre_step")
+            .context("no legendre_step artifact in manifest")?;
+        let (n, d) = (info.params[0][0], info.params[1][1]);
+        anyhow::ensure!(
+            s.rows == n && s.cols == n,
+            "operator tile is {}x{}, artifact baked for {n}x{n}",
+            s.rows,
+            s.cols
+        );
+        let exe = rt.load_hlo_text(&info.file)?;
+        let s_lit = literal_from_mat(s)?;
+        Ok(PjrtStepOp { rt, exe, s_lit, n, d, nnz: n * n })
+    }
+
+    /// One fused step: `c1·(S@q_prev) − c2·q_prev2`.
+    pub fn step(&self, q_prev: &Mat, q_prev2: &Mat, c1: f64, c2: f64) -> Result<Mat> {
+        anyhow::ensure!(
+            q_prev.rows == self.n && q_prev.cols == self.d,
+            "block is {}x{}, artifact baked for {}x{}",
+            q_prev.rows,
+            q_prev.cols,
+            self.n,
+            self.d
+        );
+        let qp = literal_from_mat(q_prev)?;
+        let qpp = literal_from_mat(q_prev2)?;
+        let c = literal_vec(&[c1 as f32, c2 as f32]);
+        let out = self
+            .rt
+            .execute_tuple1(&self.exe, &[self.s_lit.clone(), qp, qpp, c])?;
+        mat_from_literal(&out, self.n, self.d)
+    }
+
+    /// Full series application driven from Rust: the AOT analogue of
+    /// `embed::fastembed::apply_series`, one PJRT dispatch per step.
+    pub fn apply_series(&self, series: &Series, q0: &Mat, matvecs: &mut usize) -> Result<Mat> {
+        let a = &series.coeffs;
+        anyhow::ensure!(!a.is_empty(), "empty series");
+        let mut e = q0.clone();
+        e.scale(a[0]);
+        if a.len() == 1 {
+            return Ok(e);
+        }
+        // q1 = S q0 via the step kernel with (c1, c2) = (1, 0).
+        let zero = Mat::zeros(q0.rows, q0.cols);
+        let mut q_prev2 = q0.clone();
+        let mut q_prev = self.step(q0, &zero, 1.0, 0.0)?;
+        *matvecs += q0.cols;
+        e.axpy(a[1], &q_prev);
+        for r in 2..a.len() {
+            let (c1, c2) = series.recursion_scalars(r);
+            let q = self.step(&q_prev, &q_prev2, c1, c2)?;
+            *matvecs += q0.cols;
+            e.axpy(a[r], &q);
+            q_prev2 = q_prev;
+            q_prev = q;
+        }
+        Ok(e)
+    }
+}
+
+impl Operator for PjrtStepOp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+        let zero = Mat::zeros(x.rows, x.cols);
+        let out = self
+            .step(x, &zero, 1.0, 0.0)
+            .expect("PJRT step execution failed");
+        y.data.copy_from_slice(&out.data);
+    }
+
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+}
+
+/// Implicit Gaussian-kernel operator `K@Q` (kernel PCA, paper eq. (1)).
+pub struct GaussKernelOp {
+    rt: Arc<Runtime>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    x_lit: xla::Literal,
+    pub l: usize,
+    pub feat: usize,
+    pub d: usize,
+    alpha: f32,
+}
+
+impl GaussKernelOp {
+    pub fn new(rt: Arc<Runtime>, arts: &Artifacts, points: &Mat, alpha: f64) -> Result<GaussKernelOp> {
+        let info = arts
+            .find_prefix("gauss_matvec")
+            .context("no gauss_matvec artifact in manifest")?;
+        let (l, feat) = (info.params[0][0], info.params[0][1]);
+        let d = info.params[1][1];
+        anyhow::ensure!(
+            points.rows == l && points.cols == feat,
+            "point cloud is {}x{}, artifact baked for {l}x{feat}",
+            points.rows,
+            points.cols
+        );
+        let exe = rt.load_hlo_text(&info.file)?;
+        let x_lit = literal_from_mat(points)?;
+        Ok(GaussKernelOp { rt, exe, x_lit, l, feat, d, alpha: alpha as f32 })
+    }
+}
+
+impl Operator for GaussKernelOp {
+    fn dim(&self) -> usize {
+        self.l
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.rows, self.l);
+        assert_eq!(x.cols, self.d, "gauss artifact baked for d={}", self.d);
+        let q = literal_from_mat(x).expect("literal");
+        let alpha = literal_vec(&[self.alpha]);
+        let out = self
+            .rt
+            .execute_tuple1(&self.exe, &[self.x_lit.clone(), q, alpha])
+            .expect("PJRT gauss execution failed");
+        let m = mat_from_literal(&out, self.l, self.d).expect("literal shape");
+        y.data.copy_from_slice(&m.data);
+    }
+
+    fn nnz(&self) -> usize {
+        self.l * self.l
+    }
+}
+
+// PJRT integration tests live in rust/tests/pjrt_roundtrip.rs (they need
+// built artifacts and a compiled client; unit tests here would force every
+// `cargo test` invocation through XLA compilation).

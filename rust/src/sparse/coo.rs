@@ -1,0 +1,60 @@
+//! Coordinate-format sparse matrix (builder format).
+
+/// COO triplets. Duplicate entries are *summed* on conversion to CSR.
+#[derive(Clone, Debug)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) out of {}x{}", self.rows, self.cols);
+        self.entries.push((i, j, v));
+    }
+
+    /// Add both (i, j, v) and (j, i, v) — undirected-graph convenience.
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Build from an undirected edge list (unit weights, both directions).
+    pub fn from_undirected_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut coo = Coo::new(n, n);
+        for &(u, v) in edges {
+            coo.push_sym(u, v, 1.0);
+        }
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_sym_adds_both_directions() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 1, 2.0);
+        c.push_sym(2, 2, 5.0); // diagonal: added once
+        assert_eq!(c.entries, vec![(0, 1, 2.0), (1, 0, 2.0), (2, 2, 5.0)]);
+    }
+
+    #[test]
+    fn from_undirected_edges_counts() {
+        let c = Coo::from_undirected_edges(4, &[(0, 1), (1, 2)]);
+        assert_eq!(c.nnz(), 4);
+    }
+}

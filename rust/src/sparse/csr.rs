@@ -1,0 +1,364 @@
+//! Compressed sparse row matrix + the SpMM hot path.
+
+use super::coo::Coo;
+use crate::linalg::Mat;
+
+/// CSR sparse matrix (`f64` values).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointer, length `rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, length nnz, sorted within each row.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO, summing duplicates and sorting row segments.
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut counts = vec![0usize; coo.rows + 1];
+        for &(i, _, _) in &coo.entries {
+            counts[i + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            counts[i + 1] += counts[i];
+        }
+        let indptr_raw = counts.clone();
+        let mut idx = vec![0u32; coo.nnz()];
+        let mut val = vec![0.0; coo.nnz()];
+        let mut cursor = indptr_raw.clone();
+        for &(i, j, v) in &coo.entries {
+            let p = cursor[i];
+            idx[p] = j as u32;
+            val[p] = v;
+            cursor[i] += 1;
+        }
+        // Sort each row segment by column, then merge duplicates.
+        let mut indptr = vec![0usize; coo.rows + 1];
+        let mut out_idx = Vec::with_capacity(coo.nnz());
+        let mut out_val = Vec::with_capacity(coo.nnz());
+        for i in 0..coo.rows {
+            let (s, e) = (indptr_raw[i], indptr_raw[i + 1]);
+            let mut seg: Vec<(u32, f64)> =
+                idx[s..e].iter().copied().zip(val[s..e].iter().copied()).collect();
+            seg.sort_by_key(|&(j, _)| j);
+            let mut k = 0;
+            while k < seg.len() {
+                let j = seg[k].0;
+                let mut v = 0.0;
+                while k < seg.len() && seg[k].0 == j {
+                    v += seg[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    out_idx.push(j);
+                    out_val.push(v);
+                }
+            }
+            indptr[i + 1] = out_idx.len();
+        }
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            indptr,
+            indices: out_idx,
+            values: out_val,
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Csr {
+        Csr {
+            rows: n,
+            cols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    /// y = A x (single vector).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut acc = 0.0;
+            for (&j, &v) in idx.iter().zip(val) {
+                acc += v * x[j as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Y = A X — the FastEmbed hot path. X row-major (cols = d) so the
+    /// inner loop streams d contiguous floats per non-zero: the paper's
+    /// "parallel across starting vectors" becomes SIMD/cache-level
+    /// parallelism on one core.
+    pub fn spmm(&self, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(self.rows, x.cols);
+        self.spmm_into(x, &mut y);
+        y
+    }
+
+    /// SpMM into a preallocated output (hot loop avoids allocation).
+    pub fn spmm_into(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        let d = x.cols;
+        y.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let yrow = &mut y.data[i * d..(i + 1) * d];
+            for (&j, &aij) in idx.iter().zip(val) {
+                let xrow = &x.data[j as usize * d..(j as usize + 1) * d];
+                for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += aij * xv;
+                }
+            }
+        }
+    }
+
+    /// Explicit transpose (CSR -> CSR).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut cursor = counts;
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                let p = cursor[j as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                cursor[j as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Dense conversion (tests / small oracles only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                m[(i, j as usize)] += v;
+            }
+        }
+        m
+    }
+
+    /// Row sums (degrees for an adjacency matrix).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).1.iter().sum())
+            .collect()
+    }
+
+    /// In-place scale of all values.
+    pub fn scale(&mut self, s: f64) {
+        for v in self.values.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// D1 * A * D2 for diagonal matrices given as vectors (in place).
+    pub fn diag_scale(&mut self, left: &[f64], right: &[f64]) {
+        assert_eq!(left.len(), self.rows);
+        assert_eq!(right.len(), self.cols);
+        for i in 0..self.rows {
+            let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+            for p in s..e {
+                self.values[p] *= left[i] * right[self.indices[p] as usize];
+            }
+        }
+    }
+
+    /// Structural + numerical symmetry test.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.indptr != self.indptr || t.indices != self.indices {
+            return false;
+        }
+        self.values
+            .iter()
+            .zip(&t.values)
+            .all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// Memory footprint in bytes (metrics/reporting).
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 4 + self.values.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen::random_edges;
+    use crate::testing::prop::{all_close, check, forall};
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Coo {
+        let mut c = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            c.push(rng.below(rows), rng.below(cols), rng.normal());
+        }
+        c
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates_and_sorts() {
+        let mut c = Coo::new(2, 3);
+        c.push(0, 2, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(0, 2, 3.0);
+        c.push(1, 1, -1.0);
+        let m = Csr::from_coo(&c);
+        assert_eq!(m.indptr, vec![0, 2, 3]);
+        assert_eq!(m.indices, vec![0, 2, 1]);
+        assert_eq!(m.values, vec![2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn from_coo_drops_cancelled_entries() {
+        let mut c = Coo::new(1, 1);
+        c.push(0, 0, 1.0);
+        c.push(0, 0, -1.0);
+        let m = Csr::from_coo(&c);
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        forall(
+            31,
+            24,
+            |r| {
+                let rows = 2 + r.below(12);
+                let cols = 2 + r.below(12);
+                let d = 1 + r.below(6);
+                let coo = random_coo(r, rows, cols, rows * 2);
+                (coo, Mat::randn(r, cols, d))
+            },
+            |(coo, x)| {
+                let a = Csr::from_coo(coo);
+                let got = a.spmm(x);
+                let want = a.to_dense().matmul(x);
+                all_close(&got.data, &want.data, 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    fn matvec_matches_spmm_single_column() {
+        let mut rng = Rng::new(32);
+        let coo = random_coo(&mut rng, 10, 10, 30);
+        let a = Csr::from_coo(&coo);
+        let x: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let xm = Mat::from_vec(10, 1, x.clone());
+        let y1 = a.matvec(&x);
+        let y2 = a.spmm(&xm);
+        all_close(&y1, &y2.data, 1e-14).unwrap();
+    }
+
+    #[test]
+    fn transpose_involution_and_correctness() {
+        forall(
+            33,
+            16,
+            |r| {
+                let rows = 3 + r.below(8);
+                let cols = 3 + r.below(8);
+                random_coo(r, rows, cols, 20)
+            },
+            |coo| {
+                let a = Csr::from_coo(coo);
+                let t = a.transpose();
+                let tt = t.transpose();
+                check(tt.indptr == a.indptr && tt.indices == a.indices, "A^TT structure")?;
+                all_close(&tt.values, &a.values, 1e-15)?;
+                let ad = a.to_dense().transpose();
+                all_close(&t.to_dense().data, &ad.data, 1e-15)
+            },
+        );
+    }
+
+    #[test]
+    fn eye_behaves_as_identity() {
+        let mut rng = Rng::new(34);
+        let x = Mat::randn(&mut rng, 6, 3);
+        let i = Csr::eye(6);
+        assert!(i.spmm(&x).max_abs_diff(&x) < 1e-15);
+        assert!(i.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn diag_scale_matches_dense() {
+        let mut rng = Rng::new(35);
+        let coo = random_coo(&mut rng, 5, 4, 12);
+        let mut a = Csr::from_coo(&coo);
+        let l: Vec<f64> = (0..5).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let r: Vec<f64> = (0..4).map(|_| rng.uniform(0.5, 2.0)).collect();
+        let dense_before = a.to_dense();
+        a.diag_scale(&l, &r);
+        let d = a.to_dense();
+        for i in 0..5 {
+            for j in 0..4 {
+                assert!((d[(i, j)] - l[i] * dense_before[(i, j)] * r[j]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_symmetry() {
+        let mut rng = Rng::new(36);
+        let edges = random_edges(&mut rng, 40, 5.0);
+        let a = Csr::from_coo(&Coo::from_undirected_edges(40, &edges));
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.nnz(), 2 * edges.len());
+    }
+
+    #[test]
+    fn spmm_into_reuses_buffer() {
+        let mut rng = Rng::new(37);
+        let coo = random_coo(&mut rng, 8, 8, 20);
+        let a = Csr::from_coo(&coo);
+        let x = Mat::randn(&mut rng, 8, 4);
+        let mut y = Mat::from_vec(8, 4, vec![7.0; 32]); // dirty buffer
+        a.spmm_into(&x, &mut y);
+        assert!(y.max_abs_diff(&a.spmm(&x)) < 1e-15);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let c = Coo::new(3, 3); // all empty
+        let a = Csr::from_coo(&c);
+        assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Graph-derived operators.
+//!
+//! The paper's experiments all run on the *normalized adjacency*
+//! `Ã = D^{-1/2} A D^{-1/2}` (eigenvalues in [-1, 1]); §3.5 embeds general
+//! `m x n` matrices via the symmetric dilation `S = [[0, A^T], [A, 0]]`.
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Degrees (row sums) of an adjacency matrix; isolated vertices get 0.
+pub fn degrees(adj: &Csr) -> Vec<f64> {
+    adj.row_sums()
+}
+
+/// Normalized adjacency `D^{-1/2} A D^{-1/2}`. Isolated vertices (degree 0)
+/// keep zero rows/cols. Eigenvalues land in [-1, 1].
+pub fn normalized_adjacency(adj: &Csr) -> Csr {
+    assert_eq!(adj.rows, adj.cols, "adjacency must be square");
+    let d = degrees(adj);
+    let dinv_sqrt: Vec<f64> = d
+        .iter()
+        .map(|&x| if x > 0.0 { 1.0 / x.sqrt() } else { 0.0 })
+        .collect();
+    let mut out = adj.clone();
+    out.diag_scale(&dinv_sqrt, &dinv_sqrt);
+    out
+}
+
+/// Random-walk transition matrix `D^{-1} A` (rows sum to 1 on non-isolated
+/// vertices) — the operator behind power-iteration clustering [18].
+pub fn random_walk_matrix(adj: &Csr) -> Csr {
+    assert_eq!(adj.rows, adj.cols);
+    let d = degrees(adj);
+    let dinv: Vec<f64> = d.iter().map(|&x| if x > 0.0 { 1.0 / x } else { 0.0 }).collect();
+    let ones = vec![1.0; adj.cols];
+    let mut out = adj.clone();
+    out.diag_scale(&dinv, &ones);
+    out
+}
+
+/// Combinatorial Laplacian `L = D - A`.
+pub fn laplacian(adj: &Csr) -> Csr {
+    assert_eq!(adj.rows, adj.cols);
+    let d = degrees(adj);
+    let mut coo = Coo::new(adj.rows, adj.cols);
+    for i in 0..adj.rows {
+        let (idx, val) = adj.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            coo.push(i, j as usize, -v);
+        }
+        coo.push(i, i, d[i]);
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Normalized Laplacian `I - D^{-1/2} A D^{-1/2}` (eigenvalues in [0, 2]).
+pub fn normalized_laplacian(adj: &Csr) -> Csr {
+    let na = normalized_adjacency(adj);
+    let mut coo = Coo::new(adj.rows, adj.cols);
+    for i in 0..na.rows {
+        let (idx, val) = na.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            coo.push(i, j as usize, -v);
+        }
+        coo.push(i, i, 1.0);
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Symmetric dilation `S = [[0, A^T], [A, 0]]` of an `m x n` matrix
+/// (paper §3.5). Rows 0..n of S correspond to *columns* of A, rows n..n+m
+/// to *rows* of A; eigenvalues are ±σ_l plus |m−n| zeros.
+pub fn dilation(a: &Csr) -> Csr {
+    let (m, n) = (a.rows, a.cols);
+    let at = a.transpose();
+    let size = m + n;
+    let mut indptr = Vec::with_capacity(size + 1);
+    let mut indices = Vec::with_capacity(2 * a.nnz());
+    let mut values = Vec::with_capacity(2 * a.nnz());
+    indptr.push(0);
+    // First n rows: [0, A^T] -> A^T's row i, with column indices shifted by n.
+    for i in 0..n {
+        let (idx, val) = at.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            indices.push(j + n as u32);
+            values.push(v);
+        }
+        indptr.push(indices.len());
+    }
+    // Last m rows: [A, 0] -> A's row i, column indices unshifted.
+    for i in 0..m {
+        let (idx, val) = a.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            indices.push(j);
+            values.push(v);
+        }
+        indptr.push(indices.len());
+    }
+    Csr { rows: size, cols: size, indptr, indices, values }
+}
+
+/// Connected components by BFS; returns (component id per vertex, count).
+pub fn connected_components(adj: &Csr) -> (Vec<usize>, usize) {
+    assert_eq!(adj.rows, adj.cols);
+    let n = adj.rows;
+    let mut comp = vec![usize::MAX; n];
+    let mut count = 0;
+    let mut queue = std::collections::VecDeque::new();
+    for start in 0..n {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        comp[start] = count;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            let (idx, _) = adj.row(u);
+            for &v in idx {
+                let v = v as usize;
+                if comp[v] == usize::MAX {
+                    comp[v] = count;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count += 1;
+    }
+    (comp, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh::jacobi_eigh;
+    use crate::sparse::coo::Coo;
+    use crate::testing::gen::random_edges;
+    use crate::testing::prop::{check, forall};
+
+    fn path_graph(n: usize) -> Csr {
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Csr::from_coo(&Coo::from_undirected_edges(n, &edges))
+    }
+
+    #[test]
+    fn normalized_adjacency_spectrum_in_unit_interval() {
+        forall(
+            41,
+            8,
+            |r| random_edges(r, 16, 4.0),
+            |edges| {
+                let a = Csr::from_coo(&Coo::from_undirected_edges(16, edges));
+                let na = normalized_adjacency(&a);
+                check(na.is_symmetric(1e-12), "normalized adjacency symmetric")?;
+                let (lam, _) = jacobi_eigh(&na.to_dense());
+                for &l in &lam {
+                    check(l <= 1.0 + 1e-9 && l >= -1.0 - 1e-9, format!("eig {l} outside [-1,1]"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn normalized_adjacency_leading_eig_is_one_when_connected() {
+        let a = path_graph(8);
+        let na = normalized_adjacency(&a);
+        let (lam, _) = jacobi_eigh(&na.to_dense());
+        assert!((lam[0] - 1.0).abs() < 1e-10, "leading eig {}", lam[0]);
+    }
+
+    #[test]
+    fn random_walk_rows_sum_to_one() {
+        let a = path_graph(6);
+        let rw = random_walk_matrix(&a);
+        for (i, s) in rw.row_sums().iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-12, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn laplacian_annihilates_constants() {
+        let a = path_graph(7);
+        let l = laplacian(&a);
+        let y = l.matvec(&vec![1.0; 7]);
+        assert!(y.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn normalized_laplacian_psd() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let edges = random_edges(&mut rng, 12, 3.0);
+        let a = Csr::from_coo(&Coo::from_undirected_edges(12, &edges));
+        let nl = normalized_laplacian(&a);
+        let (lam, _) = jacobi_eigh(&nl.to_dense());
+        assert!(lam.iter().all(|&l| l >= -1e-9 && l <= 2.0 + 1e-9));
+    }
+
+    #[test]
+    fn dilation_structure_and_spectrum() {
+        // A = [[1, 0], [0, 2], [3, 0]] (3x2): singular values {3.16..., 2}
+        let mut c = Coo::new(3, 2);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 2.0);
+        c.push(2, 0, 3.0);
+        let a = Csr::from_coo(&c);
+        let s = dilation(&a);
+        assert_eq!(s.rows, 5);
+        assert!(s.is_symmetric(1e-14));
+        let (lam, _) = jacobi_eigh(&s.to_dense());
+        // Eigenvalues: ±sigma plus one zero (m - n = 1).
+        let sig1 = 10.0f64.sqrt();
+        assert!((lam[0] - sig1).abs() < 1e-10);
+        assert!((lam[1] - 2.0).abs() < 1e-10);
+        assert!(lam[2].abs() < 1e-10);
+        assert!((lam[3] + 2.0).abs() < 1e-10);
+        assert!((lam[4] + sig1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dilation_spectrum_symmetric_property() {
+        forall(
+            43,
+            8,
+            |r| {
+                let m = 2 + r.below(5);
+                let n = 2 + r.below(5);
+                let mut c = Coo::new(m, n);
+                for _ in 0..(m * n / 2).max(1) {
+                    c.push(r.below(m), r.below(n), r.normal());
+                }
+                c
+            },
+            |coo| {
+                let a = Csr::from_coo(coo);
+                let s = dilation(&a);
+                let (lam, _) = jacobi_eigh(&s.to_dense());
+                // lam sorted desc; spectrum must be symmetric about 0.
+                let k = lam.len();
+                for i in 0..k {
+                    check(
+                        (lam[i] + lam[k - 1 - i]).abs() < 1e-9,
+                        format!("spectrum not symmetric: {} vs {}", lam[i], lam[k - 1 - i]),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn connected_components_counts() {
+        // Two triangles, one isolated vertex.
+        let edges = [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)];
+        let a = Csr::from_coo(&Coo::from_undirected_edges(7, &edges));
+        let (comp, count) = connected_components(&a);
+        assert_eq!(count, 3);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[5]);
+        assert_ne!(comp[0], comp[3]);
+        assert_ne!(comp[6], comp[0]);
+    }
+
+    #[test]
+    fn isolated_vertices_zero_rows() {
+        let a = Csr::from_coo(&Coo::from_undirected_edges(4, &[(0, 1)]));
+        let na = normalized_adjacency(&a);
+        let (idx, _) = na.row(3);
+        assert!(idx.is_empty());
+    }
+}

@@ -1,0 +1,140 @@
+//! SNAP-style edge-list text I/O.
+//!
+//! Format: one `u v` pair per line, `#`-prefixed comment lines ignored —
+//! the format of the SNAP datasets the paper evaluates on, so real DBLP/
+//! Amazon files drop in directly when available.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Read an undirected graph from a SNAP edge-list file. Vertex ids are
+/// compacted to 0..n (SNAP files have gaps); returns (adjacency, id map
+/// original -> compact).
+pub fn read_edge_list(path: &Path) -> std::io::Result<(Csr, Vec<u64>)> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut remap = std::collections::HashMap::new();
+    let mut ids: Vec<u64> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (a, b) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => continue,
+        };
+        let parse = |s: &str| -> Option<u64> { s.parse().ok() };
+        let (Some(u), Some(v)) = (parse(a), parse(b)) else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad edge line: {line}"),
+            ));
+        };
+        let mut intern = |x: u64| -> usize {
+            *remap.entry(x).or_insert_with(|| {
+                ids.push(x);
+                ids.len() - 1
+            })
+        };
+        let ui = intern(u);
+        let vi = intern(v);
+        if ui == vi {
+            continue; // drop self loops
+        }
+        let key = (ui.min(vi), ui.max(vi));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    let n = ids.len();
+    Ok((Csr::from_coo(&Coo::from_undirected_edges(n, &edges)), ids))
+}
+
+/// Write an adjacency matrix as an edge list (upper triangle only).
+pub fn write_edge_list(path: &Path, adj: &Csr, header: &str) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    if !header.is_empty() {
+        for line in header.lines() {
+            writeln!(f, "# {line}")?;
+        }
+    }
+    for i in 0..adj.rows {
+        let (idx, _) = adj.row(i);
+        for &j in idx {
+            let j = j as usize;
+            if j > i {
+                writeln!(f, "{i}\t{j}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write a dense embedding as TSV (one row per vertex) — consumed by the
+/// bench harness and external plotting.
+pub fn write_tsv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join("\t"))?;
+    for r in rows {
+        let line: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+        writeln!(f, "{}", line.join("\t"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::erdos_renyi;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_edge_list() {
+        let mut rng = Rng::new(61);
+        let g = erdos_renyi(&mut rng, 50, 120);
+        let dir = std::env::temp_dir().join("cse_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        write_edge_list(&path, &g.adj, "test graph").unwrap();
+        let (back, ids) = read_edge_list(&path).unwrap();
+        assert_eq!(back.nnz(), g.adj.nnz());
+        assert!(ids.len() <= 50);
+        // Same degree multiset (vertex order may differ through remap).
+        let mut d1 = g.adj.row_sums();
+        let mut d2 = back.row_sums();
+        d1.retain(|&d| d > 0.0);
+        d1.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        d2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn comments_gaps_and_self_loops() {
+        let dir = std::env::temp_dir().join("cse_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g2.txt");
+        std::fs::write(&path, "# comment\n10 20\n20 10\n30 30\n\n20 40\n").unwrap();
+        let (g, ids) = read_edge_list(&path).unwrap();
+        // Vertices 10,20,30,40 -> 4 compact ids; self loop dropped;
+        // duplicate edge deduped.
+        assert_eq!(ids.len(), 4);
+        assert_eq!(g.nnz(), 4); // 2 undirected edges
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        let dir = std::env::temp_dir().join("cse_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g3.txt");
+        std::fs::write(&path, "abc def\n").unwrap();
+        assert!(read_edge_list(&path).is_err());
+    }
+}

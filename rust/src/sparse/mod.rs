@@ -1,0 +1,22 @@
+//! Sparse-matrix substrate: the scalable operator FastEmbed iterates.
+//!
+//! * [`coo`] — coordinate-format builder (what generators and I/O produce).
+//! * [`csr`] — compressed sparse row with the multi-vector product
+//!   (`SpMM`) that dominates the algorithm's runtime.
+//! * [`graph`] — graph-derived operators: degrees, normalized adjacency
+//!   `D^{-1/2} A D^{-1/2}`, random-walk matrix, Laplacians, and the
+//!   symmetric dilation `[[0, A^T], [A, 0]]` used to embed general
+//!   (rectangular) matrices (paper §3.5).
+//! * [`gen`] — synthetic workload generators (SBM, Erdős–Rényi,
+//!   Barabási–Albert, k-NN point-cloud graphs) standing in for the SNAP
+//!   datasets (see DESIGN.md §3 Substitutions).
+//! * [`io`] — SNAP-style edge-list text I/O.
+
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod graph;
+pub mod io;
+
+pub use coo::Coo;
+pub use csr::Csr;

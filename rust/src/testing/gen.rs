@@ -1,0 +1,90 @@
+//! Random-input generators for property tests.
+
+use crate::util::rng::Rng;
+
+/// Uniform usize in `[lo, hi]`.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    rng.uniform(lo, hi)
+}
+
+/// Vector of standard normals.
+pub fn normal_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Row-major dense symmetric matrix with spectral norm <= 1 (approximately;
+/// scaled by a power-iteration estimate then a safety factor).
+pub fn sym_contraction(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let v = rng.normal();
+            a[i * n + j] = v;
+            a[j * n + i] = v;
+        }
+    }
+    // Rough norm bound: Frobenius norm >= spectral norm, so dividing by it
+    // guarantees a contraction.
+    let fro = a.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    for v in a.iter_mut() {
+        *v /= fro;
+    }
+    a
+}
+
+/// Random sparse symmetric adjacency as an edge list (no self loops, no
+/// duplicates), Erdős–Rényi-ish with expected degree `deg`.
+pub fn random_edges(rng: &mut Rng, n: usize, deg: f64) -> Vec<(usize, usize)> {
+    let m_target = ((n as f64 * deg) / 2.0) as usize;
+    let mut seen = std::collections::HashSet::new();
+    let mut edges = Vec::new();
+    let mut attempts = 0;
+    while edges.len() < m_target && attempts < 20 * m_target.max(8) {
+        attempts += 1;
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sym_contraction_is_symmetric_and_bounded() {
+        let mut rng = Rng::new(1);
+        let n = 12;
+        let a = sym_contraction(&mut rng, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(a[i * n + j], a[j * n + i]);
+            }
+        }
+        let fro: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(fro <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn random_edges_valid() {
+        let mut rng = Rng::new(2);
+        let edges = random_edges(&mut rng, 50, 4.0);
+        let set: std::collections::HashSet<_> = edges.iter().collect();
+        assert_eq!(set.len(), edges.len(), "no duplicates");
+        for &(u, v) in &edges {
+            assert!(u < v && v < 50);
+        }
+    }
+}

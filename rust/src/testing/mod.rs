@@ -1,0 +1,9 @@
+//! In-tree property-testing harness (proptest is unavailable offline).
+//!
+//! [`prop::forall`] runs a property over `cases` randomly generated inputs
+//! from a seeded [`crate::util::rng::Rng`]; on failure it reports the case
+//! index and the seed that reproduces it. Generators are plain closures
+//! `Fn(&mut Rng) -> T`, composed with ordinary Rust.
+
+pub mod gen;
+pub mod prop;

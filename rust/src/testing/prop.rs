@@ -1,0 +1,102 @@
+//! The `forall` runner.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `property` over `cases` inputs drawn by `generator` from a stream
+/// seeded with `seed`. Panics with a reproducible report on first failure.
+///
+/// The property returns `Result<(), String>` so failures carry a message;
+/// use [`check`] to adapt bool-returning properties.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    generator: impl Fn(&mut Rng) -> T,
+    property: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        // Each case gets its own child stream so a failing case is
+        // reproducible in isolation from (seed, case).
+        let mut rng = root.split(case as u64);
+        let input = generator(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}/{cases}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Adapt a boolean condition into a property result.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within `tol` (absolute + relative mix).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol} (scaled)", (a - b).abs()))
+    }
+}
+
+/// Assert element-wise closeness of two slices.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0usize);
+        let counter = &mut count;
+        forall(
+            1,
+            32,
+            |r| r.below(100),
+            |&x| {
+                counter.set(counter.get() + 1);
+                check(x < 100, "in range")
+            },
+        );
+        assert_eq!(count.get(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 16, |r| r.below(10), |&x| check(x < 5, format!("{x} >= 5")));
+    }
+
+    #[test]
+    fn close_handles_scales() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1e9, 1e9 + 1.0, 1e-6).is_ok()); // relative
+        assert!(close(0.0, 1e-3, 1e-6).is_err());
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let e = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
+        assert!(e.contains("index 1"), "{e}");
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declared option, for usage rendering.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.named.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{rest} expects a value"));
+                    }
+                    out.named.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    return Err(format!("option --{rest} expects a value"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad usize '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad u64 '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad f64 '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Keys that were provided but are not in `known` — for typo detection.
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        self.named
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Render a usage block from declared options.
+pub fn usage(cmd: &str, about: &str, opts: &[Opt]) -> String {
+    let mut s = format!("{about}\n\nUsage: {cmd} [options]\n\nOptions:\n");
+    for o in opts {
+        let def = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--n", "100", "--d=8", "pos1"], &[]);
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("d"), Some("8"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--n", "100", "--eps", "0.25"], &[]);
+        assert_eq!(a.usize("n", 5).unwrap(), 100);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert!((a.f64("eps", 0.0).unwrap() - 0.25).abs() < 1e-12);
+        assert!(a.usize("eps", 0).is_err());
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["--verbose", "--n", "3"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--n".to_string()], &[]).is_err());
+        assert!(Args::parse(["--n".to_string(), "--m".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let a = parse(&["--typo", "1"], &[]);
+        assert_eq!(a.unknown_keys(&["n", "d"]), vec!["typo".to_string()]);
+    }
+}

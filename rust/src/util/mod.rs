@@ -1,0 +1,63 @@
+//! Shared substrate utilities.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! everything a normal project would pull from crates.io lives here:
+//! a seedable PRNG ([`rng`]), order statistics ([`stats`]), wall-clock
+//! timers ([`timer`]), a minimal CLI argument parser ([`args`]) and a
+//! minimal JSON parser ([`json`]) for the artifact manifest.
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Human-readable byte count.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(0.5), "500.00 ms");
+        assert_eq!(human_secs(2.0), "2.00 s");
+        assert_eq!(human_secs(300.0), "5.0 min");
+    }
+}

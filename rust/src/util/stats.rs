@@ -1,0 +1,125 @@
+//! Order statistics & summaries used by the benchmark harness and the
+//! figure-regeneration code (the paper reports percentile curves).
+
+/// Percentile with linear interpolation (like `numpy.percentile`).
+/// `p` in `[0, 100]`. Returns NaN on empty input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 100.0);
+    let idx = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    let frac = idx - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sorts in place and returns the requested percentiles.
+pub fn percentiles(values: &mut [f64], ps: &[f64]) -> Vec<f64> {
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile(values, p)).collect()
+}
+
+/// Mean of a slice (NaN on empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (NaN for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (sorts a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, 50.0)
+}
+
+/// Online histogram over fixed uniform bins — used to bucket "exact
+/// correlation" values when regenerating Figure 1b.
+#[derive(Clone, Debug)]
+pub struct Binner {
+    lo: f64,
+    hi: f64,
+    bins: Vec<Vec<f64>>,
+}
+
+impl Binner {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Binner { lo, hi, bins: vec![Vec::new(); nbins] }
+    }
+
+    /// Place `value` into the bin that `key` falls in (clamped).
+    pub fn add(&mut self, key: f64, value: f64) {
+        let n = self.bins.len();
+        let t = ((key - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = (t as isize).clamp(0, n as isize - 1) as usize;
+        self.bins[idx].push(value);
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * (self.hi - self.lo) / self.bins.len() as f64
+    }
+
+    pub fn bins(&self) -> &[Vec<f64>] {
+        &self.bins
+    }
+
+    pub fn bins_mut(&mut self) -> &mut [Vec<f64>] {
+        &mut self.bins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&v, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_degenerate() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn mean_std_median() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+        assert!((median(&xs) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binner_routes_and_clamps() {
+        let mut b = Binner::new(0.0, 1.0, 4);
+        b.add(0.1, 10.0);
+        b.add(0.9, 20.0);
+        b.add(-5.0, 30.0); // clamped into bin 0
+        b.add(5.0, 40.0); // clamped into last bin
+        assert_eq!(b.bins()[0], vec![10.0, 30.0]);
+        assert_eq!(b.bins()[3], vec![20.0, 40.0]);
+        assert!((b.bin_center(0) - 0.125).abs() < 1e-12);
+    }
+}

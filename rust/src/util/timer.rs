@@ -1,0 +1,72 @@
+//! Wall-clock timing helpers for the bench harness (criterion is not
+//! available offline; `rust/benches/` builds on these).
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Measurement summary produced by [`bench`].
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Micro-bench: warm up once, then run `iters` timed iterations.
+pub fn bench<T>(iters: usize, mut f: impl FnMut() -> T) -> Sample {
+    std::hint::black_box(f()); // warm-up
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_secs());
+    }
+    let mean = times.iter().sum::<f64>() / iters.max(1) as f64;
+    Sample {
+        iters,
+        mean_secs: mean,
+        min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_value_and_positive_duration() {
+        let (v, secs) = time(|| (0..1000).sum::<usize>());
+        assert_eq!(v, 499500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_collects_iters() {
+        let s = bench(5, || std::hint::black_box(1 + 1));
+        assert_eq!(s.iters, 5);
+        assert!(s.min_secs <= s.mean_secs && s.mean_secs <= s.max_secs + 1e-12);
+    }
+}

