@@ -1,0 +1,96 @@
+//! Exact vs ANN serving, end to end: embed an SBM graph once, then
+//! answer the same top-k workload through (a) the exact linear scan and
+//! (b) the multi-table SimHash index, reporting throughput, latency
+//! percentiles, recall@k and candidate-set sizes side by side.
+//!
+//! Run: `cargo run --release --example ann_serve -- [--n 20000] [--topk 10]`
+
+use cse::coordinator::service::Query;
+use cse::coordinator::{measure_serving, Coordinator, EmbedJob, SimilarityService};
+use cse::embed::Params;
+use cse::funcs::SpectralFn;
+use cse::index::{evaluate_recall, AnnIndex, SimHashIndex, SimHashParams};
+use cse::sparse::{gen, graph};
+use cse::util::args::Args;
+use cse::util::rng::Rng;
+use cse::util::timer::Timer;
+use cse::util::{human_bytes, human_secs};
+
+fn main() {
+    let a = Args::from_env(&[]).unwrap();
+    let n = a.usize("n", 20_000).unwrap();
+    let nq = a.usize("queries", 2_000).unwrap();
+    let topk = a.usize("topk", 10).unwrap();
+    let workers = a.usize("workers", 2).unwrap();
+
+    let mut rng = Rng::new(a.u64("seed", 0).unwrap());
+    let g = gen::sbm_by_degree(&mut rng, n, (n / 150).max(2), 8.0, 0.8);
+    let na = graph::normalized_adjacency(&g.adj);
+    println!("graph: n={n} nnz={}", na.nnz());
+
+    let job = EmbedJob::new(
+        Params { d: 64, order: 80, cascade: 2, ..Params::default() },
+        SpectralFn::Step { c: 0.75 },
+        1,
+    );
+    let t = Timer::start();
+    let res = Coordinator::new(workers).run(&na, &job);
+    println!(
+        "embedding: d={} in {} ({} matvecs)",
+        res.e.cols,
+        human_secs(t.elapsed_secs()),
+        res.matvecs
+    );
+    let mut service = SimilarityService::new(res.e);
+
+    let queries: Vec<Query> =
+        (0..nq).map(|_| Query::TopK { i: rng.below(n), k: topk }).collect();
+    let sample: Vec<usize> = (0..200).map(|_| rng.below(n)).collect();
+
+    // Pass 1: exact scan (no index).
+    let exact_qps = run_pass(&service, &queries, workers, "exact scan");
+
+    // Pass 2: SimHash index at default parameters.
+    let p = SimHashParams::default();
+    let idx = SimHashIndex::build(service.embedding(), p);
+    println!(
+        "\nsimhash build: tables={} bits={} probes={} in {} ({})",
+        p.tables,
+        p.bits,
+        p.probes,
+        human_secs(idx.build_secs),
+        human_bytes(idx.mem_bytes())
+    );
+    let rep = evaluate_recall(service.embedding(), service.norms(), &idx, &sample, topk);
+    service.attach_index(Box::new(idx));
+    let ann_qps = run_pass(&service, &queries, workers, "simhash");
+
+    println!(
+        "\nrecall@{}: mean {:.3}, min {:.3} ({:.1} candidates/query = {:.2}% of rows)",
+        rep.k,
+        rep.mean_recall,
+        rep.min_recall,
+        rep.mean_candidates,
+        100.0 * rep.candidate_fraction
+    );
+    println!("speedup: {:.1}x qps over exact", ann_qps / exact_qps);
+}
+
+/// Measure the workload through the shared harness and print one line.
+/// Returns batched QPS.
+fn run_pass(
+    service: &SimilarityService,
+    queries: &[Query],
+    workers: usize,
+    label: &str,
+) -> f64 {
+    let s = measure_serving(service, queries, workers);
+    println!(
+        "{label:<12} {:>8.0} qps ({workers} workers) | serial p50 {:.0} µs, p99 {:.0} µs | mean candidates {:.1}",
+        s.qps_batch,
+        s.p50_us,
+        s.p99_us,
+        s.mean_candidates,
+    );
+    s.qps_batch
+}

@@ -10,7 +10,7 @@
 //!   CSE_BENCH_N=8000 cargo bench -- runtime   # bigger workload
 //!
 //! Experiments: fig1a fig1b runtime clustering ablation_poly ablation_L
-//!              ablation_jl perf
+//!              ablation_jl perf serving
 //!
 //! Each experiment prints a paper-style table AND writes a TSV under
 //! bench_out/ for external plotting.
@@ -18,23 +18,26 @@
 use std::path::Path;
 
 use cse::cluster::{kmeans, modularity, KmeansParams};
-use cse::coordinator::{Coordinator, EmbedJob};
+use cse::coordinator::service::Query;
+use cse::coordinator::{measure_serving, Coordinator, EmbedJob, ServingSample, SimilarityService};
 use cse::eigen::lanczos::{lanczos, LanczosParams};
 use cse::eigen::nystrom::nystrom;
 use cse::eigen::rsvd::{rsvd, RsvdParams};
 use cse::eigen::simult::simultaneous_iteration;
 use cse::embed::{FastEmbed, Params};
 use cse::funcs::SpectralFn;
+use cse::index::{evaluate_recall, AnnIndex, RecallReport, SimHashIndex, SimHashParams};
 use cse::linalg::Mat;
 use cse::poly::{cascade, chebyshev, legendre, Basis};
 use cse::sparse::{gen, graph, io, Csr};
+use cse::util::json::Json;
 use cse::util::rng::Rng;
 use cse::util::stats;
 use cse::util::timer::Timer;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
-    let all = ["fig1a", "fig1b", "runtime", "clustering", "ablation_poly", "ablation_L", "ablation_jl", "perf"];
+    let all = ["fig1a", "fig1b", "runtime", "clustering", "ablation_poly", "ablation_L", "ablation_jl", "perf", "serving"];
     let selected: Vec<&str> = if args.is_empty() {
         all.to_vec()
     } else {
@@ -58,6 +61,7 @@ fn main() {
             "ablation_L" => ablation_order(),
             "ablation_jl" => ablation_jl(),
             "perf" => perf(),
+            "serving" => serving(),
             _ => unreachable!(),
         }
     }
@@ -475,6 +479,160 @@ fn ablation_jl() {
     io::write_tsv(Path::new("bench_out/ablation_jl.tsv"), &["d", "measured", "bound"], &tsv).unwrap();
     println!("\nshape: measured distortion ~ O(sqrt(log n'/d)), comfortably inside the bound\n\
               -> wrote bench_out/ablation_jl.tsv");
+}
+
+// ------------------------------------------------------------- serving T3
+
+/// One measured serving configuration (rows of the table/TSV/JSON).
+struct ServingRow {
+    n: usize,
+    mode: &'static str,
+    sample: ServingSample,
+    /// Recall report vs the exact scan (None for the exact mode itself).
+    recall: Option<RecallReport>,
+    build_secs: f64,
+}
+
+impl ServingRow {
+    fn recall_at_k(&self) -> f64 {
+        self.recall.as_ref().map_or(1.0, |r| r.mean_recall)
+    }
+}
+
+/// Serving throughput: exact linear scan vs the SimHash ANN index, same
+/// embedding, same top-k workload, n ∈ {10k, 100k}. Reports QPS (serial
+/// and batched), p50/p99 latency, candidate-set sizes and recall@10, and
+/// writes BENCH_serving.json so future PRs can track the QPS trajectory.
+fn serving() {
+    let topk = 10;
+    let workers = 4;
+    let ns = [10_000usize, bench_n(100_000)];
+    let mut rows: Vec<ServingRow> = Vec::new();
+    for &n in &ns {
+        let mut rng = Rng::new(31);
+        let g = gen::sbm_by_degree(&mut rng, n, (n / 200).max(2), 8.0, 0.8);
+        let na = graph::normalized_adjacency(&g.adj);
+        let t = Timer::start();
+        let job = EmbedJob::new(
+            Params { d: 64, order: 60, cascade: 2, ..Params::default() },
+            SpectralFn::Step { c: 0.75 },
+            5,
+        );
+        let res = Coordinator::new(workers).run(&na, &job);
+        println!("\nn={n}: embedded d={} in {:.1}s ({} matvecs)", res.e.cols, t.elapsed_secs(), res.matvecs);
+        let mut service = SimilarityService::new(res.e);
+
+        // Fewer exact queries at large n — the scan is the slow thing
+        // this bench exists to show.
+        let nq_exact = if n > 20_000 { 100 } else { 400 };
+        let nq_ann = 2_000;
+        let sample: Vec<usize> = (0..100).map(|_| rng.below(n)).collect();
+
+        let queries = |count: usize, rng: &mut Rng| -> Vec<Query> {
+            (0..count).map(|_| Query::TopK { i: rng.below(n), k: topk }).collect()
+        };
+
+        let qs = queries(nq_exact, &mut rng);
+        rows.push(ServingRow {
+            n,
+            mode: "exact",
+            sample: measure_serving(&service, &qs, workers),
+            recall: None,
+            build_secs: 0.0,
+        });
+
+        let p = SimHashParams::default();
+        let idx = SimHashIndex::build(service.embedding(), p);
+        let build_secs = idx.build_secs;
+        println!(
+            "simhash build: tables={} bits={} probes={} in {build_secs:.2}s ({} bytes aux)",
+            p.tables,
+            p.bits,
+            p.probes,
+            idx.mem_bytes()
+        );
+        let rep = evaluate_recall(service.embedding(), service.norms(), &idx, &sample, topk);
+        service.attach_index(Box::new(idx));
+        let qs = queries(nq_ann, &mut rng);
+        rows.push(ServingRow {
+            n,
+            mode: "simhash",
+            sample: measure_serving(&service, &qs, workers),
+            recall: Some(rep),
+            build_secs,
+        });
+    }
+
+    println!(
+        "\n{:>7} {:<8} {:>10} {:>10} {:>9} {:>9} {:>10} {:>9}",
+        "n", "mode", "qps(1)", "qps(4)", "p50", "p99", "cands", "recall@10"
+    );
+    let mut tsv = Vec::new();
+    for r in &rows {
+        let s = &r.sample;
+        println!(
+            "{:>7} {:<8} {:>10.0} {:>10.0} {:>7.0}µs {:>7.0}µs {:>10.1} {:>9.3}",
+            r.n, r.mode, s.qps_serial, s.qps_batch, s.p50_us, s.p99_us, s.mean_candidates,
+            r.recall_at_k()
+        );
+        tsv.push(vec![
+            r.n as f64,
+            if r.mode == "exact" { 0.0 } else { 1.0 },
+            s.qps_serial,
+            s.qps_batch,
+            s.p50_us,
+            s.p99_us,
+            s.mean_candidates,
+            r.recall_at_k(),
+            r.build_secs,
+        ]);
+    }
+    io::write_tsv(
+        Path::new("bench_out/serving.tsv"),
+        &["n", "indexed", "qps_1", "qps_batch", "p50_us", "p99_us", "candidates", "recall", "build_secs"],
+        &tsv,
+    )
+    .unwrap();
+
+    // Machine-readable trajectory for future PRs.
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let s = &r.sample;
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("n".to_string(), Json::Num(r.n as f64));
+            m.insert("mode".to_string(), Json::Str(r.mode.to_string()));
+            m.insert("topk".to_string(), Json::Num(topk as f64));
+            m.insert("qps_serial".to_string(), Json::Num(s.qps_serial));
+            m.insert("qps_batch".to_string(), Json::Num(s.qps_batch));
+            m.insert("p50_us".to_string(), Json::Num(s.p50_us));
+            m.insert("p99_us".to_string(), Json::Num(s.p99_us));
+            m.insert("mean_candidates".to_string(), Json::Num(s.mean_candidates));
+            m.insert("build_secs".to_string(), Json::Num(r.build_secs));
+            if let Some(rep) = &r.recall {
+                m.insert("recall".to_string(), rep.to_json());
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving".to_string()));
+    top.insert("workers".to_string(), Json::Num(workers as f64));
+    top.insert("results".to_string(), Json::Arr(json_rows));
+    std::fs::write("BENCH_serving.json", Json::Obj(top).to_string()).unwrap();
+
+    for &n in &ns {
+        let exact = rows.iter().find(|r| r.n == n && r.mode == "exact").unwrap();
+        let ann = rows.iter().find(|r| r.n == n && r.mode == "simhash").unwrap();
+        println!(
+            "n={n}: simhash {:.1}x serial qps over exact, recall@10 {:.3}, scans {:.2}% of rows",
+            ann.sample.qps_serial / exact.sample.qps_serial,
+            ann.recall_at_k(),
+            100.0 * ann.sample.mean_candidates / n as f64
+        );
+    }
+    println!("expected shape: >=5x qps at n=1e5 with recall >=0.9 and <10% of rows scanned");
+    println!("-> wrote bench_out/serving.tsv and BENCH_serving.json");
 }
 
 // ------------------------------------------------------------------ §Perf

@@ -12,6 +12,12 @@ pub struct Metrics {
     /// Cumulative query latency in nanoseconds.
     pub query_ns: AtomicU64,
     pub rows_flushed: AtomicUsize,
+    /// Top-k queries answered (exact or indexed).
+    pub topk_queries: AtomicUsize,
+    /// Cumulative candidate rows exactly scored across top-k queries —
+    /// with an ANN index this is the per-query scan cost the index saved
+    /// the service from paying in full.
+    pub candidates_scanned: AtomicUsize,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -23,6 +29,8 @@ pub struct Snapshot {
     pub queries: usize,
     pub query_ns: u64,
     pub rows_flushed: usize,
+    pub topk_queries: usize,
+    pub candidates_scanned: usize,
 }
 
 impl Metrics {
@@ -39,6 +47,21 @@ impl Metrics {
         self.query_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record one answered top-k query and its candidate-set size.
+    pub fn record_topk(&self, candidates: usize) {
+        self.topk_queries.fetch_add(1, Ordering::Relaxed);
+        self.candidates_scanned.fetch_add(candidates, Ordering::Relaxed);
+    }
+
+    /// Mean candidate rows scored per top-k query (NaN when none ran).
+    pub fn mean_candidates(&self) -> f64 {
+        let q = self.topk_queries.load(Ordering::Relaxed);
+        if q == 0 {
+            return f64::NAN;
+        }
+        self.candidates_scanned.load(Ordering::Relaxed) as f64 / q as f64
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             matvecs: self.matvecs.load(Ordering::Relaxed),
@@ -47,6 +70,8 @@ impl Metrics {
             queries: self.queries.load(Ordering::Relaxed),
             query_ns: self.query_ns.load(Ordering::Relaxed),
             rows_flushed: self.rows_flushed.load(Ordering::Relaxed),
+            topk_queries: self.topk_queries.load(Ordering::Relaxed),
+            candidates_scanned: self.candidates_scanned.load(Ordering::Relaxed),
         }
     }
 
@@ -77,6 +102,18 @@ mod tests {
         assert_eq!(s.shards_done, 1);
         assert_eq!(s.queries, 2);
         assert!((m.mean_query_us() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_candidate_accounting() {
+        let m = Metrics::default();
+        assert!(m.mean_candidates().is_nan());
+        m.record_topk(100);
+        m.record_topk(50);
+        let s = m.snapshot();
+        assert_eq!(s.topk_queries, 2);
+        assert_eq!(s.candidates_scanned, 150);
+        assert!((m.mean_candidates() - 75.0).abs() < 1e-12);
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! * [`service`] — the similarity-query service: owns a finished
 //!   embedding and answers normalized-correlation / top-k queries, the
 //!   "downstream inference" interface (§1) batched behind a queue.
+//!   Top-k optionally routes through a `crate::index` ANN index
+//!   (sublinear candidates + exact re-ranking).
 //! * [`metrics`] — atomic counters/gauges exported by the CLI.
 
 pub mod metrics;
@@ -22,4 +24,4 @@ pub mod scheduler;
 pub mod service;
 
 pub use scheduler::{Coordinator, EmbedJob, JobResult};
-pub use service::{QueryBatch, SimilarityService};
+pub use service::{measure_serving, QueryBatch, ServingSample, SimilarityService};

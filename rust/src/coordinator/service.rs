@@ -4,12 +4,20 @@
 //! this is the serving half of the system: normalized-correlation and
 //! top-k neighbour queries over the rows of Ẽ, batched behind a bounded
 //! queue and executed by a worker pool. Row norms are precomputed once,
-//! so a pairwise query is O(d) and a top-k scan O(n·d).
+//! so a pairwise query is O(d) and an exact top-k scan O(n·d).
+//!
+//! Top-k can optionally be routed through an [`AnnIndex`]
+//! (`crate::index`): sublinear candidate generation + exact re-ranking,
+//! with per-query candidate counts recorded in [`Metrics`]. Without an
+//! index the service keeps the exact scan. Both paths rank by
+//! `(correlation desc, vertex id asc)` so their answers are comparable
+//! element-wise (ties no longer depend on scan order).
 
 use std::sync::Arc;
 
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
+use crate::index::{rerank_top_k, AnnIndex};
 use crate::linalg::Mat;
 
 /// A single query.
@@ -28,17 +36,51 @@ pub enum Answer {
     TopK(Vec<(usize, f64)>),
 }
 
-/// The service: an embedding with precomputed row norms.
+/// The service: an embedding with precomputed row norms and an optional
+/// ANN index accelerating top-k queries.
 pub struct SimilarityService {
     e: Mat,
     norms: Vec<f64>,
+    index: Option<Box<dyn AnnIndex>>,
     pub metrics: Arc<Metrics>,
 }
 
 impl SimilarityService {
     pub fn new(e: Mat) -> Self {
-        let norms = (0..e.rows).map(|i| e.row_norm(i)).collect();
-        SimilarityService { e, norms, metrics: Arc::new(Metrics::default()) }
+        let norms = crate::index::row_norms(&e);
+        SimilarityService { e, norms, index: None, metrics: Arc::new(Metrics::default()) }
+    }
+
+    /// Route `Query::TopK` through `index` (replaces any previous index).
+    pub fn attach_index(&mut self, index: Box<dyn AnnIndex>) {
+        assert_eq!(
+            index.len(),
+            self.e.rows,
+            "index covers {} rows, embedding has {}",
+            index.len(),
+            self.e.rows
+        );
+        self.index = Some(index);
+    }
+
+    /// Drop the index, reverting top-k to the exact scan.
+    pub fn detach_index(&mut self) -> Option<Box<dyn AnnIndex>> {
+        self.index.take()
+    }
+
+    /// Name of the attached index, if any.
+    pub fn index_name(&self) -> Option<&'static str> {
+        self.index.as_deref().map(|i| i.name())
+    }
+
+    /// The served embedding (index builders hash its rows).
+    pub fn embedding(&self) -> &Mat {
+        &self.e
+    }
+
+    /// Precomputed row norms, aligned with [`Self::embedding`].
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
     }
 
     pub fn len(&self) -> usize {
@@ -55,38 +97,30 @@ impl SimilarityService {
 
     /// Normalized correlation of rows i, j (0 for zero rows).
     pub fn corr(&self, i: usize, j: usize) -> f64 {
-        let (ni, nj) = (self.norms[i], self.norms[j]);
-        if ni < 1e-300 || nj < 1e-300 {
-            return 0.0;
-        }
-        self.e.row_dot(i, j) / (ni * nj)
+        crate::index::row_corr(&self.e, &self.norms, i, j)
     }
 
-    /// Top-k most correlated vertices to `i` (linear scan + bounded heap).
+    /// Exact top-k most correlated vertices to `i` (linear scan), ranked
+    /// by `(correlation desc, id asc)`. This is the ground truth every
+    /// index is measured against.
     pub fn top_k(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
-        use std::cmp::Ordering;
-        let mut heap: Vec<(usize, f64)> = Vec::with_capacity(k + 1); // min at end
-        for j in 0..self.e.rows {
-            if j == i {
-                continue;
+        rerank_top_k(&self.e, &self.norms, i, k, 0..self.e.rows)
+    }
+
+    /// Top-k through the attached index (exact scan when none), with
+    /// candidate accounting.
+    fn top_k_routed(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        match &self.index {
+            Some(idx) => {
+                let r = idx.top_k(&self.e, &self.norms, i, k);
+                self.metrics.record_topk(r.candidates);
+                r.hits
             }
-            let c = self.corr(i, j);
-            if heap.len() < k {
-                heap.push((j, c));
-                heap.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal));
-            } else if let Some(last) = heap.last() {
-                if c > last.1 {
-                    heap.pop();
-                    let pos = heap
-                        .binary_search_by(|p| {
-                            c.partial_cmp(&p.1).unwrap_or(Ordering::Equal)
-                        })
-                        .unwrap_or_else(|e| e);
-                    heap.insert(pos, (j, c));
-                }
+            None => {
+                self.metrics.record_topk(self.e.rows.saturating_sub(1));
+                self.top_k(i, k)
             }
         }
-        heap
     }
 
     /// Answer one query, recording latency.
@@ -94,11 +128,55 @@ impl SimilarityService {
         let t = std::time::Instant::now();
         let ans = match *q {
             Query::Corr { i, j } => Answer::Corr(self.corr(i, j)),
-            Query::TopK { i, k } => Answer::TopK(self.top_k(i, k)),
+            Query::TopK { i, k } => Answer::TopK(self.top_k_routed(i, k)),
         };
         self.metrics.record_query(t.elapsed().as_nanos() as u64);
         ans
     }
+}
+
+/// One measured serving pass over a query workload — shared by the
+/// `serving` bench group and `examples/ann_serve.rs` so both report
+/// identically-defined numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingSample {
+    /// Throughput of a single-threaded pass.
+    pub qps_serial: f64,
+    /// Throughput of a [`QueryBatch`] pass with the given worker count.
+    pub qps_batch: f64,
+    /// Per-query latency percentiles from the serial pass.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Mean candidate rows scored per top-k query (metrics delta across
+    /// both passes; NaN-free — 0 when the workload had no top-k queries).
+    pub mean_candidates: f64,
+}
+
+/// Measure `queries` over `service`: a serial pass for latency
+/// percentiles + serial QPS, then a batched pass for pool QPS.
+pub fn measure_serving(
+    service: &SimilarityService,
+    queries: &[Query],
+    workers: usize,
+) -> ServingSample {
+    let before = service.metrics.snapshot();
+    let mut lat_us: Vec<f64> = Vec::with_capacity(queries.len());
+    let t = crate::util::timer::Timer::start();
+    for q in queries {
+        let tq = crate::util::timer::Timer::start();
+        std::hint::black_box(service.answer(q));
+        lat_us.push(tq.elapsed_secs() * 1e6);
+    }
+    let qps_serial = queries.len() as f64 / t.elapsed_secs();
+    let pcts = crate::util::stats::percentiles(&mut lat_us, &[50.0, 99.0]);
+    let t = crate::util::timer::Timer::start();
+    let answers = QueryBatch::run(service, queries, workers);
+    let qps_batch = answers.len() as f64 / t.elapsed_secs();
+    let after = service.metrics.snapshot();
+    let dq = (after.topk_queries - before.topk_queries).max(1);
+    let mean_candidates =
+        (after.candidates_scanned - before.candidates_scanned) as f64 / dq as f64;
+    ServingSample { qps_serial, qps_batch, p50_us: pcts[0], p99_us: pcts[1], mean_candidates }
 }
 
 /// A batch executor: pushes queries through a bounded queue to a worker
@@ -137,6 +215,7 @@ impl QueryBatch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::index::{ExactIndex, SimHashIndex, SimHashParams};
     use crate::util::rng::Rng;
 
     fn service(n: usize, d: usize, seed: u64) -> SimilarityService {
@@ -173,6 +252,22 @@ mod tests {
     }
 
     #[test]
+    fn top_k_tie_break_is_by_vertex_id() {
+        // Rows 1, 2, 3 are positive multiples of each other: corr with
+        // row 0 ties at 1.0, and the lower ids must win in order.
+        let e = Mat::from_rows(&[
+            &[2.0, 0.0],
+            &[1.0, 0.0],
+            &[3.0, 0.0],
+            &[5.0, 0.0],
+            &[0.0, 1.0],
+        ]);
+        let s = SimilarityService::new(e);
+        let got: Vec<usize> = s.top_k(0, 3).iter().map(|p| p.0).collect();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
     fn top_k_k_larger_than_n() {
         let s = service(5, 3, 223);
         let got = s.top_k(0, 100);
@@ -195,6 +290,52 @@ mod tests {
         let batched = QueryBatch::run(&s, &queries, 4);
         assert_eq!(serial, batched);
         assert!(s.metrics.snapshot().queries >= 60);
+    }
+
+    #[test]
+    fn exact_index_routing_matches_scan_and_counts_candidates() {
+        let mut s = service(60, 5, 225);
+        let want: Vec<Answer> =
+            (0..10).map(|i| Answer::TopK(s.top_k(i, 4))).collect();
+        s.attach_index(Box::new(ExactIndex::new(60)));
+        assert_eq!(s.index_name(), Some("exact"));
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(&s.answer(&Query::TopK { i, k: 4 }), w);
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.topk_queries, 10);
+        assert_eq!(snap.candidates_scanned, 10 * 59);
+    }
+
+    #[test]
+    fn simhash_full_probe_routing_equals_exact() {
+        let mut s = service(48, 6, 226);
+        let want: Vec<Vec<(usize, f64)>> = (0..48).map(|i| s.top_k(i, 5)).collect();
+        let idx = SimHashIndex::build(
+            s.embedding(),
+            SimHashParams { tables: 1, bits: 4, probes: 1 << 4, seed: 2 },
+        );
+        s.attach_index(Box::new(idx));
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(s.answer(&Query::TopK { i, k: 5 }), Answer::TopK(w.clone()));
+        }
+        // Indexed path recorded its (full-coverage) candidate sets.
+        assert_eq!(s.metrics.snapshot().candidates_scanned, 48 * 47);
+        assert!(s.detach_index().is_some());
+        assert_eq!(s.index_name(), None);
+    }
+
+    #[test]
+    fn measure_serving_counts_and_sane_stats() {
+        let s = service(30, 4, 227);
+        let queries: Vec<Query> =
+            (0..20).map(|i| Query::TopK { i: i % 30, k: 3 }).collect();
+        let sample = measure_serving(&s, &queries, 2);
+        // Serial + batched pass both ran every query exactly once.
+        assert_eq!(s.metrics.snapshot().topk_queries, 40);
+        assert!((sample.mean_candidates - 29.0).abs() < 1e-12);
+        assert!(sample.qps_serial > 0.0 && sample.qps_batch > 0.0);
+        assert!(sample.p50_us <= sample.p99_us);
     }
 
     #[test]

@@ -1,0 +1,65 @@
+//! The exact-scan baseline behind the [`AnnIndex`] trait.
+//!
+//! This is the previous `SimilarityService::top_k` behaviour — an
+//! `O(n·d)` linear scan with a bounded best-k buffer — expressed as an
+//! index so the service can route every `Query::TopK` through one code
+//! path and so the recall harness has a trivially-correct reference.
+
+use super::{rerank_top_k, AnnIndex, TopK};
+use crate::linalg::Mat;
+
+/// Exact linear-scan "index": no acceleration structure, 100% recall.
+pub struct ExactIndex {
+    n: usize,
+}
+
+impl ExactIndex {
+    pub fn new(n: usize) -> Self {
+        ExactIndex { n }
+    }
+}
+
+impl AnnIndex for ExactIndex {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn top_k(&self, e: &Mat, norms: &[f64], i: usize, k: usize) -> TopK {
+        debug_assert_eq!(e.rows, self.n);
+        TopK {
+            hits: rerank_top_k(e, norms, i, k, 0..self.n),
+            candidates: self.n.saturating_sub(1),
+        }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::row_norms;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_index_matches_direct_rerank() {
+        let mut rng = Rng::new(81);
+        let e = Mat::randn(&mut rng, 40, 6);
+        let norms = row_norms(&e);
+        let idx = ExactIndex::new(40);
+        for &i in &[0, 17, 39] {
+            let got = idx.top_k(&e, &norms, i, 7);
+            assert_eq!(got.hits, rerank_top_k(&e, &norms, i, 7, 0..40));
+            assert_eq!(got.candidates, 39);
+        }
+        assert_eq!(idx.name(), "exact");
+        assert_eq!(idx.len(), 40);
+        assert_eq!(idx.mem_bytes(), 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Sublinear similarity serving: ANN indexes over the embedding rows.
+//!
+//! The embedding exists so that downstream inference can be answered from
+//! pairwise ℓ₂/correlation geometry alone (§1) — but the serving layer
+//! still answered every top-k query with an `O(n·d)` linear scan. This
+//! module continues the paper's compressive idea one layer up: a
+//! sign-random-projection (SimHash) index whose Hamming distance between
+//! ±1 hyperplane signatures estimates exactly the normalized correlation
+//! the embedding was built to preserve, so candidate generation is
+//! sublinear and only a small candidate set is re-ranked exactly.
+//!
+//! * [`AnnIndex`] — the trait the service routes `Query::TopK` through.
+//!   Indexes are pure acceleration structures: they never own the
+//!   embedding, the service passes `(e, norms)` at query time, and the
+//!   exact scan remains the oracle.
+//! * [`exact`] — the exact-scan baseline behind the trait (the previous
+//!   `SimilarityService::top_k` behaviour).
+//! * [`simhash`] — multi-table SimHash LSH: `tables × bits` hyperplane
+//!   signatures, banded bucket maps, multi-probe candidate generation
+//!   (flip low-margin bits), exact correlation re-ranking.
+//! * [`recall`] — recall@k evaluation harness comparing any index against
+//!   the exact scan.
+
+pub mod exact;
+pub mod recall;
+pub mod simhash;
+
+pub use exact::ExactIndex;
+pub use recall::{evaluate_recall, RecallReport};
+pub use simhash::{SimHashIndex, SimHashParams};
+
+use crate::linalg::Mat;
+
+/// An answered top-k query plus how much work it took.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopK {
+    /// `(vertex, correlation)` pairs, best first; ties broken by lower id.
+    pub hits: Vec<(usize, f64)>,
+    /// Rows whose exact correlation was evaluated to produce `hits`.
+    pub candidates: usize,
+}
+
+/// Approximate-nearest-neighbour index over the rows of an embedding.
+pub trait AnnIndex: Send + Sync {
+    /// Short name for CLI / bench reporting (`"exact"`, `"simhash"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Number of indexed rows; must equal the served embedding's rows.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Top-k most correlated rows to row `i` (excluding `i` itself),
+    /// ordered by `(correlation desc, id asc)`.
+    fn top_k(&self, e: &Mat, norms: &[f64], i: usize, k: usize) -> TopK;
+
+    /// Auxiliary memory held by the index (excludes the embedding).
+    fn mem_bytes(&self) -> usize;
+}
+
+/// Normalized correlation of rows `i`, `j` given precomputed norms
+/// (0 for near-zero rows, matching `Mat::row_corr`).
+#[inline]
+pub fn row_corr(e: &Mat, norms: &[f64], i: usize, j: usize) -> f64 {
+    let (ni, nj) = (norms[i], norms[j]);
+    if ni < 1e-300 || nj < 1e-300 {
+        return 0.0;
+    }
+    e.row_dot(i, j) / (ni * nj)
+}
+
+/// Precompute row norms for [`row_corr`] / [`rerank_top_k`].
+pub fn row_norms(e: &Mat) -> Vec<f64> {
+    (0..e.rows).map(|i| e.row_norm(i)).collect()
+}
+
+/// `(id, corr)` ranking order: higher correlation first, ties broken by
+/// lower id — the deterministic order every top-k path in the crate uses,
+/// so exact and indexed answers are comparable element-wise.
+#[inline]
+pub fn ranks_before(a: (usize, f64), b: (usize, f64)) -> bool {
+    a.1 > b.1 || (a.1 == b.1 && a.0 < b.0)
+}
+
+/// Exact-correlation re-ranking shared by every index: scan `candidates`,
+/// keep the `k` best by `(correlation desc, id asc)`. `candidates` must
+/// not repeat ids (dedup before calling) and may include `i` (skipped).
+pub fn rerank_top_k(
+    e: &Mat,
+    norms: &[f64],
+    i: usize,
+    k: usize,
+    candidates: impl IntoIterator<Item = usize>,
+) -> Vec<(usize, f64)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    // Kept sorted best-first; bounded insertion keeps each step O(k).
+    let mut best: Vec<(usize, f64)> = Vec::with_capacity(k.min(e.rows) + 1);
+    for j in candidates {
+        if j == i {
+            continue;
+        }
+        let cand = (j, row_corr(e, norms, i, j));
+        if best.len() == k {
+            if !ranks_before(cand, *best.last().unwrap()) {
+                continue;
+            }
+            best.pop();
+        }
+        let pos = best.partition_point(|&p| ranks_before(p, cand));
+        best.insert(pos, cand);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exhaustive(e: &Mat, norms: &[f64], i: usize, k: usize) -> Vec<(usize, f64)> {
+        let mut all: Vec<(usize, f64)> = (0..e.rows)
+            .filter(|&j| j != i)
+            .map(|j| (j, row_corr(e, norms, i, j)))
+            .collect();
+        all.sort_by(|&a, &b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn rerank_matches_exhaustive_sort() {
+        let mut rng = Rng::new(71);
+        let e = Mat::randn(&mut rng, 60, 5);
+        let norms = row_norms(&e);
+        for &i in &[0, 13, 59] {
+            for &k in &[1, 4, 10, 59, 80] {
+                let got = rerank_top_k(&e, &norms, i, k, 0..e.rows);
+                assert_eq!(got, exhaustive(&e, &norms, i, k), "i={i} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn rerank_breaks_ties_by_id() {
+        // Duplicate rows → exact correlation ties; lower id must win.
+        let e = Mat::from_rows(&[
+            &[1.0, 0.0],
+            &[2.0, 0.0],
+            &[3.0, 0.0],
+            &[0.0, 1.0],
+        ]);
+        let norms = row_norms(&e);
+        let got = rerank_top_k(&e, &norms, 0, 2, 0..4);
+        assert_eq!(got.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1, 2]);
+        // Same query with candidates in reverse order: identical answer.
+        let rev = rerank_top_k(&e, &norms, 0, 2, (0..4).rev());
+        assert_eq!(got, rev);
+    }
+
+    #[test]
+    fn rerank_k_zero_and_k_large() {
+        let mut rng = Rng::new(72);
+        let e = Mat::randn(&mut rng, 5, 3);
+        let norms = row_norms(&e);
+        assert!(rerank_top_k(&e, &norms, 0, 0, 0..5).is_empty());
+        assert_eq!(rerank_top_k(&e, &norms, 0, 100, 0..5).len(), 4);
+    }
+
+    #[test]
+    fn row_corr_matches_mat() {
+        let mut rng = Rng::new(73);
+        let e = Mat::randn(&mut rng, 12, 4);
+        let norms = row_norms(&e);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((row_corr(&e, &norms, i, j) - e.row_corr(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Recall@k evaluation: any [`AnnIndex`] against the exact scan.
+//!
+//! Recall@k is the fraction of the exact top-k a query's indexed answer
+//! recovers, averaged over query vertices — the standard ANN quality
+//! metric, paired here with the mean candidate-set size so the
+//! recall/work trade-off is visible in one report (CLI `cse serve
+//! --index`, bench group `serving`).
+
+use super::{rerank_top_k, AnnIndex};
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+/// Aggregate recall/work statistics over a query sample.
+#[derive(Clone, Debug)]
+pub struct RecallReport {
+    pub k: usize,
+    pub queries: usize,
+    /// Mean over queries of |indexed ∩ exact| / |exact|.
+    pub mean_recall: f64,
+    /// Worst single-query recall in the sample.
+    pub min_recall: f64,
+    /// Mean exactly-scored candidate count per query.
+    pub mean_candidates: f64,
+    /// `mean_candidates / n` — fraction of rows scanned per query.
+    pub candidate_fraction: f64,
+}
+
+impl RecallReport {
+    /// Machine-readable form (reused by the bench JSON emitter).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("k".into(), Json::Num(self.k as f64));
+        m.insert("queries".into(), Json::Num(self.queries as f64));
+        m.insert("mean_recall".into(), Json::Num(self.mean_recall));
+        m.insert("min_recall".into(), Json::Num(self.min_recall));
+        m.insert("mean_candidates".into(), Json::Num(self.mean_candidates));
+        m.insert("candidate_fraction".into(), Json::Num(self.candidate_fraction));
+        Json::Obj(m)
+    }
+}
+
+/// Evaluate `index` on `queries` (vertex ids) at cutoff `k`, comparing
+/// against a fresh exact scan per query. Empty `queries` yields NaN
+/// recalls and zero counts.
+pub fn evaluate_recall(
+    e: &Mat,
+    norms: &[f64],
+    index: &dyn AnnIndex,
+    queries: &[usize],
+    k: usize,
+) -> RecallReport {
+    assert_eq!(index.len(), e.rows, "index built over a different embedding");
+    let mut recalls = Vec::with_capacity(queries.len());
+    let mut cand_total = 0usize;
+    for &i in queries {
+        let exact = rerank_top_k(e, norms, i, k, 0..e.rows);
+        let got = index.top_k(e, norms, i, k);
+        cand_total += got.candidates;
+        if exact.is_empty() {
+            recalls.push(1.0);
+            continue;
+        }
+        let hit = got
+            .hits
+            .iter()
+            .filter(|(j, _)| exact.iter().any(|(ej, _)| ej == j))
+            .count();
+        recalls.push(hit as f64 / exact.len() as f64);
+    }
+    let mean_candidates = if queries.is_empty() {
+        0.0
+    } else {
+        cand_total as f64 / queries.len() as f64
+    };
+    RecallReport {
+        k,
+        queries: queries.len(),
+        mean_recall: crate::util::stats::mean(&recalls),
+        min_recall: recalls.iter().cloned().fold(f64::NAN, f64::min),
+        mean_candidates,
+        candidate_fraction: if e.rows == 0 { 0.0 } else { mean_candidates / e.rows as f64 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{row_norms, ExactIndex, SimHashIndex, SimHashParams};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_index_has_unit_recall() {
+        let mut rng = Rng::new(101);
+        let e = Mat::randn(&mut rng, 80, 6);
+        let norms = row_norms(&e);
+        let idx = ExactIndex::new(80);
+        let queries: Vec<usize> = (0..20).collect();
+        let rep = evaluate_recall(&e, &norms, &idx, &queries, 5);
+        assert_eq!(rep.mean_recall, 1.0);
+        assert_eq!(rep.min_recall, 1.0);
+        assert_eq!(rep.queries, 20);
+        assert!((rep.mean_candidates - 79.0).abs() < 1e-12);
+        assert!((rep.candidate_fraction - 79.0 / 80.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_probe_simhash_has_unit_recall() {
+        let mut rng = Rng::new(102);
+        let e = Mat::randn(&mut rng, 50, 5);
+        let norms = row_norms(&e);
+        let idx = SimHashIndex::build(
+            &e,
+            SimHashParams { tables: 2, bits: 4, probes: 1 << 4, seed: 9 },
+        );
+        let queries: Vec<usize> = (0..50).step_by(5).collect();
+        let rep = evaluate_recall(&e, &norms, &idx, &queries, 8);
+        assert_eq!(rep.mean_recall, 1.0, "{rep:?}");
+    }
+
+    #[test]
+    fn report_serializes_to_json() {
+        let rep = RecallReport {
+            k: 10,
+            queries: 4,
+            mean_recall: 0.95,
+            min_recall: 0.8,
+            mean_candidates: 123.5,
+            candidate_fraction: 0.01235,
+        };
+        let j = rep.to_json();
+        assert_eq!(j.get("k").and_then(|v| v.as_usize()), Some(10));
+        assert_eq!(j.get("mean_recall").and_then(|v| v.as_f64()), Some(0.95));
+        let roundtrip = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(roundtrip.get("queries").and_then(|v| v.as_usize()), Some(4));
+    }
+}

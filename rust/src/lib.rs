@@ -10,9 +10,10 @@
 //! ## Layers
 //! * **Rust (this crate)** — the scalable runtime: sparse operators,
 //!   the FastEmbed driver, eigensolver baselines, K-means/modularity,
-//!   the column-shard coordinator and the similarity-query service, and a
-//!   PJRT runtime that executes JAX/Pallas-authored HLO artifacts for
-//!   dense tiles.
+//!   the column-shard coordinator and the similarity-query service, the
+//!   [`index`] ANN layer (SimHash LSH + exact baseline) that makes top-k
+//!   serving sublinear, and a PJRT runtime that executes JAX/Pallas-
+//!   authored HLO artifacts for dense tiles (`pjrt` feature).
 //! * **Python (`python/compile`)** — build-time only: Pallas kernels
 //!   (L1) and JAX graphs (L2), AOT-lowered to `artifacts/*.hlo.txt`.
 //!
@@ -39,6 +40,7 @@ pub mod coordinator;
 pub mod eigen;
 pub mod embed;
 pub mod funcs;
+pub mod index;
 pub mod linalg;
 pub mod poly;
 pub mod runtime;

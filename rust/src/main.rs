@@ -22,6 +22,7 @@ use cse::eigen::rsvd::{rsvd, RsvdParams};
 use cse::eigen::simult::simultaneous_iteration;
 use cse::embed::Params;
 use cse::funcs::SpectralFn;
+use cse::index::{evaluate_recall, AnnIndex, ExactIndex, SimHashIndex, SimHashParams};
 use cse::poly::Basis;
 use cse::sparse::{gen, graph, io, Csr};
 use cse::util::args::{usage, Args, Opt};
@@ -277,6 +278,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "queries", help: "number of random queries", default: Some("1000") },
             Opt { name: "topk", help: "k for top-k queries", default: Some("10") },
             Opt { name: "workers", help: "service worker threads", default: Some("2") },
+            Opt { name: "index", help: "top-k index: none|exact|simhash", default: Some("none") },
+            Opt { name: "tables", help: "simhash: hash tables", default: Some("8") },
+            Opt { name: "bits", help: "simhash: signature bits per table", default: Some("12") },
+            Opt { name: "probes", help: "simhash: buckets probed per table", default: Some("16") },
+            Opt {
+                name: "recall-queries",
+                help: "sampled top-k queries for the recall@k report (0 = skip)",
+                default: Some("50"),
+            },
         ]);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
         return Ok(());
@@ -285,7 +295,37 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     let na = graph::normalized_adjacency(&adj);
     let job = EmbedJob::new(embed_params(&a)?, SpectralFn::Step { c: a.f64("c", 0.7)? }, a.u64("seed", 0)?);
     let res = Coordinator::new(a.usize("workers", 2)?).run(&na, &job);
-    let service = SimilarityService::new(res.e);
+    let mut service = SimilarityService::new(res.e);
+
+    // Optional ANN index over the embedding rows, with a build report.
+    let defaults = SimHashParams::default();
+    match a.get_or("index", "none") {
+        "none" => {}
+        "exact" => {
+            service.attach_index(Box::new(ExactIndex::new(service.len())));
+            println!("index: exact scan behind the AnnIndex trait (baseline)");
+        }
+        "simhash" => {
+            let p = SimHashParams {
+                tables: a.usize("tables", defaults.tables)?,
+                bits: a.usize("bits", defaults.bits)?,
+                probes: a.usize("probes", defaults.probes)?,
+                seed: a.u64("seed", 0)? ^ defaults.seed,
+            };
+            let idx = SimHashIndex::build(service.embedding(), p);
+            println!(
+                "index: simhash tables={} bits={} probes={} — built in {} ({})",
+                p.tables,
+                p.bits,
+                p.probes,
+                human_secs(idx.build_secs),
+                human_bytes(idx.mem_bytes())
+            );
+            service.attach_index(Box::new(idx));
+        }
+        other => return Err(format!("unknown index '{other}' (none|exact|simhash)")),
+    }
+
     let nq = a.usize("queries", 1000)?;
     let topk = a.usize("topk", 10)?;
     let mut rng = Rng::new(a.u64("seed", 0)? + 7);
@@ -308,6 +348,34 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
         answers.len() as f64 / secs,
         service.metrics.mean_query_us()
     );
+    let snap = service.metrics.snapshot();
+    if snap.topk_queries > 0 {
+        println!(
+            "top-k: {} queries, mean candidate set {:.1} rows ({:.2}% of n={})",
+            snap.topk_queries,
+            service.metrics.mean_candidates(),
+            100.0 * service.metrics.mean_candidates() / service.len().max(1) as f64,
+            service.len()
+        );
+    }
+
+    // Recall@k report: indexed answers against the exact scan.
+    let rq = a.usize("recall-queries", 50)?;
+    if rq > 0 && service.index_name().is_some() && !service.is_empty() {
+        let sample: Vec<usize> = (0..rq).map(|_| rng.below(service.len())).collect();
+        let idx = service.detach_index().unwrap();
+        let rep = evaluate_recall(service.embedding(), service.norms(), idx.as_ref(), &sample, topk);
+        println!(
+            "recall@{}: mean {:.3}, min {:.3} over {} queries ({:.1} candidates/query, {:.2}% of rows)",
+            rep.k,
+            rep.mean_recall,
+            rep.min_recall,
+            rep.queries,
+            rep.mean_candidates,
+            100.0 * rep.candidate_fraction
+        );
+        service.attach_index(idx);
+    }
     Ok(())
 }
 

@@ -14,9 +14,19 @@
 //! serialized protos which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and aot.py).
 
+//!
+//! The artifact registry is always available; the PJRT client and the
+//! tile operators need the vendored `xla` + `anyhow` crate closure and
+//! are gated behind the `pjrt` cargo feature (see Cargo.toml). Without
+//! the feature this module still parses manifests and lists artifacts —
+//! it just cannot execute them.
+
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod ops;
 
 pub use artifacts::Artifacts;
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;

@@ -1,6 +1,9 @@
 //! PJRT integration: load the JAX/Pallas AOT artifacts and verify their
 //! numerics against the native Rust implementations. Requires
-//! `make artifacts` (tests self-skip with a message otherwise).
+//! `make artifacts` (tests self-skip with a message otherwise) and the
+//! `pjrt` cargo feature (the whole file is compiled out without it —
+//! the xla/anyhow closure is not vendored in the offline image).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 use std::sync::Arc;
