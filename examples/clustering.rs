@@ -16,6 +16,7 @@ use cse::eigen::rsvd::{rsvd, RsvdParams};
 use cse::embed::Params;
 use cse::funcs::SpectralFn;
 use cse::linalg::Mat;
+use cse::par::ExecPolicy;
 use cse::sparse::{gen, graph, Csr};
 use cse::util::args::Args;
 use cse::util::rng::Rng;
@@ -33,8 +34,9 @@ fn median_modularity(
     let mut rng = Rng::new(seed);
     let mut mods = Vec::new();
     let mut nmis = Vec::new();
+    let exec = ExecPolicy::auto();
     for _ in 0..restarts {
-        let km = kmeans(e, &KmeansParams { k: kk, max_iters: 25, tol: 1e-5 }, &mut rng);
+        let km = kmeans(e, &KmeansParams { k: kk, max_iters: 25, tol: 1e-5, exec }, &mut rng);
         mods.push(modularity(adj, &km.assignment));
         nmis.push(nmi(&km.assignment, labels));
     }
@@ -53,6 +55,7 @@ fn main() {
     let keep = a.usize("keep", communities).unwrap(); // eigenspace captured compressively
 
     let mut rng = Rng::new(a.u64("seed", 0).unwrap());
+    let exec = ExecPolicy::auto(); // every solver runs on all cores
     println!("== Amazon-analog clustering (paper §5, Table-style comparison) ==");
     // Heterogeneous community strengths (see gen::sbm_hetero docs).
     let g = gen::sbm_hetero(&mut rng, n, communities, 5.0, 18.0, 0.6);
@@ -65,7 +68,7 @@ fn main() {
     // Block method: the community eigenvalues are near-degenerate, which
     // defeats single-vector Krylov; simultaneous iteration captures the
     // whole subspace.
-    let exact = simultaneous_iteration(&na, keep + 8, 100, &mut rng);
+    let exact = simultaneous_iteration(&na, keep + 8, 100, &mut rng, &exec);
     let t_exact_full = t.elapsed_secs();
     let lam_keep = exact.values[keep - 1];
     println!(
@@ -80,7 +83,7 @@ fn main() {
     // --- Row 1: compressive embedding capturing `keep` eigenvectors in d dims.
     let t = Timer::start();
     let job = EmbedJob::new(
-        Params { d, order, cascade: 2, ..Params::default() },
+        Params { d, order, cascade: 2, exec, ..Params::default() },
         SpectralFn::Step { c: lam_keep - 1e-3 },
         7,
     );
@@ -90,20 +93,20 @@ fn main() {
 
     // --- Row 2: exact spectral embedding with d eigenvectors (same K-means dim).
     let t = Timer::start();
-    let exact_d = simultaneous_iteration(&na, d, 100, &mut rng);
+    let exact_d = simultaneous_iteration(&na, d, 100, &mut rng, &exec);
     let e_d = exact_d.vectors.clone();
     let t_ed = t.elapsed_secs();
     let (q_ed, nmi_ed) = median_modularity(&na, &e_d, kk, restarts, &labels, 2);
 
     // --- Row 3: exact with 1.5d eigenvectors (paper's 120 vs 80).
     let t = Timer::start();
-    let exact_15 = simultaneous_iteration(&na, 3 * d / 2, 100, &mut rng);
+    let exact_15 = simultaneous_iteration(&na, 3 * d / 2, 100, &mut rng, &exec);
     let t_e15 = t.elapsed_secs();
     let (q_e15, nmi_e15) = median_modularity(&na, &exact_15.vectors, kk, restarts, &labels, 3);
 
     // --- Row 4: randomized SVD with d vectors (q=5, l=10 per the paper).
     let t = Timer::start();
-    let rs = rsvd(&na, d, &RsvdParams::default(), &mut rng);
+    let rs = rsvd(&na, d, &RsvdParams { exec, ..Default::default() }, &mut rng);
     let t_rs = t.elapsed_secs();
     let (q_rs, nmi_rs) = median_modularity(&na, &rs.vectors, kk, restarts, &labels, 4);
 

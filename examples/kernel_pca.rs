@@ -18,6 +18,7 @@ use cse::embed::norm::{spectral_norm, NormEstParams};
 use cse::embed::op::{DenseOp, ScaledOp};
 use cse::embed::omega::rademacher_omega;
 use cse::funcs::SpectralFn;
+use cse::par::ExecPolicy;
 use cse::linalg::Mat;
 use cse::poly::Basis;
 use cse::runtime::ops::GaussKernelOp;
@@ -53,10 +54,12 @@ fn main() -> anyhow::Result<()> {
 
     // §3.4 rescaling: estimate ||K|| with power iteration ON THE ARTIFACT.
     let t = Timer::start();
+    let exec = ExecPolicy::serial(); // PJRT owns device parallelism
     let kappa = spectral_norm(
         &op,
         &NormEstParams { iters: 20, vectors: Some(d), safety: 1.01 },
         &mut rng,
+        &exec,
     );
     println!("||K|| estimate via PJRT power iteration: {kappa:.3} ({:.2}s)", t.elapsed_secs());
 
@@ -72,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     let mut mv = 0;
     let mut e_pjrt = omega.clone();
     for _ in 0..plan.b {
-        e_pjrt = apply_series(&scaled, &plan.stage, &e_pjrt, &mut mv);
+        e_pjrt = apply_series(&scaled, &plan.stage, &e_pjrt, &mut mv, &exec);
     }
     println!(
         "kernel-PCA embedding on the AOT path: {} col-matvecs in {:.2}s",
@@ -94,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     let mut mv2 = 0;
     let mut e_native = omega.clone();
     for _ in 0..plan.b {
-        e_native = apply_series(&scaled_native, &plan.stage, &e_native, &mut mv2);
+        e_native = apply_series(&scaled_native, &plan.stage, &e_native, &mut mv2, &exec);
     }
     println!(
         "native dense oracle: {:.2}s, max |pjrt - native| = {:.2e}",

@@ -10,7 +10,7 @@
 //!   CSE_BENCH_N=8000 cargo bench -- runtime   # bigger workload
 //!
 //! Experiments: fig1a fig1b runtime clustering ablation_poly ablation_L
-//!              ablation_jl perf serving
+//!              ablation_jl perf serving kernels
 //!
 //! Each experiment prints a paper-style table AND writes a TSV under
 //! bench_out/ for external plotting.
@@ -28,6 +28,7 @@ use cse::embed::{FastEmbed, Params};
 use cse::funcs::SpectralFn;
 use cse::index::{evaluate_recall, AnnIndex, RecallReport, SimHashIndex, SimHashParams};
 use cse::linalg::Mat;
+use cse::par::ExecPolicy;
 use cse::poly::{cascade, chebyshev, legendre, Basis};
 use cse::sparse::{gen, graph, io, Csr};
 use cse::util::json::Json;
@@ -37,7 +38,10 @@ use cse::util::timer::Timer;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
-    let all = ["fig1a", "fig1b", "runtime", "clustering", "ablation_poly", "ablation_L", "ablation_jl", "perf", "serving"];
+    let all = [
+        "fig1a", "fig1b", "runtime", "clustering", "ablation_poly", "ablation_L", "ablation_jl",
+        "perf", "serving", "kernels",
+    ];
     let selected: Vec<&str> = if args.is_empty() {
         all.to_vec()
     } else {
@@ -62,6 +66,7 @@ fn main() {
             "ablation_jl" => ablation_jl(),
             "perf" => perf(),
             "serving" => serving(),
+            "kernels" => kernels(),
             _ => unreachable!(),
         }
     }
@@ -89,7 +94,7 @@ fn dblp_analog_deg(n: usize, k: usize, deg_in: f64, deg_out: f64, rng: &mut Rng)
     // iteration) captures the whole subspace natively — and for the
     // reference *embedding* any orthonormal basis of that subspace gives
     // the same pairwise geometry.
-    let pe = simultaneous_iteration(&na, k, 100, rng);
+    let pe = simultaneous_iteration(&na, k, 100, rng, &ExecPolicy::serial());
     let c = pe.values[k - 1] - 1e-4;
     let e_exact = pe.vectors.clone();
     DblpAnalog { na, e_exact, c }
@@ -262,7 +267,7 @@ fn runtime_table() {
     rows.push((format!("Lanczos full-reorth (k={k})"), t.elapsed_secs(), pe.matvecs));
 
     let t = Timer::start();
-    let si = simultaneous_iteration(&na, k, 40, &mut rng);
+    let si = simultaneous_iteration(&na, k, 40, &mut rng, &ExecPolicy::serial());
     rows.push((format!("simultaneous iteration (k={k})"), t.elapsed_secs(), si.matvecs));
 
     let t = Timer::start();
@@ -310,14 +315,20 @@ fn clustering_table() {
     println!("Amazon-analog: n={n} communities={communities} nnz={}", na.nnz());
 
     // Block method: the `keep` community eigenvalues are near-degenerate.
-    let probe = simultaneous_iteration(&na, keep + 8, 100, &mut rng);
+    let probe = simultaneous_iteration(&na, keep + 8, 100, &mut rng, &ExecPolicy::serial());
     let c = probe.values[keep - 1] - 1e-3;
 
     let med_mod = |e: &Mat, seed: u64| -> f64 {
         let mut r = Rng::new(seed);
         let mods: Vec<f64> = (0..restarts)
             .map(|_| {
-                let km = kmeans(e, &KmeansParams { k: communities, max_iters: 25, tol: 1e-5 }, &mut r);
+                let p = KmeansParams {
+                    k: communities,
+                    max_iters: 25,
+                    tol: 1e-5,
+                    ..Default::default()
+                };
+                let km = kmeans(e, &p, &mut r);
                 modularity(&g.adj, &km.assignment)
             })
             .collect();
@@ -342,11 +353,11 @@ fn clustering_table() {
     report(&format!("FastEmbed d={d} capturing {keep} eigs"), t_fe, med_mod(&res.e, 21), 0);
 
     let t = Timer::start();
-    let e80 = simultaneous_iteration(&na, d, 100, &mut rng);
+    let e80 = simultaneous_iteration(&na, d, 100, &mut rng, &ExecPolicy::serial());
     report(&format!("exact {d} eigenvectors"), t.elapsed_secs(), med_mod(&e80.vectors, 22), 1);
 
     let t = Timer::start();
-    let e120 = simultaneous_iteration(&na, 3 * d / 2, 100, &mut rng);
+    let e120 = simultaneous_iteration(&na, 3 * d / 2, 100, &mut rng, &ExecPolicy::serial());
     report(
         &format!("exact {} eigenvectors (K-means on {})", 3 * d / 2, 3 * d / 2),
         t.elapsed_secs(),
@@ -635,6 +646,145 @@ fn serving() {
     println!("-> wrote bench_out/serving.tsv and BENCH_serving.json");
 }
 
+// -------------------------------------------------------------- kernels K1
+
+/// Parallel-execution-layer bench: SpMM GFLOP/s and embed wall-clock at
+/// 1/2/4 threads on the n=100k synthetic serving graph, plus the
+/// pre-refactor serial SpMM loop inlined as a reference so regressions of
+/// the 1-thread path are visible. Writes bench_out/kernels.tsv and
+/// BENCH_kernels.json for trend tracking.
+fn kernels() {
+    let n = bench_n(100_000);
+    let d = 64;
+    let reps = 5;
+    let thread_counts = [1usize, 2, 4];
+    let mut rng = Rng::new(9);
+    let g = gen::sbm_by_degree(&mut rng, n, (n / 200).max(2), 8.0, 0.8);
+    let na = graph::normalized_adjacency(&g.adj);
+    let x = Mat::randn(&mut rng, n, d);
+    let nnz = na.nnz();
+    let flops = (2 * nnz * d) as f64;
+    println!(
+        "SpMM workload: n={n} nnz={nnz} d={d} | host parallelism = {}",
+        std::thread::available_parallelism().map_or(0, |c| c.get())
+    );
+
+    // The pre-refactor serial kernel, verbatim: whole-matrix row loop,
+    // no partitioning. The threads=1 path must stay within ~5% of this.
+    let mut y_ref = Mat::zeros(n, d);
+    let reference = cse::util::timer::bench(reps, || {
+        y_ref.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..na.rows {
+            let (idx, val) = na.row(i);
+            let yrow = &mut y_ref.data[i * d..(i + 1) * d];
+            for (&j, &aij) in idx.iter().zip(val) {
+                let xrow = &x.data[j as usize * d..(j as usize + 1) * d];
+                for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += aij * xv;
+                }
+            }
+        }
+    });
+
+    struct KernelRow {
+        threads: usize,
+        spmm_secs: f64,
+        embed_secs: f64,
+    }
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut check = Mat::zeros(n, d);
+    na.spmm_into(&x, &mut check);
+    for &threads in &thread_counts {
+        let exec = ExecPolicy::with_threads(threads);
+        let mut y = Mat::zeros(n, d);
+        let spmm = cse::util::timer::bench(reps, || na.spmm_into_with(&x, &mut y, &exec));
+        assert_eq!(y.data, check.data, "threaded SpMM must be bitwise-identical");
+
+        let fe = FastEmbed::new(Params { d: 32, order: 60, cascade: 2, exec, ..Params::default() });
+        let mut rng_e = Rng::new(77);
+        let embed = cse::util::timer::bench(1, || {
+            fe.embed(&na, &SpectralFn::Step { c: 0.75 }, &mut rng_e)
+        });
+        rows.push(KernelRow { threads, spmm_secs: spmm.mean_secs, embed_secs: embed.mean_secs });
+    }
+
+    let base_spmm = rows[0].spmm_secs;
+    let base_embed = rows[0].embed_secs;
+    println!(
+        "\n{:<28} {:>10} {:>10} {:>9} {:>10} {:>9}",
+        "variant", "spmm", "GFLOP/s", "speedup", "embed", "speedup"
+    );
+    println!(
+        "{:<28} {:>8.1}ms {:>10.2} {:>9} {:>10} {:>9}",
+        "reference (pre-refactor)",
+        reference.mean_secs * 1e3,
+        flops / reference.mean_secs / 1e9,
+        "-",
+        "-",
+        "-"
+    );
+    let mut tsv = Vec::new();
+    for r in &rows {
+        println!(
+            "{:<28} {:>8.1}ms {:>10.2} {:>8.2}x {:>9.2}s {:>8.2}x",
+            format!("{} thread(s)", r.threads),
+            r.spmm_secs * 1e3,
+            flops / r.spmm_secs / 1e9,
+            base_spmm / r.spmm_secs,
+            r.embed_secs,
+            base_embed / r.embed_secs
+        );
+        tsv.push(vec![
+            r.threads as f64,
+            r.spmm_secs,
+            flops / r.spmm_secs / 1e9,
+            base_spmm / r.spmm_secs,
+            r.embed_secs,
+            base_embed / r.embed_secs,
+        ]);
+    }
+    let serial_ratio = rows[0].spmm_secs / reference.mean_secs;
+    println!(
+        "\n1-thread vs pre-refactor reference: {serial_ratio:.3}x (want <= 1.05); \
+         4-thread SpMM speedup: {:.2}x",
+        base_spmm / rows.last().unwrap().spmm_secs
+    );
+    io::write_tsv(
+        Path::new("bench_out/kernels.tsv"),
+        &["threads", "spmm_secs", "spmm_gflops", "spmm_speedup", "embed_secs", "embed_speedup"],
+        &tsv,
+    )
+    .unwrap();
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("threads".to_string(), Json::Num(r.threads as f64));
+            m.insert("spmm_secs".to_string(), Json::Num(r.spmm_secs));
+            m.insert("spmm_gflops".to_string(), Json::Num(flops / r.spmm_secs / 1e9));
+            m.insert("spmm_speedup_vs_1".to_string(), Json::Num(base_spmm / r.spmm_secs));
+            m.insert("embed_secs".to_string(), Json::Num(r.embed_secs));
+            m.insert("embed_speedup_vs_1".to_string(), Json::Num(base_embed / r.embed_secs));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("kernels".to_string()));
+    top.insert("n".to_string(), Json::Num(n as f64));
+    top.insert("nnz".to_string(), Json::Num(nnz as f64));
+    top.insert("d".to_string(), Json::Num(d as f64));
+    top.insert(
+        "host_threads".to_string(),
+        Json::Num(std::thread::available_parallelism().map_or(0.0, |c| c.get() as f64)),
+    );
+    top.insert("spmm_reference_secs".to_string(), Json::Num(reference.mean_secs));
+    top.insert("serial_ratio_vs_reference".to_string(), Json::Num(serial_ratio));
+    top.insert("results".to_string(), Json::Arr(json_rows));
+    std::fs::write("BENCH_kernels.json", Json::Obj(top).to_string()).unwrap();
+    println!("-> wrote bench_out/kernels.tsv and BENCH_kernels.json");
+}
+
 // ------------------------------------------------------------------ §Perf
 
 /// §Perf: the SpMM hot path. Compares the naive per-column matvec loop
@@ -696,7 +846,7 @@ fn perf() {
     let series = legendre::step_coeffs(60, 0.8);
     let e2e = cse::util::timer::bench(3, || {
         let mut mv = 0;
-        cse::embed::fastembed::apply_series(&na, &series, &x, &mut mv)
+        cse::embed::fastembed::apply_series(&na, &series, &x, &mut mv, &ExecPolicy::serial())
     });
     println!(
         "\nfull order-60 recursion over d={d}: {:.1}ms ({:.2} GFLOP/s sustained)",

@@ -3,7 +3,13 @@
 //! median modularity reported).
 
 use crate::linalg::Mat;
+use crate::par::{self, ExecPolicy};
 use crate::util::rng::Rng;
+
+/// Rows per chunk of the parallel assignment step. Fixed (not derived
+/// from the thread count) so the chunk-folded cost reduction — and with
+/// it the early-stop iteration count — is identical at any thread count.
+const ASSIGN_ROWS_PER_CHUNK: usize = 1024;
 
 #[derive(Clone, Copy, Debug)]
 pub struct KmeansParams {
@@ -11,11 +17,14 @@ pub struct KmeansParams {
     pub max_iters: usize,
     /// Relative cost-improvement threshold for early stop.
     pub tol: f64,
+    /// Threading for the assignment step (the dominant n·k·d cost).
+    /// Assignments and cost are thread-count-independent.
+    pub exec: ExecPolicy,
 }
 
 impl Default for KmeansParams {
     fn default() -> Self {
-        KmeansParams { k: 8, max_iters: 50, tol: 1e-6 }
+        KmeansParams { k: 8, max_iters: 50, tol: 1e-6, exec: ExecPolicy::serial() }
     }
 }
 
@@ -38,13 +47,8 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
 
     for it in 0..params.max_iters {
         iters = it + 1;
-        // Assign.
-        let mut cost = 0.0;
-        for i in 0..n {
-            let (best, d2) = nearest(x.row(i), &centroids);
-            assignment[i] = best;
-            cost += d2;
-        }
+        // Assign (parallel over fixed row chunks).
+        let cost = assign_rows(x, &centroids, &mut assignment, &params.exec);
         // Update.
         let mut counts = vec![0usize; k];
         let mut sums = Mat::zeros(k, dim);
@@ -80,13 +84,32 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
         prev_cost = cost;
     }
     // Final assignment/cost against the last centroids.
-    let mut cost = 0.0;
-    for i in 0..n {
-        let (best, d2) = nearest(x.row(i), &centroids);
-        assignment[i] = best;
-        cost += d2;
-    }
+    let cost = assign_rows(x, &centroids, &mut assignment, &params.exec);
     KmeansResult { assignment, centroids, cost, iters }
+}
+
+/// The assignment step: nearest centroid per row of `x`, written into
+/// `assignment`, returning the summed squared distance. Each chunk's
+/// rows are processed exactly as in the serial loop; the total cost is
+/// folded over chunks in chunk order, so the result does not depend on
+/// `exec.threads`.
+fn assign_rows(x: &Mat, centroids: &Mat, assignment: &mut [usize], exec: &ExecPolicy) -> f64 {
+    let n = x.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    let ranges = par::even_ranges(n, par::fixed_chunks(n, ASSIGN_ROWS_PER_CHUNK));
+    exec.map_chunks(&ranges, assignment, 1, |_, rows, out| {
+        let mut chunk_cost = 0.0;
+        for (slot, i) in out.iter_mut().zip(rows) {
+            let (best, d2) = nearest(x.row(i), centroids);
+            *slot = best;
+            chunk_cost += d2;
+        }
+        chunk_cost
+    })
+    .iter()
+    .sum()
 }
 
 fn kmeanspp_init(x: &Mat, k: usize, rng: &mut Rng) -> Mat {
@@ -209,6 +232,30 @@ mod tests {
         let x = Mat::randn(&mut rng, 5, 2);
         let res = kmeans(&x, &KmeansParams { k: 50, ..Default::default() }, &mut rng);
         assert!(res.cost < 1e-18, "each point its own cluster, cost {}", res.cost);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // n > ASSIGN_ROWS_PER_CHUNK so the cost reduction really folds
+        // over several chunks.
+        let x = Mat::randn(&mut Rng::new(8), 3000, 4);
+        let run = |threads: usize| {
+            let mut rng = Rng::new(9);
+            let p = KmeansParams {
+                k: 6,
+                exec: ExecPolicy::with_threads(threads),
+                ..Default::default()
+            };
+            kmeans(&x, &p, &mut rng)
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let got = run(threads);
+            assert_eq!(base.assignment, got.assignment, "{threads} threads");
+            assert_eq!(base.cost.to_bits(), got.cost.to_bits(), "{threads} threads");
+            assert_eq!(base.iters, got.iters, "{threads} threads");
+            assert_eq!(base.centroids.data, got.centroids.data, "{threads} threads");
+        }
     }
 
     #[test]

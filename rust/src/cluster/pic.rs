@@ -8,6 +8,7 @@
 use super::kmeans::{kmeans, KmeansParams, KmeansResult};
 use crate::embed::op::Operator;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::util::rng::Rng;
 
 /// Parameters for [`pic`].
@@ -18,11 +19,18 @@ pub struct PicParams {
     /// Power iterations (stopped early by design).
     pub iters: usize,
     pub kmeans: KmeansParams,
+    /// Threading for the power-iteration block products.
+    pub exec: ExecPolicy,
 }
 
 impl Default for PicParams {
     fn default() -> Self {
-        PicParams { vectors: 4, iters: 30, kmeans: KmeansParams::default() }
+        PicParams {
+            vectors: 4,
+            iters: 30,
+            kmeans: KmeansParams::default(),
+            exec: ExecPolicy::serial(),
+        }
     }
 }
 
@@ -39,7 +47,7 @@ pub fn pic(op: &(impl Operator + ?Sized), params: &PicParams, rng: &mut Rng) -> 
     normalize_cols(&mut v);
     let mut w = Mat::zeros(n, d);
     for _ in 0..params.iters {
-        op.apply_into(&v, &mut w);
+        op.apply_into(&v, &mut w, &params.exec);
         std::mem::swap(&mut v, &mut w);
         normalize_cols(&mut v);
     }
@@ -74,6 +82,7 @@ mod tests {
             vectors: 6,
             iters: 25,
             kmeans: KmeansParams { k: 4, ..Default::default() },
+            ..Default::default()
         };
         let (km, emb) = pic(&rw, &params, &mut rng);
         assert_eq!(emb.rows, 600);
@@ -96,6 +105,7 @@ mod tests {
                 vectors: 4,
                 iters,
                 kmeans: KmeansParams { k: 4, ..Default::default() },
+                ..Default::default()
             };
             let (km, _) = pic(&rw, &params, &mut r);
             nmi(&km.assignment, &labels)

@@ -6,6 +6,9 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 #[derive(Default)]
 pub struct Metrics {
     pub matvecs: AtomicUsize,
+    /// Kernel threads (`ExecPolicy`) the last job ran with — a gauge,
+    /// recorded so serving/bench reports can attribute throughput.
+    pub threads: AtomicUsize,
     pub shards_done: AtomicUsize,
     pub shards_total: AtomicUsize,
     pub queries: AtomicUsize,
@@ -24,6 +27,7 @@ pub struct Metrics {
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Snapshot {
     pub matvecs: usize,
+    pub threads: usize,
     pub shards_done: usize,
     pub shards_total: usize,
     pub queries: usize,
@@ -36,6 +40,11 @@ pub struct Snapshot {
 impl Metrics {
     pub fn add_matvecs(&self, n: usize) {
         self.matvecs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record the kernel thread count of the job being executed.
+    pub fn set_threads(&self, n: usize) {
+        self.threads.store(n, Ordering::Relaxed);
     }
 
     pub fn shard_done(&self) {
@@ -65,6 +74,7 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             matvecs: self.matvecs.load(Ordering::Relaxed),
+            threads: self.threads.load(Ordering::Relaxed),
             shards_done: self.shards_done.load(Ordering::Relaxed),
             shards_total: self.shards_total.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),

@@ -10,7 +10,9 @@
 //! * [`scheduler`] — the column-shard scheduler: splits Ω into column
 //!   shards, runs the recursion per shard on a worker pool, reassembles.
 //!   Shard execution is bit-exact with the unsharded driver (property-
-//!   tested), so parallelism is purely an execution concern.
+//!   tested), so parallelism is purely an execution concern. Inside each
+//!   shard the block products additionally honour the job's
+//!   `ExecPolicy` ([`crate::par`]) for row-range threading.
 //! * [`service`] — the similarity-query service: owns a finished
 //!   embedding and answers normalized-correlation / top-k queries, the
 //!   "downstream inference" interface (§1) batched behind a queue.

@@ -7,6 +7,13 @@
 //! reassembled embedding is bit-identical to the unsharded driver
 //! (property-tested below). Shard width also bounds worker memory:
 //! 3 ping-pong blocks of n × shard_width doubles.
+//!
+//! Two parallelism axes compose here: `workers` shard-level threads (this
+//! pool) × `job.params.exec.threads` row-parallel threads inside each
+//! shard's block products (`crate::par`). Both are deterministic, so any
+//! (workers, threads) combination produces the same embedding; keep
+//! workers × threads ≤ cores to avoid oversubscription. Wide graphs with
+//! few columns want `exec` threads; many-column jobs want workers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -48,8 +55,8 @@ pub struct JobResult {
     pub shards: usize,
 }
 
-/// Worker-pool coordinator. `workers` is the pool size (on this testbed
-/// 1 core, but the pool exercises the real concurrency structure).
+/// Worker-pool coordinator. `workers` is the shard-level pool size;
+/// per-shard kernels additionally honour `job.params.exec`.
 pub struct Coordinator {
     pub workers: usize,
     pub metrics: Arc<Metrics>,
@@ -91,8 +98,9 @@ impl Coordinator {
         assert_eq!(omega.rows, n);
         let d = omega.cols;
         let mut rng = Rng::new(job.seed ^ 0x9E37_79B9_7F4A_7C15);
+        self.metrics.set_threads(job.params.exec.threads);
         let kappa = match &job.params.norm_est {
-            Some(pe) => spectral_norm(op, pe, &mut rng).max(1e-300),
+            Some(pe) => spectral_norm(op, pe, &mut rng, &job.params.exec).max(1e-300),
             None => 1.0,
         };
         let plan = plan_scaled(
@@ -124,12 +132,13 @@ impl Coordinator {
                 let results = &results;
                 let total = &total_matvecs;
                 let metrics = Arc::clone(&self.metrics);
+                let exec = &job.params.exec;
                 scope.spawn(move || {
                     while let Some(shard) = queue.pop() {
                         let mut mv = 0usize;
                         let mut e = shard.omega;
                         for _ in 0..plan.b {
-                            e = apply_series(scaled, &plan.stage, &e, &mut mv);
+                            e = apply_series(scaled, &plan.stage, &e, &mut mv, exec);
                         }
                         total.fetch_add(mv, Ordering::Relaxed);
                         metrics.add_matvecs(mv);
@@ -185,7 +194,7 @@ mod tests {
 
     fn job(d: usize, order: usize, cascade: usize, width: usize) -> EmbedJob {
         EmbedJob {
-            params: Params { d, order, cascade, basis: Basis::Legendre, norm_est: None },
+            params: Params { d, order, cascade, ..Params::default() },
             f: SpectralFn::Step { c: 0.5 },
             shard_width: width,
             seed: 99,
@@ -251,6 +260,24 @@ mod tests {
         let a = Coordinator::new(1).run(&na, &j);
         let b = Coordinator::new(4).run(&na, &j);
         assert_eq!(a.e.data, b.e.data);
+    }
+
+    #[test]
+    fn deterministic_across_kernel_thread_counts() {
+        // Both parallelism axes at once: shard workers × ExecPolicy
+        // threads inside each shard's block products.
+        let mut rng = Rng::new(215);
+        let g = gen::sbm_by_degree(&mut rng, 120, 4, 6.0, 1.0);
+        let na = graph::normalized_adjacency(&g.adj);
+        let base = Coordinator::new(1).run(&na, &job(10, 16, 2, 4));
+        for (workers, threads) in [(1usize, 2usize), (2, 2), (3, 4)] {
+            let mut j = job(10, 16, 2, 4);
+            j.params.exec = crate::par::ExecPolicy::with_threads(threads);
+            let coord = Coordinator::new(workers);
+            let res = coord.run(&na, &j);
+            assert_eq!(base.e.data, res.e.data, "workers={workers} threads={threads}");
+            assert_eq!(coord.metrics.snapshot().threads, threads);
+        }
     }
 
     #[test]

@@ -140,7 +140,9 @@ impl SimilarityService {
 /// identically-defined numbers.
 #[derive(Clone, Copy, Debug)]
 pub struct ServingSample {
-    /// Throughput of a single-threaded pass.
+    /// Throughput of the one-at-a-time calibration pass (queries issued
+    /// serially from the measuring thread; each query may still use an
+    /// index built with a threaded `ExecPolicy`).
     pub qps_serial: f64,
     /// Throughput of a [`QueryBatch`] pass with the given worker count.
     pub qps_batch: f64,
@@ -313,7 +315,7 @@ mod tests {
         let want: Vec<Vec<(usize, f64)>> = (0..48).map(|i| s.top_k(i, 5)).collect();
         let idx = SimHashIndex::build(
             s.embedding(),
-            SimHashParams { tables: 1, bits: 4, probes: 1 << 4, seed: 2 },
+            SimHashParams { tables: 1, bits: 4, probes: 1 << 4, seed: 2, ..Default::default() },
         );
         s.attach_index(Box::new(idx));
         for (i, w) in want.iter().enumerate() {

@@ -9,6 +9,7 @@ use super::PartialEig;
 use crate::embed::op::Operator;
 use crate::linalg::eigh::tridiag_eigh;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::util::rng::Rng;
 
 /// Parameters for [`lanczos`].
@@ -18,11 +19,13 @@ pub struct LanczosParams {
     pub subspace: Option<usize>,
     /// Residual tolerance for counting an eigenpair converged.
     pub tol: f64,
+    /// Threading for the matvecs (the reorthogonalization stays serial).
+    pub exec: ExecPolicy,
 }
 
 impl Default for LanczosParams {
     fn default() -> Self {
-        LanczosParams { subspace: None, tol: 1e-10 }
+        LanczosParams { subspace: None, tol: 1e-10, exec: ExecPolicy::serial() }
     }
 }
 
@@ -55,7 +58,7 @@ pub fn lanczos(
     for j in 0..m {
         // w = S v_j
         x_buf.data.copy_from_slice(&v);
-        op.apply_into(&x_buf, &mut y_buf);
+        op.apply_into(&x_buf, &mut y_buf, &params.exec);
         matvecs += 1;
         let mut w = y_buf.data.clone();
         // alpha_j = v_j . w

@@ -7,6 +7,7 @@ use crate::embed::op::Operator;
 use crate::linalg::eigh::jacobi_eigh;
 use crate::linalg::qr::mgs_orthonormalize;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::util::rng::Rng;
 
 /// Parameters (paper's comparison settings as defaults).
@@ -16,11 +17,13 @@ pub struct RsvdParams {
     pub power_iters: usize,
     /// Oversampling l (sketch width is k + l).
     pub oversample: usize,
+    /// Threading for the block products (QR stays serial).
+    pub exec: ExecPolicy,
 }
 
 impl Default for RsvdParams {
     fn default() -> Self {
-        RsvdParams { power_iters: 5, oversample: 10 }
+        RsvdParams { power_iters: 5, oversample: 10, exec: ExecPolicy::serial() }
     }
 }
 
@@ -39,18 +42,18 @@ pub fn rsvd(
     let mut q = Mat::randn(rng, n, p);
     let mut y = Mat::zeros(n, p);
     let mut matvecs = 0;
-    op.apply_into(&q, &mut y);
+    op.apply_into(&q, &mut y, &params.exec);
     matvecs += p;
     std::mem::swap(&mut q, &mut y);
     mgs_orthonormalize(&mut q, 1e-12);
     for _ in 0..params.power_iters {
-        op.apply_into(&q, &mut y);
+        op.apply_into(&q, &mut y, &params.exec);
         matvecs += p;
         std::mem::swap(&mut q, &mut y);
         mgs_orthonormalize(&mut q, 1e-12);
     }
     // B = Qᵀ S Q (p×p), eigendecompose, keep top k by |λ|.
-    op.apply_into(&q, &mut y);
+    op.apply_into(&q, &mut y, &params.exec);
     matvecs += p;
     let b = q.tmatmul(&y);
     let mut bs = b.clone();
@@ -109,7 +112,8 @@ mod tests {
         let exact = lanczos(&na, 12, &LanczosParams::default(), &mut rng);
         let sum_err = |q: usize| -> f64 {
             let mut r2 = Rng::new(42);
-            let pe = rsvd(&na, 12, &RsvdParams { power_iters: q, oversample: 10 }, &mut r2);
+            let p = RsvdParams { power_iters: q, oversample: 10, ..Default::default() };
+            let pe = rsvd(&na, 12, &p, &mut r2);
             exact
                 .values
                 .iter()
@@ -125,7 +129,8 @@ mod tests {
         let mut rng = Rng::new(173);
         let g = gen::erdos_renyi(&mut rng, 100, 300);
         let na = graph::normalized_adjacency(&g.adj);
-        let pe = rsvd(&na, 5, &RsvdParams { power_iters: 2, oversample: 5 }, &mut rng);
+        let p = RsvdParams { power_iters: 2, oversample: 5, ..Default::default() };
+        let pe = rsvd(&na, 5, &p, &mut rng);
         assert_eq!(pe.matvecs, 10 * 4); // (k+l) * (1 + q + 1)
     }
 }

@@ -7,15 +7,18 @@ use crate::embed::op::Operator;
 use crate::linalg::eigh::jacobi_eigh;
 use crate::linalg::qr::mgs_orthonormalize;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::util::rng::Rng;
 
 /// Top-`k` (largest |λ|) eigenpairs by simultaneous iteration with `iters`
-/// rounds of orthogonalized block power iteration.
+/// rounds of orthogonalized block power iteration. Block products run on
+/// `exec`'s pool (the orthogonalization stays serial).
 pub fn simultaneous_iteration(
     op: &(impl Operator + ?Sized),
     k: usize,
     iters: usize,
     rng: &mut Rng,
+    exec: &ExecPolicy,
 ) -> PartialEig {
     let n = op.dim();
     let k = k.min(n);
@@ -24,13 +27,13 @@ pub fn simultaneous_iteration(
     let mut y = Mat::zeros(n, k);
     let mut matvecs = 0;
     for _ in 0..iters {
-        op.apply_into(&q, &mut y);
+        op.apply_into(&q, &mut y, exec);
         matvecs += k;
         std::mem::swap(&mut q, &mut y);
         mgs_orthonormalize(&mut q, 1e-12);
     }
     // Rayleigh–Ritz: T = Qᵀ S Q, rotate Q by T's eigenvectors.
-    op.apply_into(&q, &mut y);
+    op.apply_into(&q, &mut y, exec);
     matvecs += k;
     let t = q.tmatmul(&y);
     // Symmetrize numerical noise.
@@ -59,7 +62,8 @@ mod tests {
         let n = 16;
         let a = Mat::from_vec(n, n, sym_contraction(&mut rng, n));
         let (lam, _) = dense_eigh(&a);
-        let pe = simultaneous_iteration(&DenseOp(a.clone()), 3, 300, &mut rng);
+        let pe =
+            simultaneous_iteration(&DenseOp(a.clone()), 3, 300, &mut rng, &ExecPolicy::serial());
         // Dominant |lambda| values; compare magnitudes against the full set.
         let mut abs_lam: Vec<f64> = lam.iter().map(|x| x.abs()).collect();
         abs_lam.sort_by(|a, b| b.partial_cmp(a).unwrap());
@@ -87,7 +91,7 @@ mod tests {
         let mut rng = Rng::new(162);
         let g = gen::sbm_by_degree(&mut rng, 300, 3, 10.0, 0.5);
         let na = graph::normalized_adjacency(&g.adj);
-        let pe = simultaneous_iteration(&na, 4, 200, &mut rng);
+        let pe = simultaneous_iteration(&na, 4, 200, &mut rng, &ExecPolicy::serial());
         assert!((pe.values[0] - 1.0).abs() < 1e-6, "lead {}", pe.values[0]);
         assert!(pe.matvecs >= 4 * 200);
     }

@@ -12,6 +12,7 @@
 use super::fastembed::apply_series;
 use super::op::Operator;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::poly::{chebyshev, legendre, Basis, Series};
 use crate::util::rng::Rng;
 
@@ -26,11 +27,19 @@ pub struct DensityParams {
     pub basis: Basis,
     /// Apply Jackson damping (Chebyshev only) to suppress Gibbs ringing.
     pub jackson: bool,
+    /// Threading for the probe block products (deterministic).
+    pub exec: ExecPolicy,
 }
 
 impl Default for DensityParams {
     fn default() -> Self {
-        DensityParams { order: 120, probes: 16, basis: Basis::Chebyshev, jackson: true }
+        DensityParams {
+            order: 120,
+            probes: 16,
+            basis: Basis::Chebyshev,
+            jackson: true,
+            exec: ExecPolicy::serial(),
+        }
     }
 }
 
@@ -74,7 +83,7 @@ pub fn count_in_band(
         *v = rng.rademacher();
     }
     let mut mv = 0;
-    let fo = apply_series(op, &series, &omega, &mut mv);
+    let fo = apply_series(op, &series, &omega, &mut mv, &params.exec);
     // tr f(S) ≈ (1/m) Σ_j ωⱼᵀ f(S) ωⱼ / (ωⱼᵀωⱼ/n) ; ωⱼᵀωⱼ = n exactly.
     let mut acc = 0.0;
     for j in 0..m {
@@ -212,6 +221,7 @@ mod tests {
             jackson: false,
             probes: 48,
             order: 100,
+            ..Default::default()
         };
         let cnt = count_in_band(&op, 0.6, 1.0, &p, &mut rng);
         assert!((cnt - 2.0).abs() < 1.0, "legendre count {cnt}");

@@ -6,6 +6,7 @@ use super::omega::rademacher_omega;
 use super::op::{Operator, ScaledOp};
 use crate::funcs::SpectralFn;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::poly::cascade::{self, CascadePlan};
 use crate::poly::{chebyshev, legendre, Basis, Series};
 use crate::sparse::{graph, Csr};
@@ -25,6 +26,10 @@ pub struct Params {
     /// Spectral-norm estimation; `None` asserts ‖S‖ ≤ 1 already
     /// (e.g. normalized adjacencies).
     pub norm_est: Option<NormEstParams>,
+    /// Intra-block-product threading for the recursion and the norm
+    /// estimator. The embedding is bitwise-identical at any thread
+    /// count; serial by default (the CLI plumbs `--threads` here).
+    pub exec: ExecPolicy,
 }
 
 impl Default for Params {
@@ -35,6 +40,7 @@ impl Default for Params {
             cascade: 2,
             basis: Basis::Legendre,
             norm_est: None,
+            exec: ExecPolicy::serial(),
         }
     }
 }
@@ -99,8 +105,9 @@ impl FastEmbed {
         rng: &mut Rng,
     ) -> Embedding {
         assert_eq!(omega.rows, op.dim(), "Ω row count must match operator");
+        let exec = &self.params.exec;
         let kappa = match &self.params.norm_est {
-            Some(pe) => spectral_norm(op, pe, rng).max(1e-300),
+            Some(pe) => spectral_norm(op, pe, rng, exec).max(1e-300),
             None => 1.0,
         };
         let plan = plan_scaled(f, kappa, self.params.order, self.params.cascade, self.params.basis);
@@ -108,7 +115,7 @@ impl FastEmbed {
         let mut matvecs = 0;
         let mut e = omega;
         for _ in 0..plan.b {
-            e = apply_series(&scaled, &plan.stage, &e, &mut matvecs);
+            e = apply_series(&scaled, &plan.stage, &e, &mut matvecs, exec);
         }
         Embedding { e, plan, norm_estimate: kappa, matvecs }
     }
@@ -122,16 +129,17 @@ impl FastEmbed {
     /// the full `order` budget goes to a single stage.
     pub fn embed_general(&self, a: &Csr, f: &SpectralFn, rng: &mut Rng) -> GeneralEmbedding {
         let (m, n) = (a.rows, a.cols);
+        let exec = &self.params.exec;
         let s = graph::dilation(a);
         let kappa = match &self.params.norm_est {
-            Some(pe) => spectral_norm(&s, pe, rng).max(1e-300),
+            Some(pe) => spectral_norm(&s, pe, rng, exec).max(1e-300),
             None => 1.0,
         };
         let series = odd_extension_series(f, kappa, self.params.order, self.params.basis);
         let scaled = ScaledOp::new(&s, 1.0 / kappa, 0.0);
         let omega = rademacher_omega(rng, m + n, self.auto_d(m + n));
         let mut matvecs = 0;
-        let e_all = apply_series(&scaled, &series, &omega, &mut matvecs);
+        let e_all = apply_series(&scaled, &series, &omega, &mut matvecs, exec);
         // First n rows ↔ columns of A, last m rows ↔ rows of A (§3.5).
         let d = e_all.cols;
         let mut cols = Mat::zeros(n, d);
@@ -144,13 +152,17 @@ impl FastEmbed {
 
 /// Evaluate `f̃(S)·Q₀` by the three-term recursion (Algorithm 1 lines
 /// 5–8), with ping-pong buffers so the hot loop performs zero allocations
-/// beyond the three blocks. `matvecs` counts *column* matvecs (one block
-/// application of width w adds w), matching the paper's L·d accounting.
+/// beyond the three blocks under a serial policy (threaded policies add
+/// only small per-product partitioning bookkeeping). `matvecs` counts
+/// *column* matvecs (one block application of width w adds w), matching
+/// the paper's L·d accounting. Block products run on `exec`'s thread
+/// pool; the axpy/recombination steps are memory-bound and stay serial.
 pub fn apply_series(
     op: &(impl Operator + ?Sized),
     series: &Series,
     q0: &Mat,
     matvecs: &mut usize,
+    exec: &ExecPolicy,
 ) -> Mat {
     let a = &series.coeffs;
     assert!(!a.is_empty(), "empty series");
@@ -161,14 +173,14 @@ pub fn apply_series(
     }
     // q1 = S q0 (p(1, x) = x in both bases).
     let mut q_prev2 = q0.clone();
-    let mut q_prev = op.apply(q0);
+    let mut q_prev = op.apply(q0, exec);
     *matvecs += q0.cols;
     e.axpy(a[1], &q_prev);
     let mut q_new = Mat::zeros(q0.rows, q0.cols);
     for r in 2..a.len() {
         let (c1, c2) = series.recursion_scalars(r);
         // q_new = c1 * S q_prev − c2 * q_prev2
-        op.apply_into(&q_prev, &mut q_new);
+        op.apply_into(&q_prev, &mut q_new, exec);
         *matvecs += q0.cols;
         for ((qn, qp2), _) in q_new
             .data
@@ -302,7 +314,8 @@ mod tests {
                 // equal the eigen-space evaluation of the same polynomial.
                 let series = legendre::fit(|x| (1.5 * x).exp(), 10, 64);
                 let mut mv = 0;
-                let got = apply_series(&DenseOp(s.clone()), &series, omega, &mut mv);
+                let exec = ExecPolicy::serial();
+                let got = apply_series(&DenseOp(s.clone()), &series, omega, &mut mv, &exec);
                 let want = oracle(s, omega, |x| series.eval(x));
                 check(mv == 10 * omega.cols, format!("matvec count {mv}"))?;
                 check(
@@ -320,7 +333,8 @@ mod tests {
         let omega = Mat::randn(&mut rng, 9, 4);
         let series = chebyshev::fit(|x| 0.5 + x * x, 6, 512);
         let mut mv = 0;
-        let got = apply_series(&DenseOp(s.clone()), &series, &omega, &mut mv);
+        let exec = ExecPolicy::serial();
+        let got = apply_series(&DenseOp(s.clone()), &series, &omega, &mut mv, &exec);
         let want = oracle(&s, &omega, |x| series.eval(x));
         assert!(got.max_abs_diff(&want) < 1e-9);
     }
@@ -332,14 +346,14 @@ mod tests {
         let omega = Mat::randn(&mut rng, 6, 3);
         let mut mv = 0;
         let s0 = Series { basis: Basis::Legendre, coeffs: vec![2.0] };
-        let e0 = apply_series(&DenseOp(s.clone()), &s0, &omega, &mut mv);
+        let e0 = apply_series(&DenseOp(s.clone()), &s0, &omega, &mut mv, &ExecPolicy::serial());
         let mut want0 = omega.clone();
         want0.scale(2.0);
         assert!(e0.max_abs_diff(&want0) < 1e-14);
         assert_eq!(mv, 0);
 
         let s1 = Series { basis: Basis::Legendre, coeffs: vec![0.5, -1.0] };
-        let e1 = apply_series(&DenseOp(s.clone()), &s1, &omega, &mut mv);
+        let e1 = apply_series(&DenseOp(s.clone()), &s1, &omega, &mut mv, &ExecPolicy::serial());
         let mut want1 = omega.clone();
         want1.scale(0.5);
         want1.axpy(-1.0, &s.matmul(&omega));

@@ -4,6 +4,7 @@
 
 use super::op::Operator;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::util::rng::Rng;
 
 /// Parameters of the estimator (paper defaults).
@@ -22,8 +23,15 @@ impl Default for NormEstParams {
     }
 }
 
-/// Power-iteration estimate of ‖S‖ = max |λ|. Returns the scaled estimate.
-pub fn spectral_norm(op: &(impl Operator + ?Sized), params: &NormEstParams, rng: &mut Rng) -> f64 {
+/// Power-iteration estimate of ‖S‖ = max |λ|. Returns the scaled
+/// estimate. The block products run on `exec`'s pool; the estimate is
+/// bitwise-identical at any thread count.
+pub fn spectral_norm(
+    op: &(impl Operator + ?Sized),
+    params: &NormEstParams,
+    rng: &mut Rng,
+    exec: &ExecPolicy,
+) -> f64 {
     let n = op.dim();
     if n == 0 {
         return 0.0;
@@ -37,7 +45,7 @@ pub fn spectral_norm(op: &(impl Operator + ?Sized), params: &NormEstParams, rng:
     let mut w = Mat::zeros(n, b);
     let mut est = 0.0f64;
     for _ in 0..params.iters {
-        op.apply_into(&v, &mut w);
+        op.apply_into(&v, &mut w, exec);
         est = 0.0;
         for j in 0..b {
             let nj = w.col_norm(j);
@@ -76,7 +84,8 @@ mod tests {
         for (i, &v) in [3.0, -5.0, 1.0, 0.5, -0.2, 4.0].iter().enumerate() {
             m[(i, i)] = v;
         }
-        let est = spectral_norm(&DenseOp(m), &NormEstParams::default(), &mut rng);
+        let est =
+            spectral_norm(&DenseOp(m), &NormEstParams::default(), &mut rng, &ExecPolicy::serial());
         assert!((est / 5.0 - 1.0).abs() < 0.02, "est {est}");
     }
 
@@ -97,6 +106,7 @@ mod tests {
                     &DenseOp(a.clone()),
                     &NormEstParams { iters: 50, ..Default::default() },
                     &mut rng,
+                    &ExecPolicy::serial(),
                 );
                 // Power iteration lower-bounds; x1.01 typically crosses.
                 check(est >= truth * 0.85, format!("est {est} << truth {truth}"))?;
@@ -108,7 +118,12 @@ mod tests {
     #[test]
     fn zero_operator() {
         let mut rng = Rng::new(133);
-        let est = spectral_norm(&DenseOp(Mat::zeros(5, 5)), &NormEstParams::default(), &mut rng);
+        let est = spectral_norm(
+            &DenseOp(Mat::zeros(5, 5)),
+            &NormEstParams::default(),
+            &mut rng,
+            &ExecPolicy::serial(),
+        );
         assert_eq!(est, 0.0);
     }
 }

@@ -5,8 +5,14 @@
 //! [`Operator`]. Implementations here: CSR (the scalable native path),
 //! dense (oracles/tests), and an affine wrapper for §3.4 spectrum
 //! rescaling. `crate::runtime::PjrtOp` adds the AOT/PJRT tile path.
+//!
+//! Every application takes an [`ExecPolicy`]: the block product is the
+//! parallelizable unit (the paper's "parallel across starting vectors",
+//! realized here as row-range parallelism), and implementations must be
+//! deterministic — output bitwise-independent of `exec.threads`.
 
 use crate::linalg::Mat;
+use crate::par::{self, ExecPolicy};
 use crate::sparse::Csr;
 
 /// A symmetric linear operator usable by the recursion.
@@ -15,13 +21,14 @@ pub trait Operator {
     fn dim(&self) -> usize;
 
     /// `y ← S x` for a block `x` (n×d). Must not allocate per call beyond
-    /// what the implementation needs internally.
-    fn apply_into(&self, x: &Mat, y: &mut Mat);
+    /// what the implementation needs internally, and must produce output
+    /// bitwise-independent of `exec.threads`.
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy);
 
     /// Convenience allocating form.
-    fn apply(&self, x: &Mat) -> Mat {
+    fn apply(&self, x: &Mat, exec: &ExecPolicy) -> Mat {
         let mut y = Mat::zeros(self.dim(), x.cols);
-        self.apply_into(x, &mut y);
+        self.apply_into(x, &mut y, exec);
         y
     }
 
@@ -36,8 +43,8 @@ impl Operator for Csr {
         self.rows
     }
 
-    fn apply_into(&self, x: &Mat, y: &mut Mat) {
-        self.spmm_into(x, y);
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        self.spmm_into_with(x, y, exec);
     }
 
     fn nnz(&self) -> usize {
@@ -45,7 +52,9 @@ impl Operator for Csr {
     }
 }
 
-/// Dense symmetric operator (tests and small oracles).
+/// Dense symmetric operator (tests and small oracles). Parallelizes over
+/// output-row ranges with the same per-row float order as `Mat::matmul`,
+/// so results are bitwise-identical at any thread count.
 pub struct DenseOp(pub Mat);
 
 impl Operator for DenseOp {
@@ -54,9 +63,27 @@ impl Operator for DenseOp {
         self.0.rows
     }
 
-    fn apply_into(&self, x: &Mat, y: &mut Mat) {
-        let out = self.0.matmul(x);
-        y.data.copy_from_slice(&out.data);
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        assert_eq!(x.rows, self.0.cols, "dense apply shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.0.rows, x.cols));
+        let d = x.cols;
+        let ranges = par::even_ranges(self.0.rows, exec.chunks(self.0.rows));
+        exec.map_chunks(&ranges, &mut y.data, d, |_, rows, out| {
+            out.fill(0.0);
+            for (local, i) in rows.enumerate() {
+                let arow = self.0.row(i);
+                let orow = &mut out[local * d..(local + 1) * d];
+                for (k, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = x.row(k);
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += aik * b;
+                    }
+                }
+            }
+        });
     }
 
     fn nnz(&self) -> usize {
@@ -83,8 +110,8 @@ impl<O: Operator + ?Sized> Operator for ScaledOp<'_, O> {
         self.inner.dim()
     }
 
-    fn apply_into(&self, x: &Mat, y: &mut Mat) {
-        self.inner.apply_into(x, y);
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        self.inner.apply_into(x, y, exec);
         if self.alpha != 1.0 {
             y.scale(self.alpha);
         }
@@ -102,7 +129,7 @@ impl<O: Operator + ?Sized> Operator for ScaledOp<'_, O> {
 mod tests {
     use super::*;
     use crate::sparse::coo::Coo;
-    use crate::testing::prop::{all_close, forall};
+    use crate::testing::prop::{all_close, check, forall};
     use crate::util::rng::Rng;
 
     fn random_sym_csr(rng: &mut Rng, n: usize) -> Csr {
@@ -125,8 +152,13 @@ mod tests {
                 (random_sym_csr(r, n), Mat::randn(r, n, 4))
             },
             |(a, x)| {
+                let exec = ExecPolicy::serial();
                 let dense = DenseOp(a.to_dense());
-                all_close(&Operator::apply(a, x).data, &dense.apply(x).data, 1e-12)
+                all_close(
+                    &Operator::apply(a, x, &exec).data,
+                    &dense.apply(x, &exec).data,
+                    1e-12,
+                )
             },
         );
     }
@@ -146,9 +178,10 @@ mod tests {
                 )
             },
             |(a, x, alpha, beta)| {
+                let exec = ExecPolicy::serial();
                 let s = ScaledOp::new(a, *alpha, *beta);
-                let got = s.apply(x);
-                let mut want = Operator::apply(a, x);
+                let got = s.apply(x, &exec);
+                let mut want = Operator::apply(a, x, &exec);
                 want.scale(*alpha);
                 want.axpy(*beta, x);
                 all_close(&got.data, &want.data, 1e-12)
@@ -161,9 +194,45 @@ mod tests {
         let a = Csr::eye(5);
         let s = ScaledOp::new(&a, 2.0, -0.5);
         let x = Mat::eye(5);
-        let y = s.apply(&x);
+        let y = s.apply(&x, &ExecPolicy::serial());
         for i in 0..5 {
             assert!((y[(i, i)] - 1.5).abs() < 1e-14);
         }
+    }
+
+    #[test]
+    fn all_operators_are_thread_count_invariant() {
+        forall(
+            123,
+            10,
+            |r| {
+                let n = 8 + r.below(40);
+                (random_sym_csr(r, n), Mat::randn(r, n, 5))
+            },
+            |(a, x)| {
+                let serial = ExecPolicy::serial();
+                let want_csr = Operator::apply(a, x, &serial);
+                let dense = DenseOp(a.to_dense());
+                let want_dense = dense.apply(x, &serial);
+                let scaled = ScaledOp::new(a, -0.7, 0.3);
+                let want_scaled = scaled.apply(x, &serial);
+                for threads in [2usize, 4] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    check(
+                        Operator::apply(a, x, &exec).data == want_csr.data,
+                        format!("csr op differs at {threads} threads"),
+                    )?;
+                    check(
+                        dense.apply(x, &exec).data == want_dense.data,
+                        format!("dense op differs at {threads} threads"),
+                    )?;
+                    check(
+                        scaled.apply(x, &exec).data == want_scaled.data,
+                        format!("scaled op differs at {threads} threads"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 }

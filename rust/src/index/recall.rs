@@ -110,7 +110,7 @@ mod tests {
         let norms = row_norms(&e);
         let idx = SimHashIndex::build(
             &e,
-            SimHashParams { tables: 2, bits: 4, probes: 1 << 4, seed: 9 },
+            SimHashParams { tables: 2, bits: 4, probes: 1 << 4, seed: 9, ..Default::default() },
         );
         let queries: Vec<usize> = (0..50).step_by(5).collect();
         let rep = evaluate_recall(&e, &norms, &idx, &queries, 8);

@@ -24,6 +24,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use super::{rerank_top_k, AnnIndex, TopK};
 use crate::linalg::Mat;
+use crate::par::{self, ExecPolicy};
 use crate::util::rng::Rng;
 
 /// SimHash index parameters.
@@ -37,13 +38,23 @@ pub struct SimHashParams {
     pub probes: usize,
     /// Hyperplane RNG seed (independent of the embedding seed).
     pub seed: u64,
+    /// Build-time threading (signature hashing + bucket maps). Queries
+    /// are parallelized at the service layer instead. The built index is
+    /// identical at any thread count.
+    pub exec: ExecPolicy,
 }
 
 impl Default for SimHashParams {
     fn default() -> Self {
         // Tuned on SBM serving workloads: recall@10 ≳ 0.95 while scanning
         // well under 10% of rows at n = 1e5 (see benches `serving`).
-        SimHashParams { tables: 8, bits: 12, probes: 16, seed: 0xC5E_51E_D }
+        SimHashParams {
+            tables: 8,
+            bits: 12,
+            probes: 16,
+            seed: 0xC5E_51E_D,
+            exec: ExecPolicy::serial(),
+        }
     }
 }
 
@@ -74,16 +85,35 @@ impl SimHashIndex {
         let t = crate::util::timer::Timer::start();
         let mut rng = Rng::new(params.seed);
         let planes = Mat::randn(&mut rng, params.tables * params.bits, e.cols);
-        let mut buckets: Vec<HashMap<u64, Vec<u32>>> =
-            (0..params.tables).map(|_| HashMap::new()).collect();
-        let mut projs = vec![0.0; params.tables * params.bits];
-        for i in 0..e.rows {
-            project_into(&planes, e.row(i), &mut projs);
-            for (tbl, map) in buckets.iter_mut().enumerate() {
-                let sig = pack_signs(&projs[tbl * params.bits..(tbl + 1) * params.bits]);
-                map.entry(sig).or_default().push(i as u32);
+        let (tables, bits, exec) = (params.tables, params.bits, &params.exec);
+        // Pass 1: packed per-row signatures, row-partitioned across the
+        // pool (the n·tables·bits·d hot loop of the build).
+        let mut sigs = vec![0u64; e.rows * tables];
+        let ranges = par::even_ranges(e.rows, exec.chunks(e.rows));
+        exec.map_chunks(&ranges, &mut sigs, tables, |_, rows, out| {
+            let mut projs = vec![0.0; tables * bits];
+            for (local, i) in rows.enumerate() {
+                project_into(&planes, e.row(i), &mut projs);
+                for tbl in 0..tables {
+                    out[local * tables + tbl] =
+                        pack_signs(&projs[tbl * bits..(tbl + 1) * bits]);
+                }
             }
-        }
+        });
+        // Pass 2: bucket maps, partitioned across tables. Every map
+        // inserts row ids in ascending order exactly like a serial scan,
+        // so the built index is thread-count-independent.
+        let mut buckets: Vec<HashMap<u64, Vec<u32>>> =
+            (0..tables).map(|_| HashMap::new()).collect();
+        let tranges = par::even_ranges(tables, exec.threads.min(tables));
+        exec.map_chunks(&tranges, &mut buckets, 1, |_, trange, maps| {
+            for (local, tbl) in trange.enumerate() {
+                let map = &mut maps[local];
+                for i in 0..e.rows {
+                    map.entry(sigs[i * tables + tbl]).or_default().push(i as u32);
+                }
+            }
+        });
         SimHashIndex { params, n: e.rows, d: e.cols, planes, buckets, build_secs: t.elapsed_secs() }
     }
 
@@ -304,7 +334,13 @@ mod tests {
                 let norms = row_norms(e);
                 let idx = SimHashIndex::build(
                     e,
-                    SimHashParams { tables: 1, bits: 3, probes: 1 << 3, seed: 5 },
+                    SimHashParams {
+                        tables: 1,
+                        bits: 3,
+                        probes: 1 << 3,
+                        seed: 5,
+                        ..Default::default()
+                    },
                 );
                 let exact = ExactIndex::new(e.rows);
                 for i in 0..e.rows.min(8) {
@@ -334,7 +370,7 @@ mod tests {
             |(e, scales)| {
                 let idx = SimHashIndex::build(
                     e,
-                    SimHashParams { tables: 3, bits: 10, probes: 1, seed: 7 },
+                    SimHashParams { tables: 3, bits: 10, probes: 1, seed: 7, ..Default::default() },
                 );
                 for i in 0..e.rows {
                     let row = e.row(i);
@@ -385,7 +421,7 @@ mod tests {
     fn build_is_deterministic_and_reports_memory() {
         let mut rng = Rng::new(94);
         let e = Mat::randn(&mut rng, 50, 6);
-        let p = SimHashParams { tables: 2, bits: 8, probes: 4, seed: 11 };
+        let p = SimHashParams { tables: 2, bits: 8, probes: 4, seed: 11, ..Default::default() };
         let a = SimHashIndex::build(&e, p);
         let b = SimHashIndex::build(&e, p);
         for i in 0..e.rows {
@@ -398,6 +434,29 @@ mod tests {
     }
 
     #[test]
+    fn build_is_thread_count_independent() {
+        let mut rng = Rng::new(96);
+        let e = Mat::randn(&mut rng, 400, 8);
+        let p = SimHashParams { tables: 3, bits: 6, probes: 4, seed: 13, ..Default::default() };
+        let base = SimHashIndex::build(&e, p);
+        for threads in [2usize, 4] {
+            let idx = SimHashIndex::build(
+                &e,
+                SimHashParams { exec: ExecPolicy::with_threads(threads), ..p },
+            );
+            for i in 0..e.rows {
+                assert_eq!(base.signatures(e.row(i)), idx.signatures(e.row(i)));
+                assert_eq!(
+                    base.candidates(e.row(i)),
+                    idx.candidates(e.row(i)),
+                    "row {i} at {threads} threads"
+                );
+            }
+            assert_eq!(base.mem_bytes(), idx.mem_bytes());
+        }
+    }
+
+    #[test]
     fn every_row_is_its_own_candidate() {
         // A query row always lands in its own bucket, so with probes=1
         // the candidate set still contains the row itself.
@@ -405,7 +464,7 @@ mod tests {
         let e = Mat::randn(&mut rng, 30, 5);
         let idx = SimHashIndex::build(
             &e,
-            SimHashParams { tables: 1, bits: 6, probes: 1, seed: 3 },
+            SimHashParams { tables: 1, bits: 6, probes: 1, seed: 3, ..Default::default() },
         );
         for i in 0..e.rows {
             assert!(idx.candidates(e.row(i)).contains(&i));

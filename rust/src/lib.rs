@@ -10,6 +10,8 @@
 //! ## Layers
 //! * **Rust (this crate)** — the scalable runtime: sparse operators,
 //!   the FastEmbed driver, eigensolver baselines, K-means/modularity,
+//!   the [`par`] execution layer (a dependency-free scoped-thread pool
+//!   that every block-product hot path runs on, deterministically),
 //!   the column-shard coordinator and the similarity-query service, the
 //!   [`index`] ANN layer (SimHash LSH + exact baseline) that makes top-k
 //!   serving sublinear, and a PJRT runtime that executes JAX/Pallas-
@@ -42,6 +44,7 @@ pub mod embed;
 pub mod funcs;
 pub mod index;
 pub mod linalg;
+pub mod par;
 pub mod poly;
 pub mod runtime;
 pub mod sparse;

@@ -23,6 +23,7 @@ use cse::eigen::simult::simultaneous_iteration;
 use cse::embed::Params;
 use cse::funcs::SpectralFn;
 use cse::index::{evaluate_recall, AnnIndex, ExactIndex, SimHashIndex, SimHashParams};
+use cse::par::ExecPolicy;
 use cse::poly::Basis;
 use cse::sparse::{gen, graph, io, Csr};
 use cse::util::args::{usage, Args, Opt};
@@ -100,6 +101,12 @@ fn load_or_gen(a: &Args) -> Result<(Csr, Option<Vec<usize>>), String> {
     }
 }
 
+/// `--threads N` → kernel-level ExecPolicy; 0 (the default) = all cores.
+fn exec_from(a: &Args) -> Result<ExecPolicy, String> {
+    let t = a.usize("threads", 0)?;
+    Ok(if t == 0 { ExecPolicy::auto() } else { ExecPolicy::with_threads(t) })
+}
+
 fn embed_params(a: &Args) -> Result<Params, String> {
     Ok(Params {
         d: a.usize("d", 0)?,
@@ -111,8 +118,15 @@ fn embed_params(a: &Args) -> Result<Params, String> {
             b => return Err(format!("unknown basis '{b}'")),
         },
         norm_est: None, // normalized adjacency: ||S|| <= 1 by construction
+        exec: exec_from(a)?,
     })
 }
+
+const THREADS_OPT: Opt = Opt {
+    name: "threads",
+    help: "kernel threads per block product (0 = all cores); deterministic at any value",
+    default: Some("0"),
+};
 
 const COMMON_OPTS: &[Opt] = &[
     Opt { name: "graph", help: "edge-list file (SNAP format); omit to generate", default: None },
@@ -157,7 +171,8 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "cascade", help: "cascade factor b", default: Some("2") },
             Opt { name: "basis", help: "legendre|chebyshev", default: Some("legendre") },
             Opt { name: "c", help: "step threshold f = I(lambda >= c)", default: Some("0.7") },
-            Opt { name: "workers", help: "worker threads", default: Some("1") },
+            Opt { name: "workers", help: "column-shard worker threads", default: Some("1") },
+            THREADS_OPT,
             Opt { name: "shard", help: "columns per shard", default: Some("8") },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
@@ -175,13 +190,14 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     let res = coord.run(&na, &job);
     let secs = t.elapsed_secs();
     println!(
-        "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards) in {}",
+        "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards, {} kernel threads) in {}",
         na.rows,
         res.e.cols,
         job.params.order,
         res.plan.b,
         res.matvecs,
         res.shards,
+        job.params.exec.threads,
         human_secs(secs)
     );
     let out = a.get_or("out", "embedding.tsv");
@@ -200,6 +216,7 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
         opts.extend_from_slice(&[
             Opt { name: "solver", help: "lanczos|rsvd|simult", default: Some("lanczos") },
             Opt { name: "eig-k", help: "number of eigenpairs", default: Some("50") },
+            THREADS_OPT,
         ]);
         println!("{}", usage("cse eig", "Partial eigendecomposition baselines", &opts));
         return Ok(());
@@ -207,12 +224,13 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let k = a.usize("eig-k", 50)?;
+    let exec = exec_from(&a)?;
     let mut rng = Rng::new(a.u64("seed", 0)?);
     let t = Timer::start();
     let pe = match a.get_or("solver", "lanczos") {
-        "lanczos" => lanczos(&na, k, &LanczosParams::default(), &mut rng),
-        "rsvd" => rsvd(&na, k, &RsvdParams::default(), &mut rng),
-        "simult" => simultaneous_iteration(&na, k, 100, &mut rng),
+        "lanczos" => lanczos(&na, k, &LanczosParams { exec, ..Default::default() }, &mut rng),
+        "rsvd" => rsvd(&na, k, &RsvdParams { exec, ..Default::default() }, &mut rng),
+        "simult" => simultaneous_iteration(&na, k, 100, &mut rng, &exec),
         s => return Err(format!("unknown solver '{s}'")),
     };
     println!(
@@ -240,6 +258,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "order", help: "polynomial order", default: Some("120") },
             Opt { name: "c", help: "step threshold", default: Some("0.7") },
             Opt { name: "restarts", help: "k-means restarts (median reported)", default: Some("5") },
+            THREADS_OPT,
         ]);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
         return Ok(());
@@ -258,7 +277,11 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     let mut rng = Rng::new(a.u64("seed", 0)? + 1);
     let mut mods = Vec::new();
     for r in 0..restarts {
-        let km = kmeans(&res.e, &KmeansParams { k: kk, max_iters: 30, tol: 1e-5 }, &mut rng);
+        let km = kmeans(
+            &res.e,
+            &KmeansParams { k: kk, max_iters: 30, tol: 1e-5, exec: exec_from(&a)? },
+            &mut rng,
+        );
         let q = modularity(&adj, &km.assignment);
         println!("  restart {r}: modularity = {q:.4} (cost {:.2}, {} iters)", km.cost, km.iters);
         mods.push(q);
@@ -287,6 +310,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
                 help: "sampled top-k queries for the recall@k report (0 = skip)",
                 default: Some("50"),
             },
+            THREADS_OPT,
         ]);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
         return Ok(());
@@ -311,6 +335,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
                 bits: a.usize("bits", defaults.bits)?,
                 probes: a.usize("probes", defaults.probes)?,
                 seed: a.u64("seed", 0)? ^ defaults.seed,
+                exec: exec_from(&a)?,
             };
             let idx = SimHashIndex::build(service.embedding(), p);
             println!(

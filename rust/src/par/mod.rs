@@ -1,0 +1,418 @@
+//! Dependency-free parallel execution layer for the compute hot paths.
+//!
+//! The paper's iterations are "parallel across starting vectors"; the
+//! block products they reduce to are *also* parallel across output rows.
+//! This module is the one place that parallelism lives: a scoped-thread
+//! pool (no rayon — the build is offline) with deterministic work
+//! partitioning, used by the SpMM kernels (`sparse::Csr`), the FastEmbed
+//! recursion ([`crate::embed`]), the eigensolver baselines
+//! ([`crate::eigen`]), SimHash index builds ([`crate::index`]) and
+//! K-means assignment ([`crate::cluster`]).
+//!
+//! ## Determinism contract
+//!
+//! Every primitive here processes a caller-supplied list of disjoint
+//! `Range<usize>` chunks. Which *thread* runs a chunk is dynamic (an
+//! atomic cursor hands chunks out), but what each chunk computes depends
+//! only on the chunk itself, and per-chunk results are collected in chunk
+//! order. Consequences:
+//!
+//! * Element-wise kernels (SpMM, dense matmul, K-means `nearest`) are
+//!   **bitwise identical to the serial loop at any thread count**: each
+//!   output row is computed by exactly the same float operations in the
+//!   same order, whatever chunk it lands in.
+//! * Floating-point *reductions* depend on the chunk **structure** (sums
+//!   are folded chunk-by-chunk). Use [`fixed_chunks`] — a chunk count
+//!   independent of the thread count — and the reduction is identical
+//!   for 1, 2, … threads. Thread-dependent [`ExecPolicy::chunks`] is
+//!   fine whenever no cross-row reduction happens.
+//!
+//! ## Pool shape
+//!
+//! [`ExecPolicy`] is a plain `{ threads }` value plumbed from the CLI
+//! `--threads` flags down to the kernels. Each parallel region spawns
+//! `threads − 1` scoped workers (`std::thread::scope`) plus the calling
+//! thread; with `threads == 1` every primitive degenerates to a plain
+//! serial loop with zero synchronization or spawn overhead (only the
+//! trivial range/result vectors are allocated — and the CSR kernels
+//! skip partitioning entirely on their serial path), which is what
+//! keeps the 1-thread path within noise of the pre-refactor kernels.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Execution policy for a parallel region: how many OS threads to use.
+///
+/// The default is serial — library callers opt in explicitly, and the
+/// CLI layers default to [`ExecPolicy::auto`] (all cores).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecPolicy {
+    /// Worker count (≥ 1). 1 = run inline on the calling thread.
+    pub threads: usize,
+}
+
+impl Default for ExecPolicy {
+    fn default() -> Self {
+        ExecPolicy::serial()
+    }
+}
+
+impl ExecPolicy {
+    /// Single-threaded execution (the zero-overhead inline path).
+    pub fn serial() -> Self {
+        ExecPolicy { threads: 1 }
+    }
+
+    /// Exactly `threads` workers (clamped to ≥ 1).
+    pub fn with_threads(threads: usize) -> Self {
+        ExecPolicy { threads: threads.max(1) }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> Self {
+        ExecPolicy::with_threads(
+            std::thread::available_parallelism().map_or(1, |n| n.get()),
+        )
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads <= 1
+    }
+
+    /// Thread-*dependent* chunk count for `items` units of independent
+    /// work: oversplit 4× for load balance under dynamic chunk claiming.
+    /// Only for element-wise work (no cross-item reduction) — chunk
+    /// boundaries then cannot affect any output bit.
+    pub fn chunks(&self, items: usize) -> usize {
+        if self.threads <= 1 || items == 0 {
+            1
+        } else {
+            (self.threads * 4).min(items)
+        }
+    }
+
+    /// Run `f(0..tasks)` with tasks handed to workers via an atomic
+    /// cursor. The building block under [`Self::map_ranges`] /
+    /// [`Self::map_chunks`]; use directly when chunk outputs do not fit
+    /// the slice-per-range model (see `Csr::transpose_with`).
+    pub fn run_indexed(&self, tasks: usize, f: impl Fn(usize) + Sync) {
+        let threads = self.threads.clamp(1, tasks.max(1));
+        if threads <= 1 {
+            for k in 0..tasks {
+                f(k);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        // Declared before the scope so spawned threads may borrow it.
+        let worker = || loop {
+            let k = next.fetch_add(1, Ordering::Relaxed);
+            if k >= tasks {
+                break;
+            }
+            f(k);
+        };
+        let worker = &worker;
+        std::thread::scope(|scope| {
+            for _ in 1..threads {
+                scope.spawn(worker);
+            }
+            worker();
+        });
+    }
+
+    /// Apply `f(chunk_index, range)` to every range, collecting results
+    /// **in range order** (so reductions folded over the returned vec are
+    /// independent of which thread ran what).
+    pub fn map_ranges<R: Send>(
+        &self,
+        ranges: &[Range<usize>],
+        f: impl Fn(usize, Range<usize>) -> R + Sync,
+    ) -> Vec<R> {
+        if self.threads <= 1 || ranges.len() <= 1 {
+            return ranges.iter().enumerate().map(|(k, r)| f(k, r.clone())).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
+        self.run_indexed(ranges.len(), |k| {
+            let r = f(k, ranges[k].clone());
+            *slots[k].lock().unwrap() = Some(r);
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("range result missing"))
+            .collect()
+    }
+
+    /// The workhorse: apply `f(chunk_index, rows, out_chunk)` to every
+    /// range, where `out_chunk` is the mutable slice of `out` covering
+    /// rows `r` at `width` elements per row. Ranges must be ascending,
+    /// disjoint, and cover `out` exactly. Per-range results are returned
+    /// in range order.
+    pub fn map_chunks<T: Send, R: Send>(
+        &self,
+        ranges: &[Range<usize>],
+        out: &mut [T],
+        width: usize,
+        f: impl Fn(usize, Range<usize>, &mut [T]) -> R + Sync,
+    ) -> Vec<R> {
+        if self.threads <= 1 || ranges.len() <= 1 {
+            let mut res = Vec::with_capacity(ranges.len());
+            let mut rest = out;
+            for (k, r) in ranges.iter().enumerate() {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((r.end - r.start) * width);
+                rest = tail;
+                res.push(f(k, r.clone(), chunk));
+            }
+            assert!(rest.is_empty(), "ranges must cover the output exactly");
+            return res;
+        }
+        let parts = split_mut(out, ranges.iter().map(|r| (r.end - r.start) * width));
+        let tagged: Vec<(Range<usize>, &mut [T])> =
+            ranges.iter().cloned().zip(parts).collect();
+        self.map_parts(tagged, |k, (r, chunk)| f(k, r, chunk))
+    }
+
+    /// Distribute arbitrary owned work payloads (e.g. pre-split uneven
+    /// output segments) to the pool, one `f(index, payload)` call each,
+    /// results in payload order. [`Self::map_chunks`] is this plus
+    /// uniform-width slice splitting; kernels with non-uniform outputs
+    /// (`Csr::transpose_with`) pass their own parts.
+    pub fn map_parts<T: Send, R: Send>(
+        &self,
+        parts: Vec<T>,
+        f: impl Fn(usize, T) -> R + Sync,
+    ) -> Vec<R> {
+        if self.threads <= 1 || parts.len() <= 1 {
+            return parts.into_iter().enumerate().map(|(k, p)| f(k, p)).collect();
+        }
+        let n = parts.len();
+        let part_slots: Vec<Mutex<Option<T>>> =
+            parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        let res_slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_indexed(n, |k| {
+            let p = part_slots[k].lock().unwrap().take().expect("part taken twice");
+            let r = f(k, p);
+            *res_slots[k].lock().unwrap() = Some(r);
+        });
+        res_slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("part result missing"))
+            .collect()
+    }
+}
+
+/// Split `s` into consecutive mutable parts of the given sizes (which
+/// must sum to `s.len()`).
+pub fn split_mut<T>(s: &mut [T], sizes: impl Iterator<Item = usize>) -> Vec<&mut [T]> {
+    let mut rest = s;
+    let mut out = Vec::new();
+    for len in sizes {
+        let (part, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        out.push(part);
+        rest = tail;
+    }
+    assert!(rest.is_empty(), "sizes must cover the slice exactly");
+    out
+}
+
+/// `items` split into `parts` contiguous near-even ranges (first
+/// `items % parts` ranges get one extra). Empty ranges are never emitted.
+pub fn even_ranges(items: usize, parts: usize) -> Vec<Range<usize>> {
+    if items == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, items);
+    let base = items / parts;
+    let extra = items % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for k in 0..parts {
+        let len = base + usize::from(k < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Ranges over `0..prefix.len()-1` balanced by the cumulative weights in
+/// `prefix` (e.g. a CSR `indptr`: ranges of rows with ≈ equal nnz).
+/// Deterministic for a given `prefix` and `parts`; skips empty ranges.
+pub fn weighted_ranges(prefix: &[usize], parts: usize) -> Vec<Range<usize>> {
+    let n = prefix.len().saturating_sub(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = prefix[n] - prefix[0];
+    if total == 0 || parts <= 1 {
+        return if parts <= 1 { vec![0..n] } else { even_ranges(n, parts) };
+    }
+    let parts = parts.min(n);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for k in 1..=parts {
+        let target = prefix[0] + (total as u128 * k as u128 / parts as u128) as usize;
+        // Smallest boundary whose prefix weight reaches the target.
+        let mut end = prefix.partition_point(|&p| p < target);
+        end = end.clamp(start, n);
+        if k == parts {
+            end = n;
+        }
+        if end > start {
+            out.push(start..end);
+            start = end;
+        }
+    }
+    out
+}
+
+/// Thread-count-INDEPENDENT chunk count: `items` split into chunks of
+/// ≈ `per_chunk` rows. Use for parallel regions that fold a
+/// floating-point reduction over per-chunk results — the chunk structure
+/// (hence the rounding) is then fixed whatever `ExecPolicy` runs it.
+pub fn fixed_chunks(items: usize, per_chunk: usize) -> usize {
+    items.div_ceil(per_chunk.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_ranges_cover_and_balance() {
+        for items in [0usize, 1, 7, 64, 100] {
+            for parts in [1usize, 2, 3, 4, 9, 200] {
+                let rs = even_ranges(items, parts);
+                let mut cursor = 0;
+                for r in &rs {
+                    assert_eq!(r.start, cursor, "contiguous");
+                    assert!(r.end > r.start, "non-empty");
+                    cursor = r.end;
+                }
+                assert_eq!(cursor, items, "coverage for {items}/{parts}");
+                if items > 0 {
+                    let sizes: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+                    let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                    assert!(max - min <= 1, "balance {sizes:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_balance_by_prefix() {
+        // Weights 0,0,10,0,10,1,1,... — boundaries must track weight, not rows.
+        let weights = [0usize, 0, 10, 0, 10, 1, 1, 1, 1, 6];
+        let mut prefix = vec![0usize];
+        for w in weights {
+            prefix.push(prefix.last().unwrap() + w);
+        }
+        for parts in [1usize, 2, 3, 4] {
+            let rs = weighted_ranges(&prefix, parts);
+            let mut cursor = 0;
+            for r in &rs {
+                assert_eq!(r.start, cursor);
+                assert!(r.end > r.start);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, weights.len());
+        }
+        let rs = weighted_ranges(&prefix, 2);
+        // Half the total weight (15) is reached inside row 4.
+        assert!(rs[0].end <= 5, "first range {rs:?} should stop near the heavy rows");
+    }
+
+    #[test]
+    fn run_indexed_visits_every_task_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let hits: Vec<AtomicUsize> = (0..57).map(|_| AtomicUsize::new(0)).collect();
+            ExecPolicy::with_threads(threads)
+                .run_indexed(hits.len(), |k| {
+                    hits[k].fetch_add(1, Ordering::Relaxed);
+                });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn map_ranges_results_in_range_order() {
+        let ranges = even_ranges(40, 7);
+        for threads in [1usize, 2, 4] {
+            let got = ExecPolicy::with_threads(threads)
+                .map_ranges(&ranges, |k, r| (k, r.start, r.end));
+            for (k, (gk, s, e)) in got.iter().enumerate() {
+                assert_eq!(*gk, k);
+                assert_eq!((*s, *e), (ranges[k].start, ranges[k].end));
+            }
+        }
+    }
+
+    #[test]
+    fn map_chunks_writes_disjoint_rows_identically() {
+        let width = 3;
+        let rows = 29;
+        let want: Vec<f64> = (0..rows * width).map(|i| (i * 7 % 13) as f64).collect();
+        for threads in [1usize, 2, 4] {
+            for parts in [1usize, 2, 5, 29] {
+                let ranges = even_ranges(rows, parts);
+                let mut out = vec![0.0f64; rows * width];
+                let sums = ExecPolicy::with_threads(threads).map_chunks(
+                    &ranges,
+                    &mut out,
+                    width,
+                    |_, r, chunk| {
+                        let mut s = 0.0;
+                        for (local, i) in r.enumerate() {
+                            for j in 0..width {
+                                let v = ((i * width + j) * 7 % 13) as f64;
+                                chunk[local * width + j] = v;
+                                s += v;
+                            }
+                        }
+                        s
+                    },
+                );
+                assert_eq!(out, want, "threads={threads} parts={parts}");
+                assert_eq!(sums.len(), ranges.len());
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_chunk_reduction_is_thread_count_independent() {
+        // Adversarially scaled values: naive full-serial summation differs
+        // from chunked summation, so equality across thread counts proves
+        // the chunk structure (not the schedule) fixes the rounding.
+        let n = 10_000;
+        let vals: Vec<f64> = (0..n).map(|i| ((i % 97) as f64 - 48.0) * 1e-3 + 1e9).collect();
+        let ranges = even_ranges(n, fixed_chunks(n, 1024));
+        let sum_at = |threads: usize| -> f64 {
+            ExecPolicy::with_threads(threads)
+                .map_ranges(&ranges, |_, r| vals[r].iter().sum::<f64>())
+                .iter()
+                .sum()
+        };
+        let s1 = sum_at(1);
+        assert_eq!(s1.to_bits(), sum_at(2).to_bits());
+        assert_eq!(s1.to_bits(), sum_at(4).to_bits());
+    }
+
+    #[test]
+    fn split_mut_partitions_exactly() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let parts = split_mut(&mut v, [3usize, 0, 4, 3].into_iter());
+        assert_eq!(parts.len(), 4);
+        assert_eq!(&parts[0][..], &[0, 1, 2][..]);
+        assert!(parts[1].is_empty());
+        assert_eq!(&parts[3][..], &[7, 8, 9][..]);
+    }
+
+    #[test]
+    fn auto_and_serial_policies() {
+        assert!(ExecPolicy::auto().threads >= 1);
+        assert!(ExecPolicy::serial().is_serial());
+        assert_eq!(ExecPolicy::with_threads(0).threads, 1);
+        assert_eq!(ExecPolicy::default(), ExecPolicy::serial());
+    }
+}

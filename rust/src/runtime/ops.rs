@@ -18,6 +18,7 @@ use super::artifacts::Artifacts;
 use super::client::{literal_from_mat, literal_vec, mat_from_literal, Runtime};
 use crate::embed::op::Operator;
 use crate::linalg::Mat;
+use crate::par::ExecPolicy;
 use crate::poly::Series;
 
 /// Dense-tile recursion operator over the AOT step kernel.
@@ -102,7 +103,8 @@ impl Operator for PjrtStepOp {
         self.n
     }
 
-    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+    // PJRT owns its own device-side parallelism; the policy is ignored.
+    fn apply_into(&self, x: &Mat, y: &mut Mat, _exec: &ExecPolicy) {
         let zero = Mat::zeros(x.rows, x.cols);
         let out = self
             .step(x, &zero, 1.0, 0.0)
@@ -150,7 +152,8 @@ impl Operator for GaussKernelOp {
         self.l
     }
 
-    fn apply_into(&self, x: &Mat, y: &mut Mat) {
+    // PJRT owns its own device-side parallelism; the policy is ignored.
+    fn apply_into(&self, x: &Mat, y: &mut Mat, _exec: &ExecPolicy) {
         assert_eq!(x.rows, self.l);
         assert_eq!(x.cols, self.d, "gauss artifact baked for d={}", self.d);
         let q = literal_from_mat(x).expect("literal");

@@ -1,7 +1,17 @@
 //! Compressed sparse row matrix + the SpMM hot path.
+//!
+//! The block-product kernels (`spmm_into_with`, `matvec_with`,
+//! `transpose_with`) are row-partitioned over [`crate::par`]'s scoped
+//! thread pool: each worker owns a disjoint, contiguous range of output
+//! rows (balanced by nnz), so the result is bitwise-identical to the
+//! serial loop at any thread count. The policy-free methods (`spmm`,
+//! `matvec`, `transpose`, …) are serial wrappers.
+
+use std::ops::Range;
 
 use super::coo::Coo;
 use crate::linalg::Mat;
+use crate::par::{self, ExecPolicy};
 
 /// CSR sparse matrix (`f64` values).
 #[derive(Clone, Debug)]
@@ -90,42 +100,79 @@ impl Csr {
         (&self.indices[s..e], &self.values[s..e])
     }
 
-    /// y = A x (single vector).
+    /// y = A x (single vector) — the serial wrapper over the d = 1 SpMM
+    /// kernel (one kernel to maintain, one place to parallelize).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_with(x, &ExecPolicy::serial())
+    }
+
+    /// y = A x with row-partitioned threading. Bitwise-identical to
+    /// [`Self::matvec`] at any thread count.
+    pub fn matvec_with(&self, x: &[f64], exec: &ExecPolicy) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let (idx, val) = self.row(i);
-            let mut acc = 0.0;
-            for (&j, &v) in idx.iter().zip(val) {
-                acc += v * x[j as usize];
-            }
-            y[i] = acc;
+        if exec.is_serial() {
+            self.spmm_rows(x, 1, 0..self.rows, &mut y);
+            return y;
         }
+        let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
+        exec.map_chunks(&ranges, &mut y, 1, |_, rows, chunk| self.spmm_rows(x, 1, rows, chunk));
         y
     }
 
-    /// Y = A X — the FastEmbed hot path. X row-major (cols = d) so the
-    /// inner loop streams d contiguous floats per non-zero: the paper's
-    /// "parallel across starting vectors" becomes SIMD/cache-level
-    /// parallelism on one core.
+    /// Y = A X — the FastEmbed hot path (serial wrapper). X row-major
+    /// (cols = d) so the inner loop streams d contiguous floats per
+    /// non-zero: the paper's "parallel across starting vectors" becomes
+    /// SIMD/cache-level parallelism within a row, and `_with` variants
+    /// add row-range parallelism across cores on top.
     pub fn spmm(&self, x: &Mat) -> Mat {
+        self.spmm_with(x, &ExecPolicy::serial())
+    }
+
+    /// Y = A X with row-partitioned threading.
+    pub fn spmm_with(&self, x: &Mat, exec: &ExecPolicy) -> Mat {
         let mut y = Mat::zeros(self.rows, x.cols);
-        self.spmm_into(x, &mut y);
+        self.spmm_into_with(x, &mut y, exec);
         y
     }
 
-    /// SpMM into a preallocated output (hot loop avoids allocation).
+    /// SpMM into a preallocated output (hot loop avoids allocation;
+    /// serial wrapper).
     pub fn spmm_into(&self, x: &Mat, y: &mut Mat) {
+        self.spmm_into_with(x, y, &ExecPolicy::serial());
+    }
+
+    /// SpMM into a preallocated output, output rows partitioned across
+    /// `exec.threads` workers balanced by nnz. Each worker owns a
+    /// disjoint row range, so the result is bitwise-identical to the
+    /// serial kernel at any thread count.
+    pub fn spmm_into_with(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         let d = x.cols;
-        y.data.iter_mut().for_each(|v| *v = 0.0);
-        for i in 0..self.rows {
+        if exec.is_serial() {
+            // Allocation-free serial path (the recursion's default): one
+            // whole-matrix chunk, no partitioning.
+            self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data);
+            return;
+        }
+        let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
+        exec.map_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
+            self.spmm_rows(&x.data, d, rows, chunk)
+        });
+    }
+
+    /// The one SpMM kernel: output rows `rows` of `A·X` written into `y`
+    /// (a slice holding exactly those rows), `x` row-major with width `d`.
+    /// Both the full-matrix entry points and the parallel row chunks call
+    /// this, so serial and threaded execution share every float op.
+    fn spmm_rows(&self, x: &[f64], d: usize, rows: Range<usize>, y: &mut [f64]) {
+        y.fill(0.0);
+        for (local, i) in rows.enumerate() {
             let (idx, val) = self.row(i);
-            let yrow = &mut y.data[i * d..(i + 1) * d];
+            let yrow = &mut y[local * d..(local + 1) * d];
             for (&j, &aij) in idx.iter().zip(val) {
-                let xrow = &x.data[j as usize * d..(j as usize + 1) * d];
+                let xrow = &x[j as usize * d..(j as usize + 1) * d];
                 for (yv, xv) in yrow.iter_mut().zip(xrow) {
                     *yv += aij * xv;
                 }
@@ -133,28 +180,86 @@ impl Csr {
         }
     }
 
-    /// Explicit transpose (CSR -> CSR).
+    /// Explicit transpose (CSR -> CSR), serial wrapper.
     pub fn transpose(&self) -> Csr {
+        self.transpose_with(&ExecPolicy::serial())
+    }
+
+    /// Parallel transpose. Workers own disjoint ranges of *output* rows
+    /// (columns of `self`), each scanning the input and binary-searching
+    /// the entries that fall in its column range, then writing the
+    /// contiguous `indptr[c0]..indptr[c1]` output segment. Within a
+    /// column, entries land in ascending input-row order — exactly the
+    /// serial layout, so the result is bitwise-identical at any thread
+    /// count.
+    ///
+    /// Trade-off: disjoint contiguous writes (no unsafe scatter) cost
+    /// each worker an `O(rows · log deg)` scan of the row index arrays
+    /// on top of its `nnz/threads` share, so the speedup is strongest
+    /// for dense-ish matrices and modest at very low average degree.
+    /// A cheap row-span reject skips rows that cannot intersect the
+    /// worker's column range.
+    pub fn transpose_with(&self, exec: &ExecPolicy) -> Csr {
+        let nnz = self.nnz();
+        // Pass 1: column occupancy (integer counts, so worker-local
+        // accumulation + merge cannot change the result).
         let mut counts = vec![0usize; self.cols + 1];
-        for &j in &self.indices {
-            counts[j as usize + 1] += 1;
+        if exec.is_serial() || nnz == 0 {
+            for &j in &self.indices {
+                counts[j as usize + 1] += 1;
+            }
+        } else {
+            let ranges = par::even_ranges(nnz, exec.threads);
+            let partials = exec.map_ranges(&ranges, |_, r| {
+                let mut c = vec![0usize; self.cols];
+                for &j in &self.indices[r] {
+                    c[j as usize] += 1;
+                }
+                c
+            });
+            for p in partials {
+                for (j, v) in p.into_iter().enumerate() {
+                    counts[j + 1] += v;
+                }
+            }
         }
         for i in 0..self.cols {
             counts[i + 1] += counts[i];
         }
-        let indptr = counts.clone();
-        let mut indices = vec![0u32; self.nnz()];
-        let mut values = vec![0.0; self.nnz()];
-        let mut cursor = counts;
-        for i in 0..self.rows {
-            let (idx, val) = self.row(i);
-            for (&j, &v) in idx.iter().zip(val) {
-                let p = cursor[j as usize];
-                indices[p] = i as u32;
-                values[p] = v;
-                cursor[j as usize] += 1;
+        let indptr = counts;
+        // Pass 2: scatter into per-worker contiguous output segments.
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0; nnz];
+        let parts = if exec.is_serial() { 1 } else { exec.threads.min(self.cols.max(1)) };
+        let col_ranges = par::weighted_ranges(&indptr, parts);
+        let sizes: Vec<usize> =
+            col_ranges.iter().map(|r| indptr[r.end] - indptr[r.start]).collect();
+        let idx_parts = par::split_mut(&mut indices, sizes.iter().copied());
+        let val_parts = par::split_mut(&mut values, sizes.iter().copied());
+        let parts: Vec<(&mut [u32], &mut [f64])> =
+            idx_parts.into_iter().zip(val_parts).collect();
+        exec.map_parts(parts, |k, (ic, vc)| {
+            let r = &col_ranges[k];
+            let base = indptr[r.start];
+            let mut cursor: Vec<usize> = indptr[r.start..r.end].to_vec();
+            for i in 0..self.rows {
+                let (idx, val) = self.row(i);
+                // Row-span reject: sorted columns, so compare the ends.
+                match (idx.first(), idx.last()) {
+                    (Some(&f), Some(&l)) if (l as usize) >= r.start && (f as usize) < r.end => {}
+                    _ => continue,
+                }
+                let lo = idx.partition_point(|&j| (j as usize) < r.start);
+                let hi = lo + idx[lo..].partition_point(|&j| (j as usize) < r.end);
+                for (&j, &v) in idx[lo..hi].iter().zip(&val[lo..hi]) {
+                    let c = j as usize - r.start;
+                    let p = cursor[c] - base;
+                    ic[p] = i as u32;
+                    vc[p] = v;
+                    cursor[c] += 1;
+                }
             }
-        }
+        });
         Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
     }
 
@@ -360,5 +465,65 @@ mod tests {
         let c = Coo::new(3, 3); // all empty
         let a = Csr::from_coo(&c);
         assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn parallel_spmm_bitwise_matches_serial() {
+        forall(
+            38,
+            10,
+            |r| {
+                let rows = 5 + r.below(60);
+                let cols = 5 + r.below(60);
+                let d = 1 + r.below(7);
+                let coo = random_coo(r, rows, cols, rows * 3);
+                (coo, Mat::randn(r, cols, d))
+            },
+            |(coo, x)| {
+                let a = Csr::from_coo(coo);
+                let want = a.spmm(x);
+                for threads in [1usize, 2, 4] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    let got = a.spmm_with(x, &exec);
+                    check(got.data == want.data, format!("spmm differs at {threads} threads"))?;
+                    let mut buf = Mat::from_vec(a.rows, x.cols, vec![3.0; a.rows * x.cols]);
+                    a.spmm_into_with(x, &mut buf, &exec);
+                    check(buf.data == want.data, format!("spmm_into at {threads} threads"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_matvec_and_transpose_bitwise_match_serial() {
+        forall(
+            39,
+            10,
+            |r| {
+                let rows = 4 + r.below(50);
+                let cols = 4 + r.below(50);
+                let coo = random_coo(r, rows, cols, rows * 4);
+                let x: Vec<f64> = (0..cols).map(|_| r.normal()).collect();
+                (coo, x)
+            },
+            |(coo, x)| {
+                let a = Csr::from_coo(coo);
+                let want_y = a.matvec(x);
+                let want_t = a.transpose();
+                for threads in [2usize, 4] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    check(a.matvec_with(x, &exec) == want_y, "matvec differs")?;
+                    let t = a.transpose_with(&exec);
+                    check(
+                        t.indptr == want_t.indptr
+                            && t.indices == want_t.indices
+                            && t.values == want_t.values,
+                        format!("transpose differs at {threads} threads"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 }

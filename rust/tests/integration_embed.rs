@@ -34,7 +34,7 @@ fn compressive_correlations_track_exact() {
         order: 160,
         cascade: 2,
         basis: Basis::Legendre,
-        norm_est: None,
+        ..Params::default()
     });
     let emb = fe.embed(&na, &SpectralFn::Step { c }, &mut rng);
 

@@ -1,0 +1,175 @@
+//! Cross-layer determinism of the parallel execution layer
+//! (`cse::par`): every hot path it touches — SpMM, matvec, transpose,
+//! the FastEmbed recursion, the coordinator pipeline, the eigensolvers,
+//! SimHash builds and K-means — must produce results bitwise-identical
+//! to the serial path for threads ∈ {1, 2, 4} under a fixed seed.
+
+use cse::cluster::{kmeans, KmeansParams};
+use cse::coordinator::{Coordinator, EmbedJob};
+use cse::eigen::lanczos::{lanczos, LanczosParams};
+use cse::eigen::rsvd::{rsvd, RsvdParams};
+use cse::eigen::simult::simultaneous_iteration;
+use cse::embed::{FastEmbed, Params};
+use cse::funcs::SpectralFn;
+use cse::index::{SimHashIndex, SimHashParams};
+use cse::linalg::Mat;
+use cse::par::ExecPolicy;
+use cse::sparse::coo::Coo;
+use cse::sparse::{gen, graph, Csr};
+use cse::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Csr {
+    let mut coo = Coo::new(rows, cols);
+    for _ in 0..nnz {
+        coo.push(rng.below(rows), rng.below(cols), rng.normal());
+    }
+    Csr::from_coo(&coo)
+}
+
+#[test]
+fn spmm_and_matvec_bitwise_identical_across_threads() {
+    let mut rng = Rng::new(41);
+    for _ in 0..3 {
+        let rows = 500 + rng.below(2000);
+        let cols = 500 + rng.below(2000);
+        let d = 1 + rng.below(12);
+        let a = random_csr(&mut rng, rows, cols, rows * 6);
+        let x = Mat::randn(&mut rng, cols, d);
+        let xv: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let want = a.spmm(&x);
+        let want_v = a.matvec(&xv);
+        for threads in THREADS {
+            let exec = ExecPolicy::with_threads(threads);
+            assert_eq!(a.spmm_with(&x, &exec).data, want.data, "spmm @ {threads}");
+            assert_eq!(a.matvec_with(&xv, &exec), want_v, "matvec @ {threads}");
+        }
+    }
+}
+
+#[test]
+fn transpose_bitwise_identical_across_threads() {
+    let mut rng = Rng::new(42);
+    let a = random_csr(&mut rng, 3000, 1700, 15_000);
+    let want = a.transpose();
+    for threads in THREADS {
+        let t = a.transpose_with(&ExecPolicy::with_threads(threads));
+        assert_eq!(t.indptr, want.indptr, "{threads} threads");
+        assert_eq!(t.indices, want.indices, "{threads} threads");
+        assert_eq!(t.values, want.values, "{threads} threads");
+    }
+}
+
+/// The tentpole acceptance check: the full fastembed pipeline, fixed
+/// seed, is bitwise-identical at every thread count.
+#[test]
+fn fastembed_pipeline_thread_count_invariant() {
+    let mut rng = Rng::new(43);
+    let g = gen::sbm_by_degree(&mut rng, 1500, 10, 8.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let run = |threads: usize| {
+        let fe = FastEmbed::new(Params {
+            d: 24,
+            order: 40,
+            cascade: 2,
+            exec: ExecPolicy::with_threads(threads),
+            ..Params::default()
+        });
+        let mut r = Rng::new(7); // fixed seed per run
+        fe.embed(&na, &SpectralFn::Step { c: 0.7 }, &mut r)
+    };
+    let base = run(1);
+    for threads in [2usize, 4] {
+        let emb = run(threads);
+        assert_eq!(base.e.data, emb.e.data, "embedding differs at {threads} threads");
+        assert_eq!(base.matvecs, emb.matvecs);
+    }
+}
+
+#[test]
+fn coordinator_pipeline_invariant_across_both_parallel_axes() {
+    let mut rng = Rng::new(44);
+    let g = gen::sbm_by_degree(&mut rng, 900, 6, 7.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let run = |workers: usize, threads: usize| {
+        let mut job = EmbedJob::new(
+            Params { d: 18, order: 24, cascade: 2, ..Params::default() },
+            SpectralFn::Step { c: 0.6 },
+            11,
+        );
+        job.params.exec = ExecPolicy::with_threads(threads);
+        Coordinator::new(workers).run(&na, &job)
+    };
+    let base = run(1, 1);
+    for (workers, threads) in [(1usize, 4usize), (2, 2), (4, 1), (3, 4)] {
+        let res = run(workers, threads);
+        assert_eq!(base.e.data, res.e.data, "workers={workers} threads={threads}");
+        assert_eq!(base.matvecs, res.matvecs);
+    }
+}
+
+#[test]
+fn eigensolvers_thread_count_invariant() {
+    let mut rng = Rng::new(45);
+    let g = gen::sbm_by_degree(&mut rng, 700, 5, 9.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+
+    let lan = |threads: usize| {
+        let mut r = Rng::new(5);
+        lanczos(
+            &na,
+            6,
+            &LanczosParams { exec: ExecPolicy::with_threads(threads), ..Default::default() },
+            &mut r,
+        )
+    };
+    let rs = |threads: usize| {
+        let mut r = Rng::new(6);
+        rsvd(
+            &na,
+            6,
+            &RsvdParams { exec: ExecPolicy::with_threads(threads), ..Default::default() },
+            &mut r,
+        )
+    };
+    let si = |threads: usize| {
+        let mut r = Rng::new(8);
+        simultaneous_iteration(&na, 6, 50, &mut r, &ExecPolicy::with_threads(threads))
+    };
+
+    let (l1, r1, s1) = (lan(1), rs(1), si(1));
+    for threads in [2usize, 4] {
+        let (lt, rt, st) = (lan(threads), rs(threads), si(threads));
+        assert_eq!(l1.values, lt.values, "lanczos values @ {threads}");
+        assert_eq!(l1.vectors.data, lt.vectors.data, "lanczos vectors @ {threads}");
+        assert_eq!(r1.values, rt.values, "rsvd values @ {threads}");
+        assert_eq!(r1.vectors.data, rt.vectors.data, "rsvd vectors @ {threads}");
+        assert_eq!(s1.values, st.values, "simult values @ {threads}");
+        assert_eq!(s1.vectors.data, st.vectors.data, "simult vectors @ {threads}");
+    }
+}
+
+#[test]
+fn simhash_and_kmeans_thread_count_invariant() {
+    let mut rng = Rng::new(46);
+    let e = Mat::randn(&mut rng, 2500, 12);
+    let p = SimHashParams { tables: 4, bits: 8, probes: 4, seed: 21, ..Default::default() };
+    let base_idx = SimHashIndex::build(&e, p);
+    let base_km = {
+        let mut r = Rng::new(3);
+        kmeans(&e, &KmeansParams { k: 7, ..Default::default() }, &mut r)
+    };
+    for threads in [2usize, 4] {
+        let exec = ExecPolicy::with_threads(threads);
+        let idx = SimHashIndex::build(&e, SimHashParams { exec, ..p });
+        for i in (0..e.rows).step_by(97) {
+            assert_eq!(base_idx.candidates(e.row(i)), idx.candidates(e.row(i)));
+            assert_eq!(base_idx.signatures(e.row(i)), idx.signatures(e.row(i)));
+        }
+        let mut r = Rng::new(3);
+        let km = kmeans(&e, &KmeansParams { k: 7, exec, ..Default::default() }, &mut r);
+        assert_eq!(base_km.assignment, km.assignment, "{threads} threads");
+        assert_eq!(base_km.cost.to_bits(), km.cost.to_bits(), "{threads} threads");
+    }
+}

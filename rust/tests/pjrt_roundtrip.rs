@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use cse::embed::fastembed::apply_series;
 use cse::embed::op::{DenseOp, Operator};
+use cse::par::ExecPolicy;
 use cse::linalg::Mat;
 use cse::poly::legendre;
 use cse::runtime::ops::{GaussKernelOp, PjrtStepOp};
@@ -79,7 +80,7 @@ fn pjrt_series_matches_native_series() {
     let mut mv_pjrt = 0;
     let got = op.apply_series(&series, &q0, &mut mv_pjrt).unwrap();
     let mut mv_native = 0;
-    let want = apply_series(&DenseOp(s), &series, &q0, &mut mv_native);
+    let want = apply_series(&DenseOp(s), &series, &q0, &mut mv_native, &ExecPolicy::serial());
     assert_eq!(mv_pjrt, mv_native);
     let err = got.max_abs_diff(&want);
     // 12 recursion steps in f32 vs f64 accumulate rounding.
@@ -97,7 +98,7 @@ fn step_op_as_plain_operator() {
     let s = random_contraction(&mut rng, n);
     let op = PjrtStepOp::new(rt, &arts, &s).unwrap();
     let x = Mat::randn(&mut rng, n, d);
-    let got = Operator::apply(&op, &x);
+    let got = Operator::apply(&op, &x, &ExecPolicy::serial());
     let want = s.matmul(&x);
     assert!(got.max_abs_diff(&want) < 1e-3);
     assert_eq!(op.dim(), n);
@@ -118,7 +119,7 @@ fn gauss_artifact_matches_dense_kernel() {
     let op = GaussKernelOp::new(rt, &arts, &pts, alpha).unwrap();
 
     let q = Mat::randn(&mut rng, l, d);
-    let got = Operator::apply(&op, &q);
+    let got = Operator::apply(&op, &q, &ExecPolicy::serial());
 
     // Dense oracle: materialize K.
     let mut k = Mat::zeros(l, l);
@@ -168,7 +169,7 @@ fn fused_fastembed_artifact_matches_rust_loop() {
     let got = cse::runtime::client::mat_from_literal(&out, n, d).unwrap();
 
     let mut mv = 0;
-    let want = apply_series(&DenseOp(s), &series, &omega, &mut mv);
+    let want = apply_series(&DenseOp(s), &series, &omega, &mut mv, &ExecPolicy::serial());
     let err = got.max_abs_diff(&want);
     assert!(err < 5e-2, "fused artifact vs rust loop: {err}");
 }
@@ -201,6 +202,7 @@ fn power_iter_artifact_estimates_norm() {
         &DenseOp(s),
         &cse::embed::norm::NormEstParams { iters: 50, safety: 1.0, vectors: Some(16) },
         &mut rng2,
+        &ExecPolicy::serial(),
     );
     assert!(
         (est[0] as f64 - native).abs() < 0.05 * native.max(0.01),
