@@ -15,7 +15,9 @@
 //! Each experiment prints a paper-style table AND writes a TSV under
 //! bench_out/ for external plotting.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use cse::cluster::{kmeans, modularity, KmeansParams};
 use cse::coordinator::service::Query;
@@ -35,6 +37,42 @@ use cse::util::json::Json;
 use cse::util::rng::Rng;
 use cse::util::stats;
 use cse::util::timer::Timer;
+
+/// Allocation-counting wrapper around the system allocator, so the
+/// `kernels` experiment can report allocs/iteration of the hot loops
+/// (the zero-steady-state-allocation acceptance check) without any
+/// external profiler.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> usize {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
@@ -648,11 +686,101 @@ fn serving() {
 
 // -------------------------------------------------------------- kernels K1
 
+/// The PR 2 spawn-per-region dispatcher, verbatim: `threads − 1` scoped
+/// threads spawned and joined per region. Kept here as the baseline the
+/// persistent pool must beat on small regions.
+fn scoped_run_indexed(threads: usize, tasks: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.clamp(1, tasks.max(1));
+    if threads <= 1 {
+        for k in 0..tasks {
+            f(k);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let worker = || loop {
+        let k = next.fetch_add(1, Ordering::Relaxed);
+        if k >= tasks {
+            break;
+        }
+        f(k);
+    };
+    let worker = &worker;
+    std::thread::scope(|scope| {
+        for _ in 1..threads {
+            scope.spawn(worker);
+        }
+        worker();
+    });
+}
+
+/// Spawn-overhead micro-bench: µs per small parallel region (32 tasks of
+/// ~1µs each — MGS-column-dot scale) through the persistent pool vs the
+/// scoped-spawn baseline it replaced.
+fn region_overhead(threads: usize) -> (f64, f64) {
+    const TASKS: usize = 32;
+    const REGIONS: usize = 2_000;
+    let src: Vec<f64> = (0..TASKS * 256).map(|i| (i % 17) as f64 * 0.25).collect();
+    let sink: Vec<AtomicUsize> = (0..TASKS).map(|_| AtomicUsize::new(0)).collect();
+    let task = |k: usize| {
+        let s: f64 = src[k * 256..(k + 1) * 256].iter().sum();
+        sink[k].store(s as usize, Ordering::Relaxed);
+    };
+    let exec = ExecPolicy::with_threads(threads);
+    let pool = cse::util::timer::bench(3, || {
+        for _ in 0..REGIONS {
+            exec.run_indexed(TASKS, &task);
+        }
+    });
+    let scoped = cse::util::timer::bench(3, || {
+        for _ in 0..REGIONS {
+            scoped_run_indexed(threads, TASKS, &task);
+        }
+    });
+    (
+        pool.mean_secs / REGIONS as f64 * 1e6,
+        scoped.mean_secs / REGIONS as f64 * 1e6,
+    )
+}
+
+/// Allocations per `apply_series` call (order-`order` Chebyshev-style
+/// recursion over a d-column block): the throwaway-buffer path vs the
+/// workspace path after warm-up. The latter must be **zero** — that is
+/// the zero-steady-state-allocation acceptance check.
+fn recursion_allocs(na: &Csr, x: &Mat, order: usize, exec: &ExecPolicy) -> (f64, f64) {
+    let series = legendre::step_coeffs(order, 0.8);
+    let reps = 10;
+    let mut mv = 0usize;
+    // Throwaway-buffer path (fresh Workspace per call).
+    std::hint::black_box(cse::embed::fastembed::apply_series(na, &series, x, &mut mv, exec));
+    let before = allocs_now();
+    for _ in 0..reps {
+        std::hint::black_box(cse::embed::fastembed::apply_series(na, &series, x, &mut mv, exec));
+    }
+    let fresh = (allocs_now() - before) as f64 / reps as f64;
+    // Workspace path, warmed.
+    let mut ws = cse::par::Workspace::new();
+    for _ in 0..2 {
+        let e = cse::embed::fastembed::apply_series_ws(na, &series, x, &mut mv, exec, &mut ws);
+        ws.give_mat(e);
+    }
+    let before = allocs_now();
+    for _ in 0..reps {
+        let e = cse::embed::fastembed::apply_series_ws(na, &series, x, &mut mv, exec, &mut ws);
+        ws.give_mat(e);
+    }
+    let warm = (allocs_now() - before) as f64 / reps as f64;
+    (fresh, warm)
+}
+
 /// Parallel-execution-layer bench: SpMM GFLOP/s and embed wall-clock at
 /// 1/2/4 threads on the n=100k synthetic serving graph, plus the
 /// pre-refactor serial SpMM loop inlined as a reference so regressions of
-/// the 1-thread path are visible. Writes bench_out/kernels.tsv and
-/// BENCH_kernels.json for trend tracking.
+/// the 1-thread path are visible; region-dispatch overhead of the
+/// persistent pool vs the scoped-spawn baseline; and allocs/iteration of
+/// the recursion with and without workspace reuse. Appends a trajectory
+/// entry to BENCH_kernels.json (and writes bench_out/kernels.tsv) so the
+/// kernel trend stays monotone across perf PRs.
 fn kernels() {
     let n = bench_n(100_000);
     let d = 64;
@@ -756,33 +884,112 @@ fn kernels() {
     )
     .unwrap();
 
+    // Region-dispatch overhead: persistent pool vs scoped-spawn baseline
+    // on 32-task micro-regions (the pool must win — that is the tentpole).
+    println!("\n{:<12} {:>14} {:>14} {:>9}", "dispatch", "pool µs/reg", "scoped µs/reg", "speedup");
+    let mut dispatch_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &threads in &[2usize, 4] {
+        let (pool_us, scoped_us) = region_overhead(threads);
+        println!(
+            "{:<12} {pool_us:>14.2} {scoped_us:>14.2} {:>8.2}x",
+            format!("{threads} threads"),
+            scoped_us / pool_us
+        );
+        dispatch_rows.push((threads, pool_us, scoped_us));
+    }
+
+    // Allocation behaviour of the recursion's steady state.
+    let x8 = Mat::randn(&mut rng, n, 8);
+    println!("\n{:<26} {:>16} {:>16}", "recursion allocs/iter", "fresh buffers", "warm workspace");
+    let mut alloc_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &threads in &thread_counts {
+        let exec = ExecPolicy::with_threads(threads);
+        let (fresh, warm) = recursion_allocs(&na, &x8, 20, &exec);
+        println!("{:<26} {fresh:>16.1} {warm:>16.1}", format!("{threads} thread(s), L=20 d=8"));
+        alloc_rows.push((threads, fresh, warm));
+    }
+    println!("(warm workspace column must be 0 — the zero-steady-state-allocation check)");
+
+    // Machine-readable trajectory: append this run to BENCH_kernels.json
+    // so perf PRs can be checked for monotone kernel throughput.
+    let obj = |pairs: Vec<(&str, Json)>| {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
     let json_rows: Vec<Json> = rows
         .iter()
         .map(|r| {
-            let mut m = std::collections::BTreeMap::new();
-            m.insert("threads".to_string(), Json::Num(r.threads as f64));
-            m.insert("spmm_secs".to_string(), Json::Num(r.spmm_secs));
-            m.insert("spmm_gflops".to_string(), Json::Num(flops / r.spmm_secs / 1e9));
-            m.insert("spmm_speedup_vs_1".to_string(), Json::Num(base_spmm / r.spmm_secs));
-            m.insert("embed_secs".to_string(), Json::Num(r.embed_secs));
-            m.insert("embed_speedup_vs_1".to_string(), Json::Num(base_embed / r.embed_secs));
-            Json::Obj(m)
+            obj(vec![
+                ("threads", Json::Num(r.threads as f64)),
+                ("spmm_secs", Json::Num(r.spmm_secs)),
+                ("spmm_gflops", Json::Num(flops / r.spmm_secs / 1e9)),
+                ("spmm_speedup_vs_1", Json::Num(base_spmm / r.spmm_secs)),
+                ("embed_secs", Json::Num(r.embed_secs)),
+                ("embed_speedup_vs_1", Json::Num(base_embed / r.embed_secs)),
+            ])
         })
         .collect();
-    let mut top = std::collections::BTreeMap::new();
-    top.insert("bench".to_string(), Json::Str("kernels".to_string()));
-    top.insert("n".to_string(), Json::Num(n as f64));
-    top.insert("nnz".to_string(), Json::Num(nnz as f64));
-    top.insert("d".to_string(), Json::Num(d as f64));
-    top.insert(
-        "host_threads".to_string(),
-        Json::Num(std::thread::available_parallelism().map_or(0.0, |c| c.get() as f64)),
-    );
-    top.insert("spmm_reference_secs".to_string(), Json::Num(reference.mean_secs));
-    top.insert("serial_ratio_vs_reference".to_string(), Json::Num(serial_ratio));
-    top.insert("results".to_string(), Json::Arr(json_rows));
-    std::fs::write("BENCH_kernels.json", Json::Obj(top).to_string()).unwrap();
-    println!("-> wrote bench_out/kernels.tsv and BENCH_kernels.json");
+    let dispatch_json: Vec<Json> = dispatch_rows
+        .iter()
+        .map(|&(threads, pool_us, scoped_us)| {
+            obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("pool_us_per_region", Json::Num(pool_us)),
+                ("scoped_us_per_region", Json::Num(scoped_us)),
+            ])
+        })
+        .collect();
+    let alloc_json: Vec<Json> = alloc_rows
+        .iter()
+        .map(|&(threads, fresh, warm)| {
+            obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("allocs_per_iter_fresh", Json::Num(fresh)),
+                ("allocs_per_iter_warm_workspace", Json::Num(warm)),
+            ])
+        })
+        .collect();
+    let entry = obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("nnz", Json::Num(nnz as f64)),
+        ("d", Json::Num(d as f64)),
+        (
+            "host_threads",
+            Json::Num(std::thread::available_parallelism().map_or(0.0, |c| c.get() as f64)),
+        ),
+        ("spmm_reference_secs", Json::Num(reference.mean_secs)),
+        ("serial_ratio_vs_reference", Json::Num(serial_ratio)),
+        ("results", Json::Arr(json_rows)),
+        ("dispatch", Json::Arr(dispatch_json)),
+        ("recursion_allocs", Json::Arr(alloc_json)),
+    ]);
+    // Preserve any prior trajectory (a legacy single-run file contributes
+    // its results as entry zero).
+    let prior = std::fs::read_to_string("BENCH_kernels.json")
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let mut trajectory: Vec<Json> = match &prior {
+        Some(j) => match j.get("trajectory").and_then(|t| t.as_arr()) {
+            Some(entries) => entries.to_vec(),
+            None if j.get("results").is_some() => vec![j.clone()],
+            None => Vec::new(),
+        },
+        None => Vec::new(),
+    };
+    trajectory.push(entry);
+    let top = obj(vec![
+        ("bench", Json::Str("kernels".to_string())),
+        (
+            "note",
+            Json::Str(
+                "appended per `cargo bench -- kernels` run; keep spmm_gflops, dispatch \
+                 pool-vs-scoped, and warm-workspace allocs (= 0) monotone across perf PRs"
+                    .to_string(),
+            ),
+        ),
+        ("trajectory", Json::Arr(trajectory)),
+    ]);
+    std::fs::write("BENCH_kernels.json", top.to_string()).unwrap();
+    println!("-> wrote bench_out/kernels.tsv and appended to BENCH_kernels.json");
 }
 
 // ------------------------------------------------------------------ §Perf

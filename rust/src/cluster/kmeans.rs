@@ -6,10 +6,19 @@ use crate::linalg::Mat;
 use crate::par::{self, ExecPolicy};
 use crate::util::rng::Rng;
 
-/// Rows per chunk of the parallel assignment step. Fixed (not derived
-/// from the thread count) so the chunk-folded cost reduction — and with
-/// it the early-stop iteration count — is identical at any thread count.
+/// Rows per chunk of the parallel assignment and update steps. Fixed
+/// (not derived from the thread count) so the chunk-folded cost and
+/// centroid-sum reductions — and with them the early-stop iteration
+/// count — are identical at any thread count.
 const ASSIGN_ROWS_PER_CHUNK: usize = 1024;
+
+/// Cap on the update step's parallel stripes. Each stripe carries a full
+/// k×(dim+1) accumulator, so unlike the assignment chunking (which has
+/// no per-chunk state) the update scratch must stay bounded: at most
+/// `UPDATE_STRIPES × k × (dim+1)` doubles whatever n is. A constant (not
+/// thread-derived) so the merge structure — and every output bit — is
+/// identical at any thread count.
+const UPDATE_STRIPES: usize = 32;
 
 #[derive(Clone, Copy, Debug)]
 pub struct KmeansParams {
@@ -17,8 +26,10 @@ pub struct KmeansParams {
     pub max_iters: usize,
     /// Relative cost-improvement threshold for early stop.
     pub tol: f64,
-    /// Threading for the assignment step (the dominant n·k·d cost).
-    /// Assignments and cost are thread-count-independent.
+    /// Threading for the assignment step (the dominant n·k·d cost) and
+    /// the centroid update (per-chunk partial sums merged in fixed chunk
+    /// order). Assignments, cost, and centroids are
+    /// thread-count-independent.
     pub exec: ExecPolicy,
 }
 
@@ -45,18 +56,50 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
     let mut prev_cost = f64::INFINITY;
     let mut iters = 0;
 
+    // Update-step scratch, allocated once: per-stripe (sums | counts)
+    // accumulators laid out as one flat buffer so the parallel region
+    // writes disjoint stripes, plus the merged sums/counts. Counts ride
+    // along as f64 (exact below 2^53).
+    let nchunks = par::fixed_chunks(n.max(1), ASSIGN_ROWS_PER_CHUNK).min(UPDATE_STRIPES);
+    let row_ranges = par::even_ranges(n, nchunks);
+    let stripe_ranges: Vec<std::ops::Range<usize>> =
+        (0..row_ranges.len()).map(|c| c..c + 1).collect();
+    let stride = k * dim + k;
+    let mut partials = vec![0.0f64; row_ranges.len() * stride];
+    let mut counts = vec![0usize; k];
+    let mut sums = Mat::zeros(k, dim);
+
     for it in 0..params.max_iters {
         iters = it + 1;
         // Assign (parallel over fixed row chunks).
         let cost = assign_rows(x, &centroids, &mut assignment, &params.exec);
-        // Update.
-        let mut counts = vec![0usize; k];
-        let mut sums = Mat::zeros(k, dim);
-        for i in 0..n {
-            let c = assignment[i];
-            counts[c] += 1;
-            for (s, v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
-                *s += v;
+        // Update: per-chunk partial sums/counts in parallel, merged in
+        // fixed chunk order — bitwise independent of the thread count.
+        {
+            let assignment = &assignment;
+            let row_ranges = &row_ranges;
+            params.exec.for_chunks(&stripe_ranges, &mut partials, stride, |c, _, out| {
+                out.fill(0.0);
+                let (psums, pcounts) = out.split_at_mut(k * dim);
+                for i in row_ranges[c].clone() {
+                    let cl = assignment[i];
+                    pcounts[cl] += 1.0;
+                    let dst = &mut psums[cl * dim..(cl + 1) * dim];
+                    for (s, v) in dst.iter_mut().zip(x.row(i)) {
+                        *s += v;
+                    }
+                }
+            });
+        }
+        counts.fill(0);
+        sums.data.fill(0.0);
+        for part in partials.chunks_exact(stride) {
+            let (psums, pcounts) = part.split_at(k * dim);
+            for (cnt, p) in counts.iter_mut().zip(pcounts) {
+                *cnt += *p as usize;
+            }
+            for (s, p) in sums.data.iter_mut().zip(psums) {
+                *s += p;
             }
         }
         for c in 0..k {

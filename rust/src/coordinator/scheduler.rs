@@ -13,20 +13,28 @@
 //! shard's block products (`crate::par`). Both are deterministic, so any
 //! (workers, threads) combination produces the same embedding; keep
 //! workers × threads ≤ cores to avoid oversubscription. Wide graphs with
-//! few columns want `exec` threads; many-column jobs want workers.
+//! few columns want `exec` threads; many-column jobs want workers —
+//! and [`Coordinator::new`]`(0)` (the CLI default) picks the split
+//! automatically per job via [`auto_split`]: shard workers first (they
+//! scale embarrassingly), leftover cores as kernel threads.
+//!
+//! Each shard worker owns a [`Workspace`], so after its first shard the
+//! recursion's steady state performs zero heap allocations (the shard
+//! blocks themselves recycle through the same arena).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
-use crate::embed::fastembed::{apply_series, plan_scaled};
+use crate::embed::fastembed::{apply_series_ws, plan_scaled};
 use crate::embed::norm::spectral_norm;
 use crate::embed::omega::rademacher_omega;
 use crate::embed::op::{Operator, ScaledOp};
 use crate::embed::Params;
 use crate::funcs::SpectralFn;
 use crate::linalg::Mat;
+use crate::par::{ExecPolicy, Workspace};
 use crate::poly::cascade::CascadePlan;
 use crate::util::rng::Rng;
 
@@ -38,11 +46,17 @@ pub struct EmbedJob {
     /// Column-shard width (starting vectors per work item).
     pub shard_width: usize,
     pub seed: u64,
+    /// Let the coordinator pick the kernel thread count from the core
+    /// count (`cores / workers`), *replacing* `params.exec`. Off by
+    /// default so an explicit `params.exec` — including deliberately
+    /// serial kernels — is always respected; the CLI sets this when
+    /// `--threads 0`.
+    pub auto_threads: bool,
 }
 
 impl EmbedJob {
     pub fn new(params: Params, f: SpectralFn, seed: u64) -> Self {
-        EmbedJob { params, f, shard_width: 8, seed }
+        EmbedJob { params, f, shard_width: 8, seed, auto_threads: false }
     }
 }
 
@@ -53,10 +67,16 @@ pub struct JobResult {
     pub norm_estimate: f64,
     pub matvecs: usize,
     pub shards: usize,
+    /// Shard workers actually used (after auto-composition).
+    pub workers: usize,
+    /// Kernel threads per shard actually used (after auto-composition).
+    pub threads: usize,
 }
 
-/// Worker-pool coordinator. `workers` is the shard-level pool size;
-/// per-shard kernels additionally honour `job.params.exec`.
+/// Worker-pool coordinator. `workers` is the shard-level pool size
+/// (`0` = auto-compose workers × kernel threads from the core count,
+/// see [`auto_split`]); per-shard kernels additionally honour
+/// `job.params.exec`.
 pub struct Coordinator {
     pub workers: usize,
     pub metrics: Arc<Metrics>,
@@ -68,9 +88,25 @@ struct Shard {
     omega: Mat,
 }
 
+/// Compose (shard workers, kernel threads per shard) from the core
+/// count: shard workers first — column chains never interact, so shard
+/// parallelism is the cheap axis — then leftover cores as kernel
+/// threads, with workers × threads ≤ cores always.
+pub fn auto_split(cores: usize, shards: usize) -> (usize, usize) {
+    let cores = cores.max(1);
+    let workers = shards.clamp(1, cores);
+    (workers, (cores / workers).max(1))
+}
+
 impl Coordinator {
     pub fn new(workers: usize) -> Self {
-        Coordinator { workers: workers.max(1), metrics: Arc::new(Metrics::default()) }
+        Coordinator { workers, metrics: Arc::new(Metrics::default()) }
+    }
+
+    /// Auto-composing coordinator (`workers == 0`): picks shard workers
+    /// × kernel threads per job from the machine's core count.
+    pub fn auto() -> Self {
+        Coordinator::new(0)
     }
 
     /// Run an embedding job over `op`, sharding Ω's columns across the
@@ -98,9 +134,29 @@ impl Coordinator {
         assert_eq!(omega.rows, n);
         let d = omega.cols;
         let mut rng = Rng::new(job.seed ^ 0x9E37_79B9_7F4A_7C15);
-        self.metrics.set_threads(job.params.exec.threads);
+
+        // Resolve the two parallelism axes: explicit knobs always pass
+        // through; `workers == 0` auto-composes the worker count, and
+        // `job.auto_threads` opts the kernel thread count into the same
+        // core-budget split (`workers × threads ≤ cores`).
+        let width = job.shard_width.clamp(1, d);
+        let nshards = d.div_ceil(width);
+        let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        let (workers, auto_t) = if self.workers == 0 {
+            auto_split(cores, nshards)
+        } else {
+            (self.workers, (cores / self.workers).max(1))
+        };
+        let exec = if job.auto_threads {
+            ExecPolicy::with_threads(auto_t)
+        } else {
+            job.params.exec
+        };
+        let exec = &exec;
+
+        self.metrics.set_threads(exec.threads);
         let kappa = match &job.params.norm_est {
-            Some(pe) => spectral_norm(op, pe, &mut rng, &job.params.exec).max(1e-300),
+            Some(pe) => spectral_norm(op, pe, &mut rng, exec).max(1e-300),
             None => 1.0,
         };
         let plan = plan_scaled(
@@ -112,9 +168,7 @@ impl Coordinator {
         );
 
         // Build shards (column slices of Ω).
-        let width = job.shard_width.clamp(1, d);
-        let queue: BoundedQueue<Shard> = BoundedQueue::new(2 * self.workers.max(1));
-        let nshards = d.div_ceil(width);
+        let queue: BoundedQueue<Shard> = BoundedQueue::new(2 * workers);
         self.metrics.shards_total.store(nshards, Ordering::Relaxed);
         self.metrics.shards_done.store(0, Ordering::Relaxed);
 
@@ -124,21 +178,25 @@ impl Coordinator {
             (0..nshards).map(|_| std::sync::Mutex::new(None)).collect();
 
         std::thread::scope(|scope| {
-            // Workers.
-            for _ in 0..self.workers {
+            // Workers, each owning a recycling workspace: after the first
+            // shard the recursion allocates nothing.
+            for _ in 0..workers {
                 let queue = &queue;
                 let plan = &plan;
                 let scaled = &scaled;
                 let results = &results;
                 let total = &total_matvecs;
                 let metrics = Arc::clone(&self.metrics);
-                let exec = &job.params.exec;
                 scope.spawn(move || {
+                    let mut ws = Workspace::new();
                     while let Some(shard) = queue.pop() {
                         let mut mv = 0usize;
                         let mut e = shard.omega;
                         for _ in 0..plan.b {
-                            e = apply_series(scaled, &plan.stage, &e, &mut mv, exec);
+                            let next =
+                                apply_series_ws(scaled, &plan.stage, &e, &mut mv, exec, &mut ws);
+                            ws.give_mat(e);
+                            e = next;
                         }
                         total.fetch_add(mv, Ordering::Relaxed);
                         metrics.add_matvecs(mv);
@@ -180,6 +238,8 @@ impl Coordinator {
             norm_estimate: kappa,
             matvecs: total_matvecs.into_inner(),
             shards: nshards,
+            workers,
+            threads: exec.threads,
         }
     }
 }
@@ -198,6 +258,7 @@ mod tests {
             f: SpectralFn::Step { c: 0.5 },
             shard_width: width,
             seed: 99,
+            auto_threads: false,
         }
     }
 
@@ -278,6 +339,55 @@ mod tests {
             assert_eq!(base.e.data, res.e.data, "workers={workers} threads={threads}");
             assert_eq!(coord.metrics.snapshot().threads, threads);
         }
+    }
+
+    #[test]
+    fn auto_split_composes_within_core_budget() {
+        for (cores, shards, want) in [
+            (8usize, 3usize, (3usize, 2usize)), // 3 workers × 2 threads = 6 ≤ 8
+            (8, 1, (1, 8)),                     // single shard: all cores go to kernels
+            (8, 20, (8, 1)),                    // many shards: all cores go to workers
+            (4, 4, (4, 1)),
+            (1, 5, (1, 1)),
+            (0, 0, (1, 1)), // degenerate inputs clamp sanely
+        ] {
+            assert_eq!(auto_split(cores, shards), want, "cores={cores} shards={shards}");
+        }
+        for cores in 1..=16 {
+            for shards in 1..=32 {
+                let (w, t) = auto_split(cores, shards);
+                assert!(w * t <= cores.max(1), "oversubscribed: {w}x{t} on {cores}");
+                assert!(w >= 1 && t >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_coordinator_matches_manual_bitexact() {
+        let mut rng = Rng::new(216);
+        let g = gen::sbm_by_degree(&mut rng, 100, 4, 6.0, 1.0);
+        let na = graph::normalized_adjacency(&g.adj);
+        let j = job(12, 16, 2, 4);
+        let manual = Coordinator::new(2).run(&na, &j);
+        // Fully automatic: workers and kernel threads both composed.
+        let mut ja = job(12, 16, 2, 4);
+        ja.auto_threads = true;
+        let auto = Coordinator::auto().run(&na, &ja);
+        assert_eq!(manual.e.data, auto.e.data, "auto-composition must not change bits");
+        assert_eq!(auto.shards, 3);
+        assert!(auto.workers >= 1 && auto.threads >= 1);
+        let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        assert!(auto.workers * auto.threads <= cores.max(1));
+        // An explicit kernel policy — including deliberately serial — is
+        // always respected by the auto coordinator.
+        let mut jt = job(12, 16, 2, 4);
+        jt.params.exec = crate::par::ExecPolicy::with_threads(2);
+        let auto_t = Coordinator::auto().run(&na, &jt);
+        assert_eq!(auto_t.threads, 2);
+        assert_eq!(manual.e.data, auto_t.e.data);
+        let serial = Coordinator::auto().run(&na, &job(12, 16, 2, 4));
+        assert_eq!(serial.threads, 1, "explicit serial kernels must not be overridden");
+        assert_eq!(manual.e.data, serial.e.data);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use super::PartialEig;
 use crate::embed::op::Operator;
 use crate::linalg::eigh::tridiag_eigh;
 use crate::linalg::Mat;
-use crate::par::ExecPolicy;
+use crate::par::{self, ExecPolicy, Workspace};
 use crate::util::rng::Rng;
 
 /// Parameters for [`lanczos`].
@@ -19,7 +19,10 @@ pub struct LanczosParams {
     pub subspace: Option<usize>,
     /// Residual tolerance for counting an eigenpair converged.
     pub tol: f64,
-    /// Threading for the matvecs (the reorthogonalization stays serial).
+    /// Threading for the matvecs, the full reorthogonalization (basis
+    /// dots fan out across the pool, the update stays in basis order so
+    /// results are bitwise thread-count-independent), and the Ritz
+    /// vector assembly.
     pub exec: ExecPolicy,
 }
 
@@ -39,6 +42,7 @@ pub fn lanczos(
     let n = op.dim();
     let k = k.min(n);
     let m = params.subspace.unwrap_or(2 * k + 40).clamp(k, n);
+    let exec = &params.exec;
 
     // Krylov basis as rows (contiguous vectors).
     let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m);
@@ -52,15 +56,20 @@ pub fn lanczos(
     }
     normalize(&mut v);
 
+    // Persistent iteration buffers: the only per-iteration allocation
+    // left is the basis vector itself (which must be retained anyway).
+    let mut ws = Workspace::new();
     let mut x_buf = Mat::zeros(n, 1);
     let mut y_buf = Mat::zeros(n, 1);
+    let mut w = vec![0.0; n];
+    let mut dots = vec![0.0; m];
 
     for j in 0..m {
         // w = S v_j
         x_buf.data.copy_from_slice(&v);
-        op.apply_into(&x_buf, &mut y_buf, &params.exec);
+        op.apply_into_ws(&x_buf, &mut y_buf, exec, &mut ws);
         matvecs += 1;
-        let mut w = y_buf.data.clone();
+        w.copy_from_slice(&y_buf.data);
         // alpha_j = v_j . w
         let a: f64 = v.iter().zip(&w).map(|(a, b)| a * b).sum();
         alpha.push(a);
@@ -77,14 +86,7 @@ pub fn lanczos(
         basis.push(v.clone());
         // Full reorthogonalization (twice) against all previous vectors.
         for _ in 0..2 {
-            for u in &basis {
-                let d: f64 = u.iter().zip(&w).map(|(a, b)| a * b).sum();
-                if d.abs() > 0.0 {
-                    for (wi, ui) in w.iter_mut().zip(u) {
-                        *wi -= d * ui;
-                    }
-                }
-            }
+            reorthogonalize(&mut w, &basis, &mut dots, exec);
         }
         let b = norm(&w);
         if j + 1 == m {
@@ -93,45 +95,82 @@ pub fn lanczos(
         if b < 1e-13 {
             // Invariant subspace found: restart with a fresh random
             // direction orthogonal to the basis.
-            let mut fresh = vec![0.0; n];
-            for x in fresh.iter_mut() {
+            for x in w.iter_mut() {
                 *x = rng.normal();
             }
-            for u in &basis {
-                let d: f64 = u.iter().zip(&fresh).map(|(a, b)| a * b).sum();
-                for (fi, ui) in fresh.iter_mut().zip(u) {
-                    *fi -= d * ui;
-                }
-            }
-            normalize(&mut fresh);
+            reorthogonalize(&mut w, &basis, &mut dots, exec);
+            normalize(&mut w);
             beta.push(0.0);
-            v = fresh;
+            std::mem::swap(&mut v, &mut w);
         } else {
             beta.push(b);
-            v = w;
-            for x in v.iter_mut() {
-                *x /= b;
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / b;
             }
         }
     }
 
-    // Rayleigh–Ritz on the tridiagonal T.
+    // Rayleigh–Ritz on the tridiagonal T; basis combination fans out
+    // over row ranges (element-wise in i, fixed j-then-col order per
+    // element, so bitwise thread-count-independent).
     let mm = alpha.len();
     let (theta, z) = tridiag_eigh(&alpha, &beta[..mm - 1]);
     let k = k.min(mm);
     let mut vectors = Mat::zeros(n, k);
-    for col in 0..k {
-        for (j, u) in basis.iter().enumerate() {
-            let zj = z[(j, col)];
-            if zj == 0.0 {
-                continue;
-            }
-            for i in 0..n {
-                vectors[(i, col)] += zj * u[i];
+    let basis = &basis;
+    let z = &z;
+    let ranges = par::even_ranges(n, exec.chunks(n));
+    exec.for_chunks(&ranges, &mut vectors.data, k, |_, rows, out| {
+        for (local, i) in rows.enumerate() {
+            let orow = &mut out[local * k..(local + 1) * k];
+            for (j, u) in basis.iter().enumerate() {
+                let ui = u[i];
+                for (col, o) in orow.iter_mut().enumerate() {
+                    let zj = z[(j, col)];
+                    if zj == 0.0 {
+                        continue;
+                    }
+                    *o += zj * ui;
+                }
             }
         }
-    }
+    });
     PartialEig { values: theta[..k].to_vec(), vectors, matvecs }
+}
+
+/// One classical Gram–Schmidt pass of `w` against `basis`, parallel and
+/// deterministic: the basis dots fan out across the pool (each dot is a
+/// serial full-length sum, so its bits don't depend on scheduling), then
+/// every element of `w` subtracts its projections in fixed basis order.
+/// Called twice per Lanczos step ("twice is enough"), this matches full
+/// reorthogonalization to machine precision while parallelizing the
+/// O(n·m) stage that used to be serial.
+fn reorthogonalize(w: &mut [f64], basis: &[Vec<f64>], dots: &mut [f64], exec: &ExecPolicy) {
+    let nb = basis.len();
+    if nb == 0 {
+        return;
+    }
+    let dots = &mut dots[..nb];
+    {
+        let w = &*w;
+        let ranges = par::even_ranges(nb, exec.chunks(nb));
+        exec.for_chunks(&ranges, dots, 1, |_, ks, out| {
+            for (slot, k) in out.iter_mut().zip(ks) {
+                *slot = basis[k].iter().zip(w).map(|(a, b)| a * b).sum();
+            }
+        });
+    }
+    let dots = &*dots;
+    let ranges = par::even_ranges(w.len(), exec.chunks(w.len()));
+    exec.for_chunks(&ranges, w, 1, |_, is, out| {
+        for (slot, i) in out.iter_mut().zip(is) {
+            let mut acc = *slot;
+            for (d, u) in dots.iter().zip(basis) {
+                acc -= d * u[i];
+            }
+            *slot = acc;
+        }
+    });
 }
 
 fn norm(v: &[f64]) -> f64 {

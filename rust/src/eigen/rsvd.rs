@@ -5,9 +5,9 @@
 use super::PartialEig;
 use crate::embed::op::Operator;
 use crate::linalg::eigh::jacobi_eigh;
-use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::qr::mgs_orthonormalize_ws;
 use crate::linalg::Mat;
-use crate::par::ExecPolicy;
+use crate::par::{ExecPolicy, Workspace};
 use crate::util::rng::Rng;
 
 /// Parameters (paper's comparison settings as defaults).
@@ -17,7 +17,8 @@ pub struct RsvdParams {
     pub power_iters: usize,
     /// Oversampling l (sketch width is k + l).
     pub oversample: usize,
-    /// Threading for the block products (QR stays serial).
+    /// Threading for the block products and the inter-power
+    /// re-orthonormalization (both deterministic at any thread count).
     pub exec: ExecPolicy,
 }
 
@@ -39,21 +40,23 @@ pub fn rsvd(
     let n = op.dim();
     let k = k.min(n);
     let p = (k + params.oversample).min(n);
+    let exec = &params.exec;
+    let mut ws = Workspace::new();
     let mut q = Mat::randn(rng, n, p);
     let mut y = Mat::zeros(n, p);
     let mut matvecs = 0;
-    op.apply_into(&q, &mut y, &params.exec);
+    op.apply_into_ws(&q, &mut y, exec, &mut ws);
     matvecs += p;
     std::mem::swap(&mut q, &mut y);
-    mgs_orthonormalize(&mut q, 1e-12);
+    mgs_orthonormalize_ws(&mut q, 1e-12, exec, &mut ws);
     for _ in 0..params.power_iters {
-        op.apply_into(&q, &mut y, &params.exec);
+        op.apply_into_ws(&q, &mut y, exec, &mut ws);
         matvecs += p;
         std::mem::swap(&mut q, &mut y);
-        mgs_orthonormalize(&mut q, 1e-12);
+        mgs_orthonormalize_ws(&mut q, 1e-12, exec, &mut ws);
     }
     // B = Qᵀ S Q (p×p), eigendecompose, keep top k by |λ|.
-    op.apply_into(&q, &mut y, &params.exec);
+    op.apply_into_ws(&q, &mut y, exec, &mut ws);
     matvecs += p;
     let b = q.tmatmul(&y);
     let mut bs = b.clone();

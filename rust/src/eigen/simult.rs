@@ -5,14 +5,15 @@
 use super::PartialEig;
 use crate::embed::op::Operator;
 use crate::linalg::eigh::jacobi_eigh;
-use crate::linalg::qr::mgs_orthonormalize;
+use crate::linalg::qr::mgs_orthonormalize_ws;
 use crate::linalg::Mat;
-use crate::par::ExecPolicy;
+use crate::par::{ExecPolicy, Workspace};
 use crate::util::rng::Rng;
 
 /// Top-`k` (largest |λ|) eigenpairs by simultaneous iteration with `iters`
-/// rounds of orthogonalized block power iteration. Block products run on
-/// `exec`'s pool (the orthogonalization stays serial).
+/// rounds of orthogonalized block power iteration. Block products *and*
+/// the re-orthonormalization run on `exec`'s pool, drawing scratch from
+/// one workspace so iterations allocate nothing in steady state.
 pub fn simultaneous_iteration(
     op: &(impl Operator + ?Sized),
     k: usize,
@@ -22,18 +23,19 @@ pub fn simultaneous_iteration(
 ) -> PartialEig {
     let n = op.dim();
     let k = k.min(n);
+    let mut ws = Workspace::new();
     let mut q = Mat::randn(rng, n, k);
-    mgs_orthonormalize(&mut q, 1e-12);
+    mgs_orthonormalize_ws(&mut q, 1e-12, exec, &mut ws);
     let mut y = Mat::zeros(n, k);
     let mut matvecs = 0;
     for _ in 0..iters {
-        op.apply_into(&q, &mut y, exec);
+        op.apply_into_ws(&q, &mut y, exec, &mut ws);
         matvecs += k;
         std::mem::swap(&mut q, &mut y);
-        mgs_orthonormalize(&mut q, 1e-12);
+        mgs_orthonormalize_ws(&mut q, 1e-12, exec, &mut ws);
     }
     // Rayleigh–Ritz: T = Qᵀ S Q, rotate Q by T's eigenvectors.
-    op.apply_into(&q, &mut y, exec);
+    op.apply_into_ws(&q, &mut y, exec, &mut ws);
     matvecs += k;
     let t = q.tmatmul(&y);
     // Symmetrize numerical noise.

@@ -6,7 +6,7 @@ use super::omega::rademacher_omega;
 use super::op::{Operator, ScaledOp};
 use crate::funcs::SpectralFn;
 use crate::linalg::Mat;
-use crate::par::ExecPolicy;
+use crate::par::{ExecPolicy, Workspace};
 use crate::poly::cascade::{self, CascadePlan};
 use crate::poly::{chebyshev, legendre, Basis, Series};
 use crate::sparse::{graph, Csr};
@@ -113,9 +113,13 @@ impl FastEmbed {
         let plan = plan_scaled(f, kappa, self.params.order, self.params.cascade, self.params.basis);
         let scaled = ScaledOp::new(op, 1.0 / kappa, 0.0);
         let mut matvecs = 0;
+        let mut ws = Workspace::new();
         let mut e = omega;
         for _ in 0..plan.b {
-            e = apply_series(&scaled, &plan.stage, &e, &mut matvecs, exec);
+            let next = apply_series_ws(&scaled, &plan.stage, &e, &mut matvecs, exec, &mut ws);
+            // Recycle the previous stage's block for the next one.
+            ws.give_mat(e);
+            e = next;
         }
         Embedding { e, plan, norm_estimate: kappa, matvecs }
     }
@@ -151,12 +155,10 @@ impl FastEmbed {
 }
 
 /// Evaluate `f̃(S)·Q₀` by the three-term recursion (Algorithm 1 lines
-/// 5–8), with ping-pong buffers so the hot loop performs zero allocations
-/// beyond the three blocks under a serial policy (threaded policies add
-/// only small per-product partitioning bookkeeping). `matvecs` counts
-/// *column* matvecs (one block application of width w adds w), matching
-/// the paper's L·d accounting. Block products run on `exec`'s thread
-/// pool; the axpy/recombination steps are memory-bound and stay serial.
+/// 5–8). Convenience wrapper over [`apply_series_ws`] with a throwaway
+/// workspace — call sites that iterate (the cascade loop, coordinator
+/// shard workers) should hold a [`Workspace`] and call the `_ws` form so
+/// the blocks are recycled across calls.
 pub fn apply_series(
     op: &(impl Operator + ?Sized),
     series: &Series,
@@ -164,23 +166,47 @@ pub fn apply_series(
     matvecs: &mut usize,
     exec: &ExecPolicy,
 ) -> Mat {
+    let mut ws = Workspace::new();
+    apply_series_ws(op, series, q0, matvecs, exec, &mut ws)
+}
+
+/// [`apply_series`] with all four blocks (result + three ping-pong
+/// buffers) and the kernels' partition scratch drawn from `ws`: the
+/// recursion's steady state performs **zero heap allocations** — per
+/// iteration *and*, once the workspace is warm, per call. Give the
+/// returned block back (`ws.give_mat`) when it stops being needed to
+/// keep the cycle closed. `matvecs` counts *column* matvecs (one block
+/// application of width w adds w), matching the paper's L·d accounting.
+/// Block products run on `exec`'s persistent pool; the
+/// axpy/recombination steps are memory-bound and stay serial.
+pub fn apply_series_ws(
+    op: &(impl Operator + ?Sized),
+    series: &Series,
+    q0: &Mat,
+    matvecs: &mut usize,
+    exec: &ExecPolicy,
+    ws: &mut Workspace,
+) -> Mat {
     let a = &series.coeffs;
     assert!(!a.is_empty(), "empty series");
-    let mut e = q0.clone();
+    let mut e = ws.take_mat(q0.rows, q0.cols);
+    e.data.copy_from_slice(&q0.data);
     e.scale(a[0]);
     if a.len() == 1 {
         return e;
     }
     // q1 = S q0 (p(1, x) = x in both bases).
-    let mut q_prev2 = q0.clone();
-    let mut q_prev = op.apply(q0, exec);
+    let mut q_prev2 = ws.take_mat(q0.rows, q0.cols);
+    q_prev2.data.copy_from_slice(&q0.data);
+    let mut q_prev = ws.take_mat(q0.rows, q0.cols);
+    op.apply_into_ws(q0, &mut q_prev, exec, ws);
     *matvecs += q0.cols;
     e.axpy(a[1], &q_prev);
-    let mut q_new = Mat::zeros(q0.rows, q0.cols);
+    let mut q_new = ws.take_mat(q0.rows, q0.cols);
     for r in 2..a.len() {
         let (c1, c2) = series.recursion_scalars(r);
         // q_new = c1 * S q_prev − c2 * q_prev2
-        op.apply_into(&q_prev, &mut q_new, exec);
+        op.apply_into_ws(&q_prev, &mut q_new, exec, ws);
         *matvecs += q0.cols;
         for ((qn, qp2), _) in q_new
             .data
@@ -195,6 +221,10 @@ pub fn apply_series(
         std::mem::swap(&mut q_prev2, &mut q_prev);
         std::mem::swap(&mut q_prev, &mut q_new);
     }
+    // Retire the ping-pong blocks; the next call recycles them.
+    ws.give_mat(q_prev2);
+    ws.give_mat(q_prev);
+    ws.give_mat(q_new);
     e
 }
 

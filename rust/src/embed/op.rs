@@ -12,7 +12,7 @@
 //! deterministic — output bitwise-independent of `exec.threads`.
 
 use crate::linalg::Mat;
-use crate::par::{self, ExecPolicy};
+use crate::par::{self, ExecPolicy, Workspace};
 use crate::sparse::Csr;
 
 /// A symmetric linear operator usable by the recursion.
@@ -24,6 +24,15 @@ pub trait Operator {
     /// what the implementation needs internally, and must produce output
     /// bitwise-independent of `exec.threads`.
     fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy);
+
+    /// `y ← S x` with internal scratch (partition lists, …) drawn from
+    /// `ws` so steady-state iteration loops allocate nothing. Must be
+    /// bitwise-identical to [`Self::apply_into`]; the default ignores
+    /// the workspace.
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        let _ = ws;
+        self.apply_into(x, y, exec);
+    }
 
     /// Convenience allocating form.
     fn apply(&self, x: &Mat, exec: &ExecPolicy) -> Mat {
@@ -47,6 +56,10 @@ impl Operator for Csr {
         self.spmm_into_with(x, y, exec);
     }
 
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.spmm_into_ws(x, y, exec, ws);
+    }
+
     fn nnz(&self) -> usize {
         Csr::nnz(self)
     }
@@ -64,11 +77,17 @@ impl Operator for DenseOp {
     }
 
     fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        let mut ws = Workspace::new();
+        self.apply_into_ws(x, y, exec, &mut ws);
+    }
+
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
         assert_eq!(x.rows, self.0.cols, "dense apply shape mismatch");
         assert_eq!((y.rows, y.cols), (self.0.rows, x.cols));
         let d = x.cols;
-        let ranges = par::even_ranges(self.0.rows, exec.chunks(self.0.rows));
-        exec.map_chunks(&ranges, &mut y.data, d, |_, rows, out| {
+        let mut ranges = std::mem::take(&mut ws.ranges);
+        par::even_ranges_into(self.0.rows, exec.chunks(self.0.rows), &mut ranges);
+        exec.for_chunks(&ranges, &mut y.data, d, |_, rows, out| {
             out.fill(0.0);
             for (local, i) in rows.enumerate() {
                 let arow = self.0.row(i);
@@ -84,6 +103,7 @@ impl Operator for DenseOp {
                 }
             }
         });
+        ws.ranges = ranges;
     }
 
     fn nnz(&self) -> usize {
@@ -112,6 +132,16 @@ impl<O: Operator + ?Sized> Operator for ScaledOp<'_, O> {
 
     fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
         self.inner.apply_into(x, y, exec);
+        if self.alpha != 1.0 {
+            y.scale(self.alpha);
+        }
+        if self.beta != 0.0 {
+            y.axpy(self.beta, x);
+        }
+    }
+
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.inner.apply_into_ws(x, y, exec, ws);
         if self.alpha != 1.0 {
             y.scale(self.alpha);
         }

@@ -10,8 +10,9 @@
 //! ## Layers
 //! * **Rust (this crate)** — the scalable runtime: sparse operators,
 //!   the FastEmbed driver, eigensolver baselines, K-means/modularity,
-//!   the [`par`] execution layer (a dependency-free scoped-thread pool
-//!   that every block-product hot path runs on, deterministically),
+//!   the [`par`] execution layer (a dependency-free persistent worker
+//!   pool + workspace arena that every compute hot path runs on,
+//!   deterministically and without steady-state allocations),
 //!   the column-shard coordinator and the similarity-query service, the
 //!   [`index`] ANN layer (SimHash LSH + exact baseline) that makes top-k
 //!   serving sublinear, and a PJRT runtime that executes JAX/Pallas-

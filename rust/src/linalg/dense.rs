@@ -81,12 +81,19 @@ impl Mat {
 
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a preallocated `cols × rows` matrix (the
+    /// allocation-free form for iteration loops).
+    pub fn transpose_into(&self, t: &mut Mat) {
+        assert_eq!((t.rows, t.cols), (self.cols, self.rows), "transpose_into shape");
         for i in 0..self.rows {
             for j in 0..self.cols {
                 t[(j, i)] = self[(i, j)];
             }
         }
-        t
     }
 
     /// `self @ other`, blocked i-k-j loop order (cache friendly row-major).

@@ -1,9 +1,13 @@
-//! Householder thin QR, plus modified Gram–Schmidt re-orthonormalization.
+//! Householder thin QR, plus iterated Gram–Schmidt re-orthonormalization.
 //!
-//! Used by the Lanczos full-reorthogonalization step, simultaneous
-//! iteration, and randomized SVD's range finder.
+//! Used by simultaneous iteration and randomized SVD's range finder
+//! (Lanczos keeps its own vector-at-a-time reorthogonalization in
+//! `crate::eigen::lanczos`). The Gram–Schmidt orthonormalizer is
+//! column-dot-parallel over [`crate::par`]'s persistent pool and
+//! bitwise thread-count-independent.
 
 use super::dense::Mat;
+use crate::par::{self, ExecPolicy, Workspace};
 
 /// Thin QR of an `m x n` matrix (`m >= n`): returns `Q` (`m x n`, columns
 /// orthonormal) and `R` (`n x n`, upper triangular).
@@ -82,35 +86,87 @@ pub fn thin_qr(a: &Mat) -> (Mat, Mat) {
     (qt.transpose(), r)
 }
 
-/// Orthonormalize the columns of `a` in place via two rounds of modified
-/// Gram–Schmidt (twice-is-enough). Returns the rank found (columns with
+/// Orthonormalize the columns of `a` in place (serial wrapper over
+/// [`mgs_orthonormalize_with`]). Returns the rank found (columns with
 /// norm below `tol` are zeroed and not counted).
 pub fn mgs_orthonormalize(a: &mut Mat, tol: f64) -> usize {
-    let n = a.cols;
+    mgs_orthonormalize_with(a, tol, &ExecPolicy::serial())
+}
+
+/// [`mgs_orthonormalize_ws`] with a throwaway workspace.
+pub fn mgs_orthonormalize_with(a: &mut Mat, tol: f64, exec: &ExecPolicy) -> usize {
+    let mut ws = Workspace::new();
+    mgs_orthonormalize_ws(a, tol, exec, &mut ws)
+}
+
+/// Column-parallel iterated Gram–Schmidt (CGS2, "twice is enough"):
+/// for each column, two rounds of (project against all previous columns,
+/// subtract), then normalize. The per-column work fans out over `exec`'s
+/// pool two ways — the previous-column dots (one serial full-length dot
+/// per task, so scheduling cannot touch its bits) and the element-wise
+/// subtraction (fixed previous-column order per element) — making the
+/// result **bitwise identical at any thread count**. Works on the
+/// transpose internally so columns are contiguous; scratch comes from
+/// `ws`, so iteration loops (simultaneous iteration, RSVD powers)
+/// re-orthonormalize with zero steady-state allocations.
+pub fn mgs_orthonormalize_ws(
+    a: &mut Mat,
+    tol: f64,
+    exec: &ExecPolicy,
+    ws: &mut Workspace,
+) -> usize {
+    let (m, n) = (a.rows, a.cols);
+    if n == 0 || m == 0 {
+        return 0;
+    }
+    let mut at = ws.take_mat(n, m); // row j = column j of a
+    a.transpose_into(&mut at);
+    let mut dots = ws.take(n);
     let mut rank = 0;
-    for _round in 0..2 {
-        rank = 0;
-        for j in 0..n {
-            let mut col = a.col(j);
-            for k in 0..j {
-                let ck = a.col(k);
-                let dot: f64 = col.iter().zip(&ck).map(|(x, y)| x * y).sum();
-                for (x, y) in col.iter_mut().zip(&ck) {
-                    *x -= dot * y;
-                }
+    for j in 0..n {
+        let (head, tail) = at.data.split_at_mut(j * m);
+        let colj = &mut tail[..m];
+        for _round in 0..2 {
+            if j == 0 {
+                break;
             }
-            let norm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
-            if norm > tol {
-                for x in col.iter_mut() {
-                    *x /= norm;
-                }
-                rank += 1;
-            } else {
-                col.iter_mut().for_each(|x| *x = 0.0);
+            // Fan out the j previous-column dots q_k · a_j.
+            {
+                let colj = &*colj;
+                let ranges = par::even_ranges(j, exec.chunks(j));
+                exec.for_chunks(&ranges, &mut dots[..j], 1, |_, ks, out| {
+                    for (slot, k) in out.iter_mut().zip(ks) {
+                        let qk = &head[k * m..(k + 1) * m];
+                        *slot = qk.iter().zip(colj).map(|(x, y)| x * y).sum();
+                    }
+                });
             }
-            a.set_col(j, &col);
+            // a_j -= Σ_k dots_k q_k, element-wise over rows, k ascending.
+            let dj = &dots[..j];
+            let ranges = par::even_ranges(m, exec.chunks(m));
+            exec.for_chunks(&ranges, colj, 1, |_, is, out| {
+                for (slot, i) in out.iter_mut().zip(is) {
+                    let mut acc = *slot;
+                    for (k, dk) in dj.iter().enumerate() {
+                        acc -= dk * head[k * m + i];
+                    }
+                    *slot = acc;
+                }
+            });
+        }
+        let norm: f64 = colj.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > tol {
+            for x in colj.iter_mut() {
+                *x /= norm;
+            }
+            rank += 1;
+        } else {
+            colj.fill(0.0);
         }
     }
+    at.transpose_into(a);
+    ws.give(dots);
+    ws.give_mat(at);
     rank
 }
 

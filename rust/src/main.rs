@@ -107,6 +107,19 @@ fn exec_from(a: &Args) -> Result<ExecPolicy, String> {
     Ok(if t == 0 { ExecPolicy::auto() } else { ExecPolicy::with_threads(t) })
 }
 
+/// Kernel policy for coordinator paths: an explicit `--threads` always
+/// wins (including `--threads 1` = deliberately serial kernels); the
+/// default `0` asks the scheduler to compose the kernel thread count
+/// from the core budget (`cores / workers`, via `EmbedJob.auto_threads`).
+fn coord_exec(a: &Args) -> Result<(ExecPolicy, bool), String> {
+    let t = a.usize("threads", 0)?;
+    Ok(if t > 0 {
+        (ExecPolicy::with_threads(t), false)
+    } else {
+        (ExecPolicy::serial(), true)
+    })
+}
+
 fn embed_params(a: &Args) -> Result<Params, String> {
     Ok(Params {
         d: a.usize("d", 0)?,
@@ -124,7 +137,8 @@ fn embed_params(a: &Args) -> Result<Params, String> {
 
 const THREADS_OPT: Opt = Opt {
     name: "threads",
-    help: "kernel threads per block product (0 = all cores); deterministic at any value",
+    help: "kernel threads per block product (0 = auto: all cores, or cores/workers \
+           under the coordinator); deterministic at any value",
     default: Some("0"),
 };
 
@@ -171,7 +185,11 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "cascade", help: "cascade factor b", default: Some("2") },
             Opt { name: "basis", help: "legendre|chebyshev", default: Some("legendre") },
             Opt { name: "c", help: "step threshold f = I(lambda >= c)", default: Some("0.7") },
-            Opt { name: "workers", help: "column-shard worker threads", default: Some("1") },
+            Opt {
+                name: "workers",
+                help: "column-shard worker threads (0 = auto-compose workers x threads from cores)",
+                default: Some("0"),
+            },
             THREADS_OPT,
             Opt { name: "shard", help: "columns per shard", default: Some("8") },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
@@ -181,23 +199,28 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     }
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
-    let params = embed_params(&a)?;
+    let workers = a.usize("workers", 0)?;
+    let mut params = embed_params(&a)?;
+    let (exec, auto_threads) = coord_exec(&a)?;
+    params.exec = exec;
     let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
     job.shard_width = a.usize("shard", 8)?;
-    let coord = Coordinator::new(a.usize("workers", 1)?);
+    job.auto_threads = auto_threads;
+    let coord = Coordinator::new(workers);
     let t = Timer::start();
     let res = coord.run(&na, &job);
     let secs = t.elapsed_secs();
     println!(
-        "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards, {} kernel threads) in {}",
+        "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards, {} workers x {} kernel threads) in {}",
         na.rows,
         res.e.cols,
         job.params.order,
         res.plan.b,
         res.matvecs,
         res.shards,
-        job.params.exec.threads,
+        res.workers,
+        res.threads,
         human_secs(secs)
     );
     let out = a.get_or("out", "embedding.tsv");
@@ -258,6 +281,11 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "order", help: "polynomial order", default: Some("120") },
             Opt { name: "c", help: "step threshold", default: Some("0.7") },
             Opt { name: "restarts", help: "k-means restarts (median reported)", default: Some("5") },
+            Opt {
+                name: "workers",
+                help: "column-shard worker threads (0 = auto-compose workers x threads from cores)",
+                default: Some("0"),
+            },
             THREADS_OPT,
         ]);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
@@ -265,10 +293,14 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     }
     let (adj, labels) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
-    let params = Params { d: a.usize("d", 80)?, ..embed_params(&a)? };
+    let workers = a.usize("workers", 0)?;
+    let mut params = Params { d: a.usize("d", 80)?, ..embed_params(&a)? };
+    let (exec, auto_threads) = coord_exec(&a)?;
+    params.exec = exec;
     let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
-    let job = EmbedJob::new(params, f, a.u64("seed", 0)?);
-    let coord = Coordinator::new(a.usize("workers", 1)?);
+    let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
+    job.auto_threads = auto_threads;
+    let coord = Coordinator::new(workers);
     let t = Timer::start();
     let res = coord.run(&na, &job);
     println!("embedding: {}", human_secs(t.elapsed_secs()));
@@ -300,7 +332,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
         opts.extend_from_slice(&[
             Opt { name: "queries", help: "number of random queries", default: Some("1000") },
             Opt { name: "topk", help: "k for top-k queries", default: Some("10") },
-            Opt { name: "workers", help: "service worker threads", default: Some("2") },
+            Opt {
+                name: "workers",
+                help: "service worker threads (also the embed shard pool; 0 = auto-compose)",
+                default: Some("2"),
+            },
             Opt { name: "index", help: "top-k index: none|exact|simhash", default: Some("none") },
             Opt { name: "tables", help: "simhash: hash tables", default: Some("8") },
             Opt { name: "bits", help: "simhash: signature bits per table", default: Some("12") },
@@ -317,8 +353,21 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     }
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
-    let job = EmbedJob::new(embed_params(&a)?, SpectralFn::Step { c: a.f64("c", 0.7)? }, a.u64("seed", 0)?);
-    let res = Coordinator::new(a.usize("workers", 2)?).run(&na, &job);
+    let workers = a.usize("workers", 2)?;
+    // Query-phase worker pool: `0` auto-sizes to the core count (the
+    // coordinator separately auto-composes its own shard split).
+    let qworkers = if workers == 0 {
+        std::thread::available_parallelism().map_or(1, |c| c.get())
+    } else {
+        workers
+    };
+    let mut params = embed_params(&a)?;
+    let (exec, auto_threads) = coord_exec(&a)?;
+    params.exec = exec;
+    let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
+    let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
+    job.auto_threads = auto_threads;
+    let res = Coordinator::new(workers).run(&na, &job);
     let mut service = SimilarityService::new(res.e);
 
     // Optional ANN index over the embedding rows, with a build report.
@@ -364,7 +413,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
         })
         .collect();
     let t = Timer::start();
-    let answers = QueryBatch::run(&service, &queries, a.usize("workers", 2)?);
+    let answers = QueryBatch::run(&service, &queries, qworkers);
     let secs = t.elapsed_secs();
     println!(
         "{} queries in {} ({:.0} qps, mean latency {:.1} µs)",

@@ -2,12 +2,12 @@
 //!
 //! The paper's iterations are "parallel across starting vectors"; the
 //! block products they reduce to are *also* parallel across output rows.
-//! This module is the one place that parallelism lives: a scoped-thread
-//! pool (no rayon — the build is offline) with deterministic work
-//! partitioning, used by the SpMM kernels (`sparse::Csr`), the FastEmbed
-//! recursion ([`crate::embed`]), the eigensolver baselines
-//! ([`crate::eigen`]), SimHash index builds ([`crate::index`]) and
-//! K-means assignment ([`crate::cluster`]).
+//! This module is the one place that parallelism lives: a **persistent
+//! worker pool** (no rayon — the build is offline) with deterministic
+//! work partitioning, used by the SpMM kernels (`sparse::Csr`), the
+//! FastEmbed recursion ([`crate::embed`]), the eigensolver baselines
+//! ([`crate::eigen`]) including MGS/Lanczos reorthogonalization, SimHash
+//! index builds ([`crate::index`]) and K-means ([`crate::cluster`]).
 //!
 //! ## Determinism contract
 //!
@@ -29,20 +29,31 @@
 //!
 //! ## Pool shape
 //!
-//! [`ExecPolicy`] is a plain `{ threads }` value plumbed from the CLI
-//! `--threads` flags down to the kernels. Each parallel region spawns
-//! `threads − 1` scoped workers (`std::thread::scope`) plus the calling
-//! thread; with `threads == 1` every primitive degenerates to a plain
-//! serial loop with zero synchronization or spawn overhead (only the
-//! trivial range/result vectors are allocated — and the CSR kernels
-//! skip partitioning entirely on their serial path), which is what
-//! keeps the 1-thread path within noise of the pre-refactor kernels.
+//! [`ExecPolicy`] is a handle to a process-wide **persistent pool**
+//! (`par::pool`): long-lived workers parked on a condvar between
+//! regions, woken by a single notify per region, so a parallel region
+//! costs one lock + wake instead of `threads − 1` thread spawns. The
+//! policy carries the thread count plus the partitioning strategy (the
+//! [`ExecPolicy::oversplit`] load-balance factor behind
+//! [`ExecPolicy::chunks`]); core affinity is deliberately absent — std
+//! exposes no portable affinity API and the crate links nothing else.
+//! With `threads == 1` every primitive degenerates to a plain serial
+//! loop with zero synchronization, spawn, or allocation overhead (the
+//! CSR kernels skip partitioning entirely on their serial path), which
+//! is what keeps the 1-thread path within noise of the pre-refactor
+//! kernels. Pair the primitives with a [`Workspace`] to make threaded
+//! steady-state iterations allocation-free too.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
-/// Execution policy for a parallel region: how many OS threads to use.
+mod pool;
+mod workspace;
+
+pub use workspace::Workspace;
+
+/// Execution policy for a parallel region: how many OS threads to use
+/// and how finely to split element-wise work. A `Copy` handle to the
+/// process-wide persistent pool.
 ///
 /// The default is serial — library callers opt in explicitly, and the
 /// CLI layers default to [`ExecPolicy::auto`] (all cores).
@@ -50,6 +61,12 @@ use std::sync::Mutex;
 pub struct ExecPolicy {
     /// Worker count (≥ 1). 1 = run inline on the calling thread.
     pub threads: usize,
+    /// Chunk oversplit factor for thread-*dependent* partitioning
+    /// ([`Self::chunks`] emits `threads × oversplit` chunks): higher
+    /// values smooth load imbalance under dynamic chunk claiming at the
+    /// cost of more (cheap) claims. Irrelevant to determinism — only
+    /// for element-wise work in the first place.
+    pub oversplit: usize,
 }
 
 impl Default for ExecPolicy {
@@ -61,12 +78,12 @@ impl Default for ExecPolicy {
 impl ExecPolicy {
     /// Single-threaded execution (the zero-overhead inline path).
     pub fn serial() -> Self {
-        ExecPolicy { threads: 1 }
+        ExecPolicy { threads: 1, oversplit: 4 }
     }
 
     /// Exactly `threads` workers (clamped to ≥ 1).
     pub fn with_threads(threads: usize) -> Self {
-        ExecPolicy { threads: threads.max(1) }
+        ExecPolicy { threads: threads.max(1), oversplit: 4 }
     }
 
     /// One worker per available hardware thread.
@@ -76,26 +93,33 @@ impl ExecPolicy {
         )
     }
 
+    /// Same policy with a different [`Self::oversplit`] factor.
+    pub fn with_oversplit(mut self, oversplit: usize) -> Self {
+        self.oversplit = oversplit.max(1);
+        self
+    }
+
     pub fn is_serial(&self) -> bool {
         self.threads <= 1
     }
 
     /// Thread-*dependent* chunk count for `items` units of independent
-    /// work: oversplit 4× for load balance under dynamic chunk claiming.
+    /// work: oversplit for load balance under dynamic chunk claiming.
     /// Only for element-wise work (no cross-item reduction) — chunk
     /// boundaries then cannot affect any output bit.
     pub fn chunks(&self, items: usize) -> usize {
         if self.threads <= 1 || items == 0 {
             1
         } else {
-            (self.threads * 4).min(items)
+            (self.threads * self.oversplit.max(1)).min(items)
         }
     }
 
     /// Run `f(0..tasks)` with tasks handed to workers via an atomic
     /// cursor. The building block under [`Self::map_ranges`] /
     /// [`Self::map_chunks`]; use directly when chunk outputs do not fit
-    /// the slice-per-range model (see `Csr::transpose_with`).
+    /// the slice-per-range model (see `Csr::transpose_with`). Dispatches
+    /// to the persistent pool; the serial path is a plain loop.
     pub fn run_indexed(&self, tasks: usize, f: impl Fn(usize) + Sync) {
         let threads = self.threads.clamp(1, tasks.max(1));
         if threads <= 1 {
@@ -104,22 +128,7 @@ impl ExecPolicy {
             }
             return;
         }
-        let next = AtomicUsize::new(0);
-        // Declared before the scope so spawned threads may borrow it.
-        let worker = || loop {
-            let k = next.fetch_add(1, Ordering::Relaxed);
-            if k >= tasks {
-                break;
-            }
-            f(k);
-        };
-        let worker = &worker;
-        std::thread::scope(|scope| {
-            for _ in 1..threads {
-                scope.spawn(worker);
-            }
-            worker();
-        });
+        pool::run_on_pool(threads, tasks, &f);
     }
 
     /// Apply `f(chunk_index, range)` to every range, collecting results
@@ -133,15 +142,57 @@ impl ExecPolicy {
         if self.threads <= 1 || ranges.len() <= 1 {
             return ranges.iter().enumerate().map(|(k, r)| f(k, r.clone())).collect();
         }
-        let slots: Vec<Mutex<Option<R>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
+        let mut res: Vec<Option<R>> = (0..ranges.len()).map(|_| None).collect();
+        let slots = SendPtr(res.as_mut_ptr());
         self.run_indexed(ranges.len(), |k| {
-            let r = f(k, ranges[k].clone());
-            *slots[k].lock().unwrap() = Some(r);
+            let v = f(k, ranges[k].clone());
+            // SAFETY: `run_indexed` hands out each k exactly once, so
+            // slot k is written by exactly one thread; the buffer
+            // outlives the region (we wait for completion below).
+            unsafe { *slots.get().add(k) = Some(v) };
         });
-        slots
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("range result missing"))
-            .collect()
+        res.into_iter().map(|o| o.expect("range result missing")).collect()
+    }
+
+    /// Like [`Self::map_chunks`] but without collecting results — the
+    /// zero-allocation workhorse for kernels that only write `out`
+    /// (SpMM, axpy-style updates). Ranges must be ascending, contiguous,
+    /// and cover `out` exactly at `width` elements per row.
+    pub fn for_chunks<T: Send>(
+        &self,
+        ranges: &[Range<usize>],
+        out: &mut [T],
+        width: usize,
+        f: impl Fn(usize, Range<usize>, &mut [T]) + Sync,
+    ) {
+        let base = ranges.first().map_or(0, |r| r.start);
+        let mut cursor = base;
+        for r in ranges {
+            assert_eq!(r.start, cursor, "ranges must be ascending and contiguous");
+            cursor = r.end;
+        }
+        assert_eq!((cursor - base) * width, out.len(), "ranges must cover the output exactly");
+        if self.threads <= 1 || ranges.len() <= 1 {
+            let mut rest = out;
+            for (k, r) in ranges.iter().enumerate() {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((r.end - r.start) * width);
+                rest = tail;
+                f(k, r.clone(), chunk);
+            }
+            debug_assert!(rest.is_empty());
+            return;
+        }
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.run_indexed(ranges.len(), |k| {
+            let r = ranges[k].clone();
+            let off = (r.start - base) * width;
+            let len = (r.end - r.start) * width;
+            // SAFETY: ranges are disjoint and each k is claimed exactly
+            // once, so the slices never alias; `out` outlives the region.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(off), len) };
+            f(k, r, chunk);
+        });
     }
 
     /// The workhorse: apply `f(chunk_index, rows, out_chunk)` to every
@@ -156,22 +207,14 @@ impl ExecPolicy {
         width: usize,
         f: impl Fn(usize, Range<usize>, &mut [T]) -> R + Sync,
     ) -> Vec<R> {
-        if self.threads <= 1 || ranges.len() <= 1 {
-            let mut res = Vec::with_capacity(ranges.len());
-            let mut rest = out;
-            for (k, r) in ranges.iter().enumerate() {
-                let (chunk, tail) =
-                    std::mem::take(&mut rest).split_at_mut((r.end - r.start) * width);
-                rest = tail;
-                res.push(f(k, r.clone(), chunk));
-            }
-            assert!(rest.is_empty(), "ranges must cover the output exactly");
-            return res;
-        }
-        let parts = split_mut(out, ranges.iter().map(|r| (r.end - r.start) * width));
-        let tagged: Vec<(Range<usize>, &mut [T])> =
-            ranges.iter().cloned().zip(parts).collect();
-        self.map_parts(tagged, |k, (r, chunk)| f(k, r, chunk))
+        let mut res: Vec<Option<R>> = (0..ranges.len()).map(|_| None).collect();
+        let slots = SendPtr(res.as_mut_ptr());
+        self.for_chunks(ranges, out, width, |k, r, chunk| {
+            let v = f(k, r, chunk);
+            // SAFETY: slot k is written exactly once (see for_chunks).
+            unsafe { *slots.get().add(k) = Some(v) };
+        });
+        res.into_iter().map(|o| o.expect("chunk result missing")).collect()
     }
 
     /// Distribute arbitrary owned work payloads (e.g. pre-split uneven
@@ -188,18 +231,33 @@ impl ExecPolicy {
             return parts.into_iter().enumerate().map(|(k, p)| f(k, p)).collect();
         }
         let n = parts.len();
-        let part_slots: Vec<Mutex<Option<T>>> =
-            parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
-        let res_slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let mut parts: Vec<Option<T>> = parts.into_iter().map(Some).collect();
+        let mut res: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let part_slots = SendPtr(parts.as_mut_ptr());
+        let res_slots = SendPtr(res.as_mut_ptr());
         self.run_indexed(n, |k| {
-            let p = part_slots[k].lock().unwrap().take().expect("part taken twice");
+            // SAFETY: each k is claimed exactly once; both buffers
+            // outlive the region.
+            let p = unsafe { (*part_slots.get().add(k)).take().expect("part taken twice") };
             let r = f(k, p);
-            *res_slots[k].lock().unwrap() = Some(r);
+            unsafe { *res_slots.get().add(k) = Some(r) };
         });
-        res_slots
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("part result missing"))
-            .collect()
+        drop(parts);
+        res.into_iter().map(|o| o.expect("part result missing")).collect()
+    }
+}
+
+/// Shared-pointer wrapper for disjoint per-task writes from pool workers.
+/// Safety rests on the caller: every index must be touched by at most one
+/// task, and the buffer must outlive the region (all primitives here wait
+/// for region completion before returning).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(self) -> *mut T {
+        self.0
     }
 }
 
@@ -220,36 +278,58 @@ pub fn split_mut<T>(s: &mut [T], sizes: impl Iterator<Item = usize>) -> Vec<&mut
 /// `items` split into `parts` contiguous near-even ranges (first
 /// `items % parts` ranges get one extra). Empty ranges are never emitted.
 pub fn even_ranges(items: usize, parts: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    even_ranges_into(items, parts, &mut out);
+    out
+}
+
+/// [`even_ranges`] into a reusable buffer (cleared first) — the
+/// allocation-free form for per-iteration partitioning (see
+/// [`Workspace::ranges`]).
+pub fn even_ranges_into(items: usize, parts: usize, out: &mut Vec<Range<usize>>) {
+    out.clear();
     if items == 0 {
-        return Vec::new();
+        return;
     }
     let parts = parts.clamp(1, items);
     let base = items / parts;
     let extra = items % parts;
-    let mut out = Vec::with_capacity(parts);
+    out.reserve(parts);
     let mut start = 0;
     for k in 0..parts {
         let len = base + usize::from(k < extra);
         out.push(start..start + len);
         start += len;
     }
-    out
 }
 
 /// Ranges over `0..prefix.len()-1` balanced by the cumulative weights in
 /// `prefix` (e.g. a CSR `indptr`: ranges of rows with ≈ equal nnz).
 /// Deterministic for a given `prefix` and `parts`; skips empty ranges.
 pub fn weighted_ranges(prefix: &[usize], parts: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    weighted_ranges_into(prefix, parts, &mut out);
+    out
+}
+
+/// [`weighted_ranges`] into a reusable buffer (cleared first).
+pub fn weighted_ranges_into(prefix: &[usize], parts: usize, out: &mut Vec<Range<usize>>) {
+    out.clear();
     let n = prefix.len().saturating_sub(1);
     if n == 0 {
-        return Vec::new();
+        return;
     }
     let total = prefix[n] - prefix[0];
     if total == 0 || parts <= 1 {
-        return if parts <= 1 { vec![0..n] } else { even_ranges(n, parts) };
+        if parts <= 1 {
+            out.push(0..n);
+        } else {
+            even_ranges_into(n, parts, out);
+        }
+        return;
     }
     let parts = parts.min(n);
-    let mut out = Vec::with_capacity(parts);
+    out.reserve(parts);
     let mut start = 0usize;
     for k in 1..=parts {
         let target = prefix[0] + (total as u128 * k as u128 / parts as u128) as usize;
@@ -264,7 +344,6 @@ pub fn weighted_ranges(prefix: &[usize], parts: usize) -> Vec<Range<usize>> {
             start = end;
         }
     }
-    out
 }
 
 /// Thread-count-INDEPENDENT chunk count: `items` split into chunks of
@@ -278,6 +357,7 @@ pub fn fixed_chunks(items: usize, per_chunk: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn even_ranges_cover_and_balance() {
@@ -298,6 +378,23 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn ranges_into_reuses_capacity() {
+        let mut buf = Vec::new();
+        even_ranges_into(100, 8, &mut buf);
+        assert_eq!(buf.len(), 8);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        even_ranges_into(64, 4, &mut buf);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf.capacity(), cap, "no realloc on shrink");
+        assert_eq!(buf.as_ptr(), ptr, "same storage");
+        assert_eq!(buf, even_ranges(64, 4));
+        let prefix: Vec<usize> = (0..=50).map(|i| i * 3).collect();
+        weighted_ranges_into(&prefix, 5, &mut buf);
+        assert_eq!(buf, weighted_ranges(&prefix, 5));
     }
 
     #[test]
@@ -380,6 +477,39 @@ mod tests {
     }
 
     #[test]
+    fn for_chunks_matches_map_chunks_output() {
+        let rows = 37;
+        let width = 2;
+        let ranges = even_ranges(rows, 6);
+        let fill = |_: usize, r: Range<usize>, chunk: &mut [f64]| {
+            for (local, i) in r.enumerate() {
+                for j in 0..width {
+                    chunk[local * width + j] = (i * width + j) as f64;
+                }
+            }
+        };
+        let mut want = vec![0.0; rows * width];
+        ExecPolicy::serial().for_chunks(&ranges, &mut want, width, fill);
+        for threads in [2usize, 4] {
+            let mut got = vec![0.0; rows * width];
+            ExecPolicy::with_threads(threads).for_chunks(&ranges, &mut got, width, fill);
+            assert_eq!(got, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn map_parts_returns_in_payload_order() {
+        for threads in [1usize, 2, 4] {
+            let parts: Vec<usize> = (0..23).collect();
+            let got = ExecPolicy::with_threads(threads).map_parts(parts, |k, p| {
+                assert_eq!(k, p);
+                p * 10
+            });
+            assert_eq!(got, (0..23).map(|p| p * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
     fn fixed_chunk_reduction_is_thread_count_independent() {
         // Adversarially scaled values: naive full-serial summation differs
         // from chunked summation, so equality across thread counts proves
@@ -414,5 +544,11 @@ mod tests {
         assert!(ExecPolicy::serial().is_serial());
         assert_eq!(ExecPolicy::with_threads(0).threads, 1);
         assert_eq!(ExecPolicy::default(), ExecPolicy::serial());
+        // Oversplit shapes thread-dependent chunking only.
+        let p = ExecPolicy::with_threads(4).with_oversplit(2);
+        assert_eq!(p.chunks(1000), 8);
+        assert_eq!(ExecPolicy::with_threads(4).chunks(1000), 16);
+        assert_eq!(p.chunks(3), 3);
+        assert_eq!(ExecPolicy::serial().chunks(1000), 1);
     }
 }

@@ -1,0 +1,331 @@
+//! The persistent worker pool behind [`crate::par::ExecPolicy`].
+//!
+//! PR 2's parallel regions paid a `std::thread::scope` spawn+join per
+//! region — fine at block-product granularity, ruinous for micro-ops
+//! (a spawn is ~10µs; an MGS column dot on a 4k vector is ~1µs). This
+//! module keeps one process-wide set of workers **parked on a condvar**
+//! between regions; a region submission is one mutex/condvar wake, and
+//! region teardown is one latch wait. Workers are detached and live for
+//! the process.
+//!
+//! ## Protocol
+//!
+//! A region is published as a [`Job`] that lives **on the submitter's
+//! stack**: a type-erased `&dyn Fn(usize)` task body, an atomic task
+//! cursor, and a completion latch. The submitter
+//!
+//! 1. takes the pool's `submit` lock (one region at a time — see below),
+//! 2. bumps the epoch and stores the job pointer + a participant budget
+//!    under the `state` lock, waking all parked workers,
+//! 3. runs the claim loop itself, then
+//! 4. blocks on the latch until every participant has signalled.
+//!
+//! Workers wake, and **under the state lock** decide whether to join:
+//! if the epoch is new and participant slots remain, they take a slot
+//! and only then dereference the job pointer. Losers never touch the
+//! job, so the submitter needs to wait only for the winners — after the
+//! latch trips, nothing can alias the stack-allocated job and the
+//! submitter may return (the borrow the `'static` transmute erased is
+//! live for exactly the region's duration).
+//!
+//! ## Nesting and contention
+//!
+//! Two situations fall back to running the region **inline on the
+//! caller** (bitwise-identical results — the chunk structure, which is
+//! what determines every output bit, is fixed by the caller, not by who
+//! executes the chunks):
+//!
+//! * a pool worker submitting a region from inside a task (nested
+//!   parallelism) — running it on the pool could deadlock against the
+//!   region that worker is already part of;
+//! * the `submit` lock is already held (e.g. two coordinator shard
+//!   workers both hit a kernel): the second region inlines rather than
+//!   serializing behind the first, so shard-level parallelism is never
+//!   throttled by kernel-level parallelism.
+//!
+//! ## Panics
+//!
+//! A panicking task body stops further claims (the cursor is slammed to
+//! the end), the latch still trips, and the payload is re-thrown on the
+//! submitting thread — the same observable behaviour as the scoped
+//! implementation this replaces.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// A parallel region, stack-allocated in [`run_on_pool`].
+struct Job {
+    /// Task body with its borrow lifetime erased; valid until the latch
+    /// has been signalled by every participant.
+    f: &'static (dyn Fn(usize) + Sync),
+    tasks: usize,
+    /// Next unclaimed task index (shared claim cursor).
+    cursor: AtomicUsize,
+    /// Count of participants that finished their claim loop.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload observed by a participant, if any.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// Raw pointer to a [`Job`], published to workers through [`State`].
+/// Safety: workers dereference it only after taking a participant slot
+/// under the state lock, and the submitter outlives all participants.
+#[derive(Clone, Copy)]
+struct JobRef(*const Job);
+unsafe impl Send for JobRef {}
+
+struct State {
+    /// Bumped once per region; workers track the last epoch they saw.
+    epoch: u64,
+    job: Option<JobRef>,
+    /// Participant slots remaining for the current epoch.
+    slots_left: usize,
+    /// Workers spawned so far (the pool grows on demand, never shrinks).
+    spawned: usize,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    wake: Condvar,
+    /// Held for a region's whole lifetime: one pool region at a time.
+    submit: Mutex<()>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Set for pool workers: nested regions run inline (see module doc).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(State { epoch: 0, job: None, slots_left: 0, spawned: 0 }),
+        wake: Condvar::new(),
+        submit: Mutex::new(()),
+    })
+}
+
+fn spawn_worker(p: &'static Pool) {
+    std::thread::Builder::new()
+        .name("cse-par-worker".into())
+        .spawn(move || worker_loop(p))
+        .expect("failed to spawn pool worker");
+}
+
+fn worker_loop(p: &'static Pool) {
+    IN_POOL.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        // Decide participation under the state lock; dereference the job
+        // only after winning a slot.
+        let claim: Option<JobRef> = {
+            let mut st = p.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if st.slots_left > 0 {
+                        st.slots_left -= 1;
+                        break st.job;
+                    }
+                    break None;
+                }
+                st = p.wake.wait(st).unwrap();
+            }
+        };
+        let Some(JobRef(ptr)) = claim else { continue };
+        let job = unsafe { &*ptr };
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let k = job.cursor.fetch_add(1, Ordering::Relaxed);
+            if k >= job.tasks {
+                break;
+            }
+            (job.f)(k);
+        }));
+        if let Err(payload) = result {
+            // Stop further claims and record the first payload.
+            job.cursor.store(job.tasks, Ordering::Relaxed);
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // Signal the latch. After the guard drops the job must not be
+        // touched again: the submitter may free it immediately.
+        let mut done = job.done.lock().unwrap();
+        *done += 1;
+        job.done_cv.notify_all();
+        drop(done);
+    }
+}
+
+/// Whether the current thread is a pool worker (used by tests and by
+/// [`run_on_pool`]'s nested-region fallback).
+pub fn on_pool_worker() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
+/// Run `f(0..tasks)` using up to `threads - 1` pool workers plus the
+/// calling thread. Falls back to a plain inline loop when the region
+/// cannot (nested) or need not (busy pool, trivial size) go wide —
+/// results are identical either way.
+pub fn run_on_pool(threads: usize, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    let inline = || {
+        for k in 0..tasks {
+            f(k);
+        }
+    };
+    let helpers = threads.saturating_sub(1).min(tasks.saturating_sub(1));
+    if helpers == 0 || on_pool_worker() {
+        return inline();
+    }
+    let p = pool();
+    // One pool region at a time; a concurrent submitter (another shard
+    // worker mid-kernel) inlines instead of queueing. A poisoned lock
+    // (an earlier region re-threw a task panic while holding it) is
+    // harmless — the pool state it guards is valid between regions.
+    let _region = match p.submit.try_lock() {
+        Ok(guard) => guard,
+        Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => return inline(),
+    };
+    // SAFETY: the job (and through it this borrow of `f`) is only ever
+    // dereferenced by participants, all of which signal the latch we
+    // wait on below before this frame can return.
+    let f_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+    let job = Job {
+        f: f_static,
+        tasks,
+        cursor: AtomicUsize::new(0),
+        done: Mutex::new(0),
+        done_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    {
+        let mut st = p.state.lock().unwrap();
+        while st.spawned < helpers {
+            spawn_worker(p);
+            st.spawned += 1;
+        }
+        st.epoch += 1;
+        st.job = Some(JobRef(&job));
+        st.slots_left = helpers;
+        p.wake.notify_all();
+    }
+    // The submitter is participant zero.
+    let own = catch_unwind(AssertUnwindSafe(|| loop {
+        let k = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if k >= tasks {
+            break;
+        }
+        f(k);
+    }));
+    if own.is_err() {
+        job.cursor.store(tasks, Ordering::Relaxed);
+    }
+    // Latch: every slot that was published gets claimed by some worker
+    // (all workers eventually observe the epoch), and every claim ends
+    // in exactly one latch increment, panic or not.
+    {
+        let mut done = job.done.lock().unwrap();
+        while *done < helpers {
+            done = job.done_cv.wait(done).unwrap();
+        }
+    }
+    // Hygiene: drop the dangling pointer before the job leaves scope.
+    {
+        let mut st = p.state.lock().unwrap();
+        st.job = None;
+        st.slots_left = 0;
+    }
+    if let Err(payload) = own {
+        resume_unwind(payload);
+    }
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_workers_across_many_small_regions() {
+        // Thousands of tiny regions: with spawn-per-region this test is
+        // slow; with the persistent pool it's instant — and more to the
+        // point, it must neither deadlock nor leak participants.
+        for threads in [2usize, 4] {
+            let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+            for _ in 0..2000 {
+                run_on_pool(threads, hits.len(), &|k| {
+                    hits[k].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 2000, "threads={threads}");
+            }
+            for h in &hits {
+                h.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_fall_back_without_deadlock() {
+        // Simulates coordinator shard workers all hitting kernels: the
+        // pool serves one, the rest inline. Every task must run once.
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..300 {
+                        let hits: Vec<AtomicUsize> =
+                            (0..24).map(|_| AtomicUsize::new(0)).collect();
+                        run_on_pool(4, hits.len(), &|k| {
+                            hits[k].fetch_add(1, Ordering::Relaxed);
+                        });
+                        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let outer: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        run_on_pool(4, outer.len(), &|k| {
+            // A region submitted from inside a task must complete (on the
+            // pool for the submitter thread, inline on workers).
+            let inner: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+            run_on_pool(4, inner.len(), &|j| {
+                inner[j].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(inner.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            outer[k].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(outer.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            run_on_pool(4, 64, &|k| {
+                if k == 33 {
+                    panic!("boom in task");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must cross the pool");
+        // The pool must still be usable afterwards.
+        let hits: Vec<AtomicUsize> = (0..10).map(|_| AtomicUsize::new(0)).collect();
+        run_on_pool(4, hits.len(), &|k| {
+            hits[k].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,17 +1,19 @@
 //! Compressed sparse row matrix + the SpMM hot path.
 //!
 //! The block-product kernels (`spmm_into_with`, `matvec_with`,
-//! `transpose_with`) are row-partitioned over [`crate::par`]'s scoped
-//! thread pool: each worker owns a disjoint, contiguous range of output
-//! rows (balanced by nnz), so the result is bitwise-identical to the
-//! serial loop at any thread count. The policy-free methods (`spmm`,
-//! `matvec`, `transpose`, …) are serial wrappers.
+//! `transpose_with`) are row-partitioned over [`crate::par`]'s
+//! persistent worker pool: each worker owns a disjoint, contiguous range
+//! of output rows (balanced by nnz), so the result is bitwise-identical
+//! to the serial loop at any thread count. The policy-free methods
+//! (`spmm`, `matvec`, `transpose`, …) are serial wrappers, and
+//! `spmm_into_ws` is the allocation-free form iteration loops should
+//! prefer (partition scratch lives in a [`Workspace`]).
 
 use std::ops::Range;
 
 use super::coo::Coo;
 use crate::linalg::Mat;
-use crate::par::{self, ExecPolicy};
+use crate::par::{self, ExecPolicy, Workspace};
 
 /// CSR sparse matrix (`f64` values).
 #[derive(Clone, Debug)]
@@ -116,7 +118,7 @@ impl Csr {
             return y;
         }
         let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
-        exec.map_chunks(&ranges, &mut y, 1, |_, rows, chunk| self.spmm_rows(x, 1, rows, chunk));
+        exec.for_chunks(&ranges, &mut y, 1, |_, rows, chunk| self.spmm_rows(x, 1, rows, chunk));
         y
     }
 
@@ -147,6 +149,15 @@ impl Csr {
     /// disjoint row range, so the result is bitwise-identical to the
     /// serial kernel at any thread count.
     pub fn spmm_into_with(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        let mut ws = Workspace::new();
+        self.spmm_into_ws(x, y, exec, &mut ws);
+    }
+
+    /// [`Self::spmm_into_with`] with partition scratch drawn from `ws` —
+    /// the steady-state form: called in a loop with the same workspace it
+    /// performs zero heap allocations per product at any thread count
+    /// (the serial path allocates nothing to begin with).
+    pub fn spmm_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         let d = x.cols;
@@ -156,10 +167,12 @@ impl Csr {
             self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data);
             return;
         }
-        let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
-        exec.map_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
+        let mut ranges = std::mem::take(&mut ws.ranges);
+        par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
+        exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
             self.spmm_rows(&x.data, d, rows, chunk)
         });
+        ws.ranges = ranges;
     }
 
     /// The one SpMM kernel: output rows `rows` of `A·X` written into `y`
@@ -465,6 +478,27 @@ mod tests {
         let c = Coo::new(3, 3); // all empty
         let a = Csr::from_coo(&c);
         assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn spmm_into_ws_reuses_scratch_and_matches() {
+        let mut rng = Rng::new(40);
+        let coo = random_coo(&mut rng, 60, 60, 240);
+        let a = Csr::from_coo(&coo);
+        let x = Mat::randn(&mut rng, 60, 5);
+        let want = a.spmm(&x);
+        let mut ws = Workspace::new();
+        let mut y = Mat::zeros(60, 5);
+        for threads in [1usize, 2, 4] {
+            let exec = ExecPolicy::with_threads(threads);
+            for _ in 0..3 {
+                y.data.fill(7.0);
+                a.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+                assert_eq!(y.data, want.data, "spmm_into_ws @ {threads} threads");
+            }
+        }
+        // Threaded calls leave their partition scratch behind for reuse.
+        assert!(!ws.ranges.is_empty());
     }
 
     #[test]

@@ -1,19 +1,27 @@
 //! Cross-layer determinism of the parallel execution layer
 //! (`cse::par`): every hot path it touches — SpMM, matvec, transpose,
-//! the FastEmbed recursion, the coordinator pipeline, the eigensolvers,
-//! SimHash builds and K-means — must produce results bitwise-identical
-//! to the serial path for threads ∈ {1, 2, 4} under a fixed seed.
+//! the FastEmbed recursion, the coordinator pipeline, the eigensolvers
+//! (now including the parallel MGS / Lanczos reorthogonalization),
+//! SimHash builds and K-means (now including the parallel centroid
+//! update) — must produce results bitwise-identical to the serial path
+//! for threads ∈ {1, 2, 4} under a fixed seed. The persistent pool and
+//! the workspace recycling must also be invisible: thousands of small
+//! regions and repeated workspace-backed calls give the same bits as
+//! fresh-allocation serial runs.
 
 use cse::cluster::{kmeans, KmeansParams};
 use cse::coordinator::{Coordinator, EmbedJob};
 use cse::eigen::lanczos::{lanczos, LanczosParams};
 use cse::eigen::rsvd::{rsvd, RsvdParams};
 use cse::eigen::simult::simultaneous_iteration;
+use cse::embed::fastembed::{apply_series, apply_series_ws};
 use cse::embed::{FastEmbed, Params};
 use cse::funcs::SpectralFn;
 use cse::index::{SimHashIndex, SimHashParams};
+use cse::linalg::qr::{mgs_orthonormalize, mgs_orthonormalize_with};
 use cse::linalg::Mat;
-use cse::par::ExecPolicy;
+use cse::par::{ExecPolicy, Workspace};
+use cse::poly::legendre;
 use cse::sparse::coo::Coo;
 use cse::sparse::{gen, graph, Csr};
 use cse::util::rng::Rng;
@@ -147,6 +155,73 @@ fn eigensolvers_thread_count_invariant() {
         assert_eq!(r1.vectors.data, rt.vectors.data, "rsvd vectors @ {threads}");
         assert_eq!(s1.values, st.values, "simult values @ {threads}");
         assert_eq!(s1.vectors.data, st.vectors.data, "simult vectors @ {threads}");
+    }
+}
+
+#[test]
+fn mgs_orthonormalize_thread_count_invariant() {
+    let mut rng = Rng::new(47);
+    for (m, n) in [(800usize, 24usize), (3000, 8), (64, 64)] {
+        let a0 = Mat::randn(&mut rng, m, n);
+        let mut base = a0.clone();
+        let rank1 = mgs_orthonormalize(&mut base, 1e-12);
+        for threads in [2usize, 4] {
+            let mut at = a0.clone();
+            let rankt = mgs_orthonormalize_with(&mut at, 1e-12, &ExecPolicy::with_threads(threads));
+            assert_eq!(rank1, rankt, "{m}x{n} rank @ {threads} threads");
+            assert_eq!(base.data, at.data, "{m}x{n} mgs differs @ {threads} threads");
+        }
+        // Sanity: actually orthonormal.
+        let gram = base.tmatmul(&base);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram[(i, j)] - want).abs() < 1e-10, "gram[{i},{j}]");
+            }
+        }
+    }
+}
+
+/// The persistent pool must be transparent under sustained micro-region
+/// load: thousands of small kernels (the pool's worst case, where the
+/// old scoped spawns dominated) still bitwise-match serial.
+#[test]
+fn pool_reuse_over_many_small_regions_matches_serial() {
+    let mut rng = Rng::new(48);
+    let a = random_csr(&mut rng, 300, 300, 1800);
+    let x = Mat::randn(&mut rng, 300, 4);
+    let want = a.spmm(&x);
+    let exec = ExecPolicy::with_threads(4);
+    let mut y = Mat::zeros(300, 4);
+    let mut ws = Workspace::new();
+    for _ in 0..1500 {
+        a.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want.data);
+    }
+}
+
+/// Workspace recycling must be invisible: repeated `apply_series_ws`
+/// calls through one warm workspace equal fresh-allocation calls, at
+/// every thread count.
+#[test]
+fn workspace_reuse_is_bitwise_invisible() {
+    let mut rng = Rng::new(49);
+    let g = gen::erdos_renyi(&mut rng, 400, 1600);
+    let na = graph::normalized_adjacency(&g.adj);
+    let omega = Mat::randn(&mut rng, 400, 6);
+    let series = legendre::step_coeffs(40, 0.6);
+    let mut mv = 0usize;
+    let want = apply_series(&na, &series, &omega, &mut mv, &ExecPolicy::serial());
+    for threads in [1usize, 2, 4] {
+        let exec = ExecPolicy::with_threads(threads);
+        let mut ws = Workspace::new();
+        for round in 0..4 {
+            let mut mvr = 0usize;
+            let e = apply_series_ws(&na, &series, &omega, &mut mvr, &exec, &mut ws);
+            assert_eq!(e.data, want.data, "round {round} @ {threads} threads");
+            assert_eq!(mvr, mv);
+            ws.give_mat(e);
+        }
     }
 }
 
