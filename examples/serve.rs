@@ -56,10 +56,12 @@ fn main() {
     let answers = QueryBatch::run(&service, &queries, workers);
     let secs = t.elapsed_secs();
     println!(
-        "{} queries in {:.2}s — {:.0} qps, mean latency {:.1} µs",
+        "{} queries in {:.2}s — {:.0} qps, latency p50 {:.1} µs / p99 {:.1} µs (mean {:.1} µs)",
         answers.len(),
         secs,
         answers.len() as f64 / secs,
+        service.metrics.query_percentile_us(50.0),
+        service.metrics.query_percentile_us(99.0),
         service.metrics.mean_query_us()
     );
 

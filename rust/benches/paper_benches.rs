@@ -114,6 +114,32 @@ fn bench_n(default: usize) -> usize {
     std::env::var("CSE_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Baseline snapshot of every obs stage histogram, for delta breakdowns.
+fn stage_baseline() -> Vec<cse::obs::HistSnapshot> {
+    cse::obs::STAGES.iter().map(|s| s.hist.snapshot()).collect()
+}
+
+/// Per-stage latency breakdown since `base` (stages with no new records
+/// are omitted), as a JSON object keyed by stage name. Percentiles are
+/// exact on the histograms' log-bucket grid.
+fn stage_delta_json(base: &[cse::obs::HistSnapshot]) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for (stage, before) in cse::obs::STAGES.iter().zip(base) {
+        let d = stage.hist.snapshot().sub(before);
+        if d.count == 0 {
+            continue;
+        }
+        let mut s = std::collections::BTreeMap::new();
+        s.insert("count".to_string(), Json::Num(d.count as f64));
+        s.insert("total_ms".to_string(), Json::Num(d.sum as f64 / 1e6));
+        s.insert("mean_us".to_string(), Json::Num(d.mean() / 1e3));
+        s.insert("p50_us".to_string(), Json::Num(d.percentile(50.0) as f64 / 1e3));
+        s.insert("p99_us".to_string(), Json::Num(d.percentile(99.0) as f64 / 1e3));
+        m.insert(stage.name.to_string(), Json::Obj(s));
+    }
+    Json::Obj(m)
+}
+
 /// The DBLP-analog workload + exact reference embedding (DESIGN.md §3).
 struct DblpAnalog {
     na: Csr,
@@ -550,12 +576,20 @@ impl ServingRow {
 
 /// Serving throughput: exact linear scan vs the SimHash ANN index, same
 /// embedding, same top-k workload, n ∈ {10k, 100k}. Reports QPS (serial
-/// and batched), p50/p99 latency, candidate-set sizes and recall@10, and
-/// writes BENCH_serving.json so future PRs can track the QPS trajectory.
+/// and batched), histogram-backed p50/p99 latency (plus the legacy mean
+/// for one release), candidate-set sizes and recall@10, and writes
+/// BENCH_serving.json — including a per-stage breakdown from the obs
+/// layer — so future PRs can track the QPS trajectory.
 fn serving() {
     let topk = 10;
     let workers = 4;
     let ns = [10_000usize, bench_n(100_000)];
+    // Stage histograms on for the whole group: per-query spans cost
+    // ~100 ns against queries that take tens of µs, and in exchange the
+    // JSON gets true hash/probe/scan/re-rank percentiles of the exact
+    // workload being measured.
+    cse::obs::set_stats(true);
+    let stage_base = stage_baseline();
     let mut rows: Vec<ServingRow> = Vec::new();
     for &n in &ns {
         let mut rng = Rng::new(31);
@@ -656,6 +690,9 @@ fn serving() {
             m.insert("qps_batch".to_string(), Json::Num(s.qps_batch));
             m.insert("p50_us".to_string(), Json::Num(s.p50_us));
             m.insert("p99_us".to_string(), Json::Num(s.p99_us));
+            // Legacy mean alongside the histogram percentiles, kept for
+            // one release so trajectory plots bridge the changeover.
+            m.insert("mean_us".to_string(), Json::Num(s.mean_us));
             m.insert("mean_candidates".to_string(), Json::Num(s.mean_candidates));
             m.insert("build_secs".to_string(), Json::Num(r.build_secs));
             if let Some(rep) = &r.recall {
@@ -668,6 +705,8 @@ fn serving() {
     top.insert("bench".to_string(), Json::Str("serving".to_string()));
     top.insert("workers".to_string(), Json::Num(workers as f64));
     top.insert("results".to_string(), Json::Arr(json_rows));
+    top.insert("stages".to_string(), stage_delta_json(&stage_base));
+    cse::obs::set_stats(false);
     std::fs::write("BENCH_serving.json", Json::Obj(top).to_string()).unwrap();
 
     for &n in &ns {
@@ -910,6 +949,26 @@ fn kernels() {
     }
     println!("(warm workspace column must be 0 — the zero-steady-state-allocation check)");
 
+    // Instrumented pass, deliberately AFTER every timed row above (span
+    // overhead must not touch the timings, and region_overhead must run
+    // with stats off): one 4-thread embed with stage histograms on, its
+    // delta recorded into the trajectory entry as a per-stage breakdown.
+    cse::obs::set_stats(true);
+    let stage_base = stage_baseline();
+    {
+        let fe = FastEmbed::new(Params {
+            d: 32,
+            order: 60,
+            cascade: 2,
+            exec: ExecPolicy::with_threads(4),
+            ..Params::default()
+        });
+        let mut rng_e = Rng::new(78);
+        std::hint::black_box(fe.embed(&na, &SpectralFn::Step { c: 0.75 }, &mut rng_e));
+    }
+    let stages = stage_delta_json(&stage_base);
+    cse::obs::set_stats(false);
+
     // Machine-readable trajectory: append this run to BENCH_kernels.json
     // so perf PRs can be checked for monotone kernel throughput.
     let obj = |pairs: Vec<(&str, Json)>| {
@@ -961,6 +1020,7 @@ fn kernels() {
         ("results", Json::Arr(json_rows)),
         ("dispatch", Json::Arr(dispatch_json)),
         ("recursion_allocs", Json::Arr(alloc_json)),
+        ("stages", stages),
     ]);
     // Preserve any prior trajectory (a legacy single-run file contributes
     // its results as entry zero).

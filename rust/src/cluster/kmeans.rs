@@ -75,6 +75,7 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
         let cost = assign_rows(x, &centroids, &mut assignment, &params.exec);
         // Update: per-chunk partial sums/counts in parallel, merged in
         // fixed chunk order — bitwise independent of the thread count.
+        let update_span = crate::obs::span(&crate::obs::KMEANS_UPDATE);
         {
             let assignment = &assignment;
             let row_ranges = &row_ranges;
@@ -121,6 +122,7 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, rng: &mut Rng) -> KmeansResult {
                 }
             }
         }
+        drop(update_span);
         if (prev_cost - cost).abs() <= params.tol * prev_cost.max(1e-300) {
             break;
         }
@@ -141,6 +143,7 @@ fn assign_rows(x: &Mat, centroids: &Mat, assignment: &mut [usize], exec: &ExecPo
     if n == 0 {
         return 0.0;
     }
+    let _span = crate::obs::span(&crate::obs::KMEANS_ASSIGN);
     let ranges = par::even_ranges(n, par::fixed_chunks(n, ASSIGN_ROWS_PER_CHUNK));
     exec.map_chunks(&ranges, assignment, 1, |_, rows, out| {
         let mut chunk_cost = 0.0;

@@ -1,6 +1,16 @@
 //! Atomic runtime metrics exported by the coordinator and the service.
+//!
+//! Flat counters live beside two [`Histogram`]s (query latency, top-k
+//! candidate-set size) so the service can report real percentiles —
+//! p50/p99 exact on the log-bucket grid — instead of deriving everything
+//! from a cumulative-sum mean (which is what the pre-obs `query_ns`
+//! field forced). [`Snapshot`] stays a `Copy` bag of integers for cheap
+//! delta arithmetic; histogram windows use
+//! [`Histogram::snapshot`]/[`crate::obs::HistSnapshot::sub`] instead.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::obs::Histogram;
 
 /// Counters shared across workers. All methods are lock-free.
 #[derive(Default)]
@@ -12,8 +22,10 @@ pub struct Metrics {
     pub shards_done: AtomicUsize,
     pub shards_total: AtomicUsize,
     pub queries: AtomicUsize,
-    /// Cumulative query latency in nanoseconds.
-    pub query_ns: AtomicU64,
+    /// Per-query latency distribution in nanoseconds — replaces the old
+    /// cumulative `query_ns` sum (the exact sum survives as
+    /// `query_hist.sum()`, so means are unchanged; percentiles are new).
+    pub query_hist: Histogram,
     pub rows_flushed: AtomicUsize,
     /// Top-k queries answered (exact or indexed).
     pub topk_queries: AtomicUsize,
@@ -21,6 +33,10 @@ pub struct Metrics {
     /// with an ANN index this is the per-query scan cost the index saved
     /// the service from paying in full.
     pub candidates_scanned: AtomicUsize,
+    /// Per-query candidate-set-size distribution (same events as
+    /// `candidates_scanned`, but as a histogram: the tail matters — one
+    /// bucket collision can cost 100× the mean scan).
+    pub candidates_hist: Histogram,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -31,6 +47,7 @@ pub struct Snapshot {
     pub shards_done: usize,
     pub shards_total: usize,
     pub queries: usize,
+    /// Summed query latency in ns (`query_hist.sum()`).
     pub query_ns: u64,
     pub rows_flushed: usize,
     pub topk_queries: usize,
@@ -53,20 +70,23 @@ impl Metrics {
 
     pub fn record_query(&self, ns: u64) {
         self.queries.fetch_add(1, Ordering::Relaxed);
-        self.query_ns.fetch_add(ns, Ordering::Relaxed);
+        self.query_hist.record(ns);
     }
 
     /// Record one answered top-k query and its candidate-set size.
     pub fn record_topk(&self, candidates: usize) {
         self.topk_queries.fetch_add(1, Ordering::Relaxed);
         self.candidates_scanned.fetch_add(candidates, Ordering::Relaxed);
+        self.candidates_hist.record(candidates as u64);
     }
 
-    /// Mean candidate rows scored per top-k query (NaN when none ran).
+    /// Mean candidate rows scored per top-k query — 0.0 when none ran
+    /// (NaN here used to leak into JSON artifacts, which `util/json`
+    /// cannot represent).
     pub fn mean_candidates(&self) -> f64 {
         let q = self.topk_queries.load(Ordering::Relaxed);
         if q == 0 {
-            return f64::NAN;
+            return 0.0;
         }
         self.candidates_scanned.load(Ordering::Relaxed) as f64 / q as f64
     }
@@ -78,26 +98,30 @@ impl Metrics {
             shards_done: self.shards_done.load(Ordering::Relaxed),
             shards_total: self.shards_total.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),
-            query_ns: self.query_ns.load(Ordering::Relaxed),
+            query_ns: self.query_hist.sum(),
             rows_flushed: self.rows_flushed.load(Ordering::Relaxed),
             topk_queries: self.topk_queries.load(Ordering::Relaxed),
             candidates_scanned: self.candidates_scanned.load(Ordering::Relaxed),
         }
     }
 
-    /// Mean query latency in microseconds (NaN when no queries).
+    /// Mean query latency in microseconds — 0.0 when no queries ran
+    /// (exact: the histogram keeps the full sum).
     pub fn mean_query_us(&self) -> f64 {
-        let q = self.queries.load(Ordering::Relaxed);
-        if q == 0 {
-            return f64::NAN;
-        }
-        self.query_ns.load(Ordering::Relaxed) as f64 / q as f64 / 1e3
+        self.query_hist.mean() / 1e3
+    }
+
+    /// Query latency percentile in microseconds, exact on the histogram's
+    /// log-bucket grid (0.0 when no queries ran).
+    pub fn query_percentile_us(&self, p: f64) -> f64 {
+        self.query_hist.percentile(p) as f64 / 1e3
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn counters_accumulate() {
@@ -111,19 +135,54 @@ mod tests {
         assert_eq!(s.matvecs, 15);
         assert_eq!(s.shards_done, 1);
         assert_eq!(s.queries, 2);
+        assert_eq!(s.query_ns, 6_000, "histogram keeps the exact sum");
         assert!((m.mean_query_us() - 3.0).abs() < 1e-12);
     }
 
     #[test]
     fn topk_candidate_accounting() {
         let m = Metrics::default();
-        assert!(m.mean_candidates().is_nan());
+        assert_eq!(m.mean_candidates(), 0.0, "no queries → 0, not NaN");
         m.record_topk(100);
         m.record_topk(50);
         let s = m.snapshot();
         assert_eq!(s.topk_queries, 2);
         assert_eq!(s.candidates_scanned, 150);
         assert!((m.mean_candidates() - 75.0).abs() < 1e-12);
+        assert_eq!(m.candidates_hist.count(), 2);
+        assert_eq!(m.candidates_hist.max(), 100);
+    }
+
+    #[test]
+    fn idle_metrics_serialize_to_valid_json() {
+        // Regression: mean_candidates()/mean_query_us() used to be NaN
+        // with zero queries, and util/json writes NaN as the bare token
+        // `NaN` — invalid JSON that poisoned every downstream artifact.
+        let m = Metrics::default();
+        for v in [m.mean_candidates(), m.mean_query_us(), m.query_percentile_us(99.0)] {
+            let s = Json::Num(v).to_string();
+            assert!(Json::parse(&s).is_ok(), "{s:?} must parse as JSON");
+        }
+    }
+
+    #[test]
+    fn latency_percentiles_come_from_the_histogram() {
+        let m = Metrics::default();
+        // 90 fast queries (~1µs) and 10 slow ones (~1ms): a mean-derived
+        // "percentile" would smear these; the histogram separates them.
+        for _ in 0..90 {
+            m.record_query(1_000);
+        }
+        for _ in 0..10 {
+            m.record_query(1_000_000);
+        }
+        let p50 = m.query_percentile_us(50.0);
+        let p99 = m.query_percentile_us(99.0);
+        assert!(p50 < 3.0, "p50 = {p50} µs should be in the fast bucket");
+        assert!(p99 >= 500.0, "p99 = {p99} µs should be in the slow bucket");
+        assert_eq!(m.query_hist.max(), 1_000_000);
+        let mean_us = m.mean_query_us();
+        assert!((mean_us - 100.9).abs() < 1e-9, "mean stays exact: {mean_us}");
     }
 
     #[test]
@@ -135,6 +194,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for _ in 0..1000 {
                         m.add_matvecs(1);
+                        m.record_query(500);
                     }
                 })
             })
@@ -143,5 +203,7 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(m.snapshot().matvecs, 4000);
+        assert_eq!(m.query_hist.count(), 4000);
+        assert_eq!(m.snapshot().query_ns, 4000 * 500);
     }
 }

@@ -189,7 +189,16 @@ impl Coordinator {
                 let metrics = Arc::clone(&self.metrics);
                 scope.spawn(move || {
                     let mut ws = Workspace::new();
-                    while let Some(shard) = queue.pop() {
+                    loop {
+                        // Queue wait vs. run time, attributed separately
+                        // (the wait that ends in shutdown is discarded).
+                        let mut wait = crate::obs::span(&crate::obs::SHARD_WAIT);
+                        let Some(shard) = queue.pop() else {
+                            wait.cancel();
+                            break;
+                        };
+                        drop(wait);
+                        let _run = crate::obs::span(&crate::obs::SHARD_RUN);
                         let mut mv = 0usize;
                         let mut e = shard.omega;
                         for _ in 0..plan.b {

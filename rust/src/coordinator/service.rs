@@ -123,8 +123,10 @@ impl SimilarityService {
         }
     }
 
-    /// Answer one query, recording latency.
+    /// Answer one query, recording latency into the metrics histogram
+    /// (and a `query` stage span when `--stats`/`--trace` is on).
     pub fn answer(&self, q: &Query) -> Answer {
+        let _span = crate::obs::span(&crate::obs::QUERY);
         let t = std::time::Instant::now();
         let ans = match *q {
             Query::Corr { i, j } => Answer::Corr(self.corr(i, j)),
@@ -146,9 +148,15 @@ pub struct ServingSample {
     pub qps_serial: f64,
     /// Throughput of a [`QueryBatch`] pass with the given worker count.
     pub qps_batch: f64,
-    /// Per-query latency percentiles from the serial pass.
+    /// Per-query latency percentiles of the serial pass, read from the
+    /// service's [`Metrics::query_hist`] delta window — exact on the
+    /// histogram's log-bucket grid, not derived from the mean.
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Mean per-query latency of the serial pass (µs). Kept alongside
+    /// the percentiles for one release so trajectory plots of the old
+    /// mean-based reports stay comparable.
+    pub mean_us: f64,
     /// Mean candidate rows scored per top-k query (metrics delta across
     /// both passes; NaN-free — 0 when the workload had no top-k queries).
     pub mean_candidates: f64,
@@ -156,21 +164,23 @@ pub struct ServingSample {
 
 /// Measure `queries` over `service`: a serial pass for latency
 /// percentiles + serial QPS, then a batched pass for pool QPS.
+///
+/// Latency p50/p99 (and the legacy mean) are taken from the delta of
+/// [`Metrics::query_hist`] across the serial pass, so a service reused
+/// for several measured workloads still reports per-window percentiles.
 pub fn measure_serving(
     service: &SimilarityService,
     queries: &[Query],
     workers: usize,
 ) -> ServingSample {
     let before = service.metrics.snapshot();
-    let mut lat_us: Vec<f64> = Vec::with_capacity(queries.len());
+    let hist_before = service.metrics.query_hist.snapshot();
     let t = crate::util::timer::Timer::start();
     for q in queries {
-        let tq = crate::util::timer::Timer::start();
         std::hint::black_box(service.answer(q));
-        lat_us.push(tq.elapsed_secs() * 1e6);
     }
     let qps_serial = queries.len() as f64 / t.elapsed_secs();
-    let pcts = crate::util::stats::percentiles(&mut lat_us, &[50.0, 99.0]);
+    let serial = service.metrics.query_hist.snapshot().sub(&hist_before);
     let t = crate::util::timer::Timer::start();
     let answers = QueryBatch::run(service, queries, workers);
     let qps_batch = answers.len() as f64 / t.elapsed_secs();
@@ -178,7 +188,14 @@ pub fn measure_serving(
     let dq = (after.topk_queries - before.topk_queries).max(1);
     let mean_candidates =
         (after.candidates_scanned - before.candidates_scanned) as f64 / dq as f64;
-    ServingSample { qps_serial, qps_batch, p50_us: pcts[0], p99_us: pcts[1], mean_candidates }
+    ServingSample {
+        qps_serial,
+        qps_batch,
+        p50_us: serial.percentile(50.0) as f64 / 1e3,
+        p99_us: serial.percentile(99.0) as f64 / 1e3,
+        mean_us: serial.mean() / 1e3,
+        mean_candidates,
+    }
 }
 
 /// A batch executor: pushes queries through a bounded queue to a worker
@@ -337,7 +354,11 @@ mod tests {
         assert_eq!(s.metrics.snapshot().topk_queries, 40);
         assert!((sample.mean_candidates - 29.0).abs() < 1e-12);
         assert!(sample.qps_serial > 0.0 && sample.qps_batch > 0.0);
+        // Histogram-backed percentiles: ordered, positive, and the
+        // legacy mean rides along for one release.
         assert!(sample.p50_us <= sample.p99_us);
+        assert!(sample.p99_us > 0.0);
+        assert!(sample.mean_us > 0.0);
     }
 
     #[test]

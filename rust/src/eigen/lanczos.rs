@@ -150,6 +150,7 @@ fn reorthogonalize(w: &mut [f64], basis: &[Vec<f64>], dots: &mut [f64], exec: &E
     if nb == 0 {
         return;
     }
+    let _span = crate::obs::span(&crate::obs::LANCZOS_REORTH);
     let dots = &mut dots[..nb];
     {
         let w = &*w;

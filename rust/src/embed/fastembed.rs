@@ -189,6 +189,7 @@ pub fn apply_series_ws(
 ) -> Mat {
     let a = &series.coeffs;
     assert!(!a.is_empty(), "empty series");
+    let _span = crate::obs::span(&crate::obs::APPLY_SERIES);
     let mut e = ws.take_mat(q0.rows, q0.cols);
     e.data.copy_from_slice(&q0.data);
     e.scale(a[0]);

@@ -97,6 +97,7 @@ pub fn rerank_top_k(
     if k == 0 {
         return Vec::new();
     }
+    let _span = crate::obs::span(&crate::obs::QUERY_RERANK);
     // Kept sorted best-first; bounded insertion keeps each step O(k).
     let mut best: Vec<(usize, f64)> = Vec::with_capacity(k.min(e.rows) + 1);
     for j in candidates {

@@ -134,16 +134,23 @@ impl SimHashIndex {
         assert_eq!(row.len(), self.d);
         let bits = self.params.bits;
         let mut projs = vec![0.0; self.params.tables * bits];
-        project_into(&self.planes, row, &mut projs);
+        {
+            let _span = crate::obs::span(&crate::obs::QUERY_HASH);
+            project_into(&self.planes, row, &mut projs);
+        }
         let mut out: Vec<u32> = Vec::new();
-        for (tbl, map) in self.buckets.iter().enumerate() {
-            let z = &projs[tbl * bits..(tbl + 1) * bits];
-            for sig in probe_signatures(z, self.params.probes) {
-                if let Some(ids) = map.get(&sig) {
-                    out.extend_from_slice(ids);
+        {
+            let _span = crate::obs::span(&crate::obs::QUERY_PROBE);
+            for (tbl, map) in self.buckets.iter().enumerate() {
+                let z = &projs[tbl * bits..(tbl + 1) * bits];
+                for sig in probe_signatures(z, self.params.probes) {
+                    if let Some(ids) = map.get(&sig) {
+                        out.extend_from_slice(ids);
+                    }
                 }
             }
         }
+        let _span = crate::obs::span(&crate::obs::QUERY_SCAN);
         out.sort_unstable();
         out.dedup();
         out.into_iter().map(|i| i as usize).collect()

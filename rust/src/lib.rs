@@ -15,8 +15,11 @@
 //!   deterministically and without steady-state allocations),
 //!   the column-shard coordinator and the similarity-query service, the
 //!   [`index`] ANN layer (SimHash LSH + exact baseline) that makes top-k
-//!   serving sublinear, and a PJRT runtime that executes JAX/Pallas-
-//!   authored HLO artifacts for dense tiles (`pjrt` feature).
+//!   serving sublinear, the [`obs`] observability layer (atomic log-bucket
+//!   histograms, tracing spans with Chrome `trace_event` export, and
+//!   per-stage profiling through pool, kernels, and serving), and a PJRT
+//!   runtime that executes JAX/Pallas-authored HLO artifacts for dense
+//!   tiles (`pjrt` feature).
 //! * **Python (`python/compile`)** — build-time only: Pallas kernels
 //!   (L1) and JAX graphs (L2), AOT-lowered to `artifacts/*.hlo.txt`.
 //!
@@ -45,6 +48,7 @@ pub mod embed;
 pub mod funcs;
 pub mod index;
 pub mod linalg;
+pub mod obs;
 pub mod par;
 pub mod poly;
 pub mod runtime;

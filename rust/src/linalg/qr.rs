@@ -119,6 +119,7 @@ pub fn mgs_orthonormalize_ws(
     if n == 0 || m == 0 {
         return 0;
     }
+    let _span = crate::obs::span(&crate::obs::ORTHO);
     let mut at = ws.take_mat(n, m); // row j = column j of a
     a.transpose_into(&mut at);
     let mut dots = ws.take(n);

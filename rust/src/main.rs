@@ -10,7 +10,10 @@
 //! cse artifacts  [--dir artifacts]
 //! ```
 //!
-//! Run any subcommand with `--help` for the full option list.
+//! Run any subcommand with `--help` for the full option list. Every
+//! subcommand also accepts `--stats` (per-stage latency histograms,
+//! printed as an observability report at job end) and `--trace FILE`
+//! (tracing spans exported as Chrome trace_event JSON).
 
 use std::path::Path;
 
@@ -142,6 +145,48 @@ const THREADS_OPT: Opt = Opt {
     default: Some("0"),
 };
 
+const OBS_OPTS: &[Opt] = &[
+    Opt {
+        name: "stats",
+        help: "collect per-stage latency histograms and print an observability report (flag)",
+        default: None,
+    },
+    Opt {
+        name: "trace",
+        help: "write spans as Chrome trace_event JSON to FILE (open in chrome://tracing or \
+               ui.perfetto.dev); implies --stats",
+        default: None,
+    },
+];
+
+/// Enable observability per `--stats` / `--trace FILE`; returns the
+/// trace output path (tracing implies stats).
+fn obs_setup(a: &Args) -> Option<String> {
+    if a.flag("stats") {
+        cse::obs::set_stats(true);
+    }
+    let trace = a.get("trace").map(str::to_string);
+    if trace.is_some() {
+        cse::obs::set_tracing(true);
+    }
+    trace
+}
+
+/// At job end: write the trace file and print the per-stage report.
+fn obs_finish(trace: Option<String>) -> Result<(), String> {
+    if let Some(path) = trace {
+        let t = cse::obs::drain_trace();
+        std::fs::write(&path, t.to_chrome_json().to_string())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}: {} spans ({} dropped)", t.events.len(), t.dropped);
+        print!("{}", t.summary());
+    }
+    if cse::obs::stats_enabled() {
+        print!("{}", cse::obs::ObsReport::capture().render());
+    }
+    Ok(())
+}
+
 const COMMON_OPTS: &[Opt] = &[
     Opt { name: "graph", help: "edge-list file (SNAP format); omit to generate", default: None },
     Opt { name: "kind", help: "generator when no --graph: sbm|er|ba", default: Some("sbm") },
@@ -153,14 +198,17 @@ const COMMON_OPTS: &[Opt] = &[
 ];
 
 fn cmd_gen_graph(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
+        let mut opts = COMMON_OPTS.to_vec();
+        opts.extend_from_slice(OBS_OPTS);
         println!(
             "{}",
-            usage("cse gen-graph", "Generate a synthetic graph and write an edge list", COMMON_OPTS)
+            usage("cse gen-graph", "Generate a synthetic graph and write an edge list", &opts)
         );
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let (adj, labels) = load_or_gen(&a)?;
     let out = a.get_or("out", "graph.txt");
     io::write_edge_list(Path::new(out), &adj, "generated by cse gen-graph")
@@ -172,11 +220,11 @@ fn cmd_gen_graph(argv: Vec<String>) -> Result<(), String> {
         io::write_tsv(Path::new(&lab_out), &["label"], &rows).map_err(|e| e.to_string())?;
         println!("wrote {lab_out}");
     }
-    Ok(())
+    obs_finish(trace)
 }
 
 fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -194,9 +242,11 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "shard", help: "columns per shard", default: Some("8") },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
+        opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse embed", "Compressive spectral embedding of a graph", &opts));
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 0)?;
@@ -229,11 +279,11 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     io::write_tsv(Path::new(out), &header_refs, &rows).map_err(|e| e.to_string())?;
     println!("wrote {out}");
-    Ok(())
+    obs_finish(trace)
 }
 
 fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -241,9 +291,11 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "eig-k", help: "number of eigenpairs", default: Some("50") },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse eig", "Partial eigendecomposition baselines", &opts));
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let k = a.usize("eig-k", 50)?;
@@ -268,11 +320,11 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
     if pe.values.len() > 10 {
         println!("  ... lambda[{}] = {:.6}", pe.values.len() - 1, pe.values.last().unwrap());
     }
-    Ok(())
+    obs_finish(trace)
 }
 
 fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -288,9 +340,11 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let (adj, labels) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 0)?;
@@ -322,11 +376,11 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
         }
     }
     println!("median modularity = {:.4}", cse::util::stats::median(&mods));
-    Ok(())
+    obs_finish(trace)
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -348,9 +402,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
             },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 2)?;
@@ -416,10 +472,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     let answers = QueryBatch::run(&service, &queries, qworkers);
     let secs = t.elapsed_secs();
     println!(
-        "{} queries in {} ({:.0} qps, mean latency {:.1} µs)",
+        "{} queries in {} ({:.0} qps)",
         answers.len(),
         human_secs(secs),
         answers.len() as f64 / secs,
+    );
+    // Percentiles come from the metrics histogram (exact on its
+    // log-bucket grid); the mean rides along for comparability.
+    println!(
+        "latency: p50 {:.1} µs, p99 {:.1} µs, max {:.1} µs (mean {:.1} µs)",
+        service.metrics.query_percentile_us(50.0),
+        service.metrics.query_percentile_us(99.0),
+        service.metrics.query_hist.max() as f64 / 1e3,
         service.metrics.mean_query_us()
     );
     let snap = service.metrics.snapshot();
@@ -450,15 +514,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
         );
         service.attach_index(idx);
     }
-    Ok(())
+    obs_finish(trace)
 }
 
 fn cmd_artifacts(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help"])?;
+    let a = Args::parse(argv, &["help", "stats"])?;
     if a.flag("help") {
         println!("cse artifacts [--dir artifacts] — list AOT artifacts");
         return Ok(());
     }
+    let trace = obs_setup(&a);
     let dir = a.get_or("dir", "artifacts");
     let arts = cse::runtime::Artifacts::load(Path::new(dir))?;
     println!("{} artifacts in {dir}:", arts.entries.len());
@@ -471,5 +536,5 @@ fn cmd_artifacts(argv: Vec<String>) -> Result<(), String> {
         println!("  {:<40} params: {}", e.name, shapes.join(" "));
     }
     println!("tile geometry: {:?}", arts.tile);
-    Ok(())
+    obs_finish(trace)
 }

@@ -1,0 +1,327 @@
+//! Lock-free log-bucketed histograms (HDR-style).
+//!
+//! A [`Histogram`] is a fixed array of 64 atomic counters, one per
+//! power-of-two bucket: bucket 0 holds the value 0, bucket `i ≥ 1` holds
+//! values in `[2^(i-1), 2^i - 1]` (the last bucket is open-ended). That
+//! is ≤ 2× relative error per recorded value — plenty for latency and
+//! size distributions — while `record` is four relaxed atomic ops with no
+//! locks and no allocation, so recorders on the pool's hot paths never
+//! contend. Percentiles are **exact on the bucket grid**: the reported
+//! quantile is the upper edge of the bucket containing the rank (clamped
+//! to the exact observed maximum), not an extrapolation from a mean.
+//!
+//! Shard-local histograms can be [`Histogram::merge_from`]-combined, and
+//! [`HistSnapshot`] supports interval deltas (`sub`) so callers can
+//! report percentiles for one measurement window of a long-lived
+//! histogram (see `coordinator::service::measure_serving`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log buckets (`u64` has 64 bit positions).
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value: 0 for 0, else `floor(log2 v) + 1`, clamped.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Smallest value that lands in bucket `i`.
+#[inline]
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Largest value that lands in bucket `i`.
+#[inline]
+pub fn bucket_hi(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Concurrent log-bucketed histogram. All methods are lock-free; `record`
+/// is a handful of relaxed atomic increments.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            counts: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (a latency in ns, a candidate count, …).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of all recorded values (wrapping only past `u64::MAX`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Percentile `p ∈ [0, 100]` on the bucket grid (see module docs).
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.snapshot().percentile(p)
+    }
+
+    /// Add every counter of `other` into `self` (shard merge). The result
+    /// is exactly the histogram of the concatenated value streams.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter().zip(&other.counts) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy. Under concurrent recording the bucket counts
+    /// are each individually exact but may lag one another by in-flight
+    /// records; derived statistics use the bucket counts as their own
+    /// total, so they are always self-consistent.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (out, c) in counts.iter_mut().zip(&self.counts) {
+            *out = c.load(Ordering::Relaxed);
+        }
+        HistSnapshot { counts, count: self.count(), sum: self.sum(), max: self.max() }
+    }
+}
+
+/// Plain-integer copy of a [`Histogram`], for delta windows and reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    /// Maximum over the histogram's whole lifetime (see [`Self::sub`]).
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { counts: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Mean of recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile `p ∈ [0, 100]`: the upper edge of the bucket holding
+    /// rank `ceil(p/100 · total)` (clamped to the observed maximum), or 0
+    /// when the snapshot is empty. Monotone in `p` by construction.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_hi(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The delta window `self − earlier` (per-bucket saturating), for
+    /// percentiles over one measurement interval of a shared histogram.
+    /// `max` stays the lifetime maximum — it cannot be windowed.
+    pub fn sub(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (i, out) in counts.iter_mut().enumerate() {
+            *out = self.counts[i].saturating_sub(earlier.counts[i]);
+        }
+        HistSnapshot {
+            counts,
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            max: self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::ExecPolicy;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_round_trip() {
+        for i in 0..BUCKETS {
+            let (lo, hi) = (bucket_lo(i), bucket_hi(i));
+            assert!(lo <= hi, "bucket {i}");
+            assert_eq!(bucket_index(lo), i, "lo of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "hi of bucket {i}");
+        }
+        for k in 0..63 {
+            assert_eq!(bucket_index(1u64 << k), k + 1);
+            if k > 0 {
+                assert_eq!(bucket_index((1u64 << k) - 1), k);
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Adjacent buckets tile the value line with no gap or overlap.
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_lo(i), bucket_hi(i - 1) + 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bounded() {
+        let h = Histogram::new();
+        let mut rng = Rng::new(41);
+        let mut true_max = 0u64;
+        for _ in 0..5000 {
+            let v = rng.below(1_000_000) as u64;
+            true_max = true_max.max(v);
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5000);
+        assert_eq!(h.max(), true_max);
+        let mut prev = 0u64;
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+            let q = h.percentile(p);
+            assert!(q >= prev, "p{p} = {q} < p_prev = {prev}");
+            assert!(q <= true_max);
+            prev = q;
+        }
+        assert_eq!(h.percentile(100.0), true_max, "p100 is the exact max");
+        // Grid accuracy: p50 is within 2x of the exact median's bucket.
+        let q50 = h.percentile(50.0);
+        assert!(q50 >= bucket_lo(bucket_index(q50)));
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.snapshot(), HistSnapshot::default());
+    }
+
+    #[test]
+    fn merge_of_shards_equals_whole() {
+        let whole = Histogram::new();
+        let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        let mut rng = Rng::new(42);
+        for k in 0..2000 {
+            let v = rng.below(1 << 20) as u64;
+            whole.record(v);
+            shards[k % 4].record(v);
+        }
+        let merged = Histogram::new();
+        for s in &shards {
+            merged.merge_from(s);
+        }
+        assert_eq!(merged.snapshot(), whole.snapshot());
+        assert_eq!(merged.percentile(99.0), whole.percentile(99.0));
+    }
+
+    #[test]
+    fn concurrent_recorders_on_pool_lose_nothing() {
+        let h = Histogram::new();
+        let n = 10_000u64;
+        ExecPolicy::with_threads(4).run_indexed(n as usize, |k| h.record(k as u64));
+        let s = h.snapshot();
+        assert_eq!(s.count, n);
+        assert_eq!(s.sum, n * (n - 1) / 2);
+        assert_eq!(s.max, n - 1);
+        assert_eq!(s.counts.iter().sum::<u64>(), n);
+        // Values 0..n are dense, so every bucket count is predictable:
+        // bucket i holds min(2^(i-1), n - 2^(i-1)) values for i >= 1.
+        for i in 0..BUCKETS {
+            let expect = (0..n).filter(|&v| bucket_index(v) == i).count() as u64;
+            assert_eq!(s.counts[i], expect, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn delta_windows_subtract_cleanly() {
+        let h = Histogram::new();
+        for v in [1u64, 5, 9, 200] {
+            h.record(v);
+        }
+        let before = h.snapshot();
+        for v in [3u64, 1000, 1001] {
+            h.record(v);
+        }
+        let delta = h.snapshot().sub(&before);
+        assert_eq!(delta.count, 3);
+        assert_eq!(delta.sum, 2004);
+        assert_eq!(delta.counts.iter().sum::<u64>(), 3);
+        // p100 of the window clamps to the lifetime max, which here is
+        // also the window max.
+        assert_eq!(delta.percentile(100.0), 1001);
+    }
+}

@@ -1,0 +1,210 @@
+//! Span collection: bounded per-thread ring buffers drained into a
+//! process-wide [`Trace`].
+//!
+//! Every thread that finishes a traced span appends a [`TraceEvent`] to
+//! its own fixed-capacity ring buffer (allocated once, on the thread's
+//! first span; full rings overwrite their oldest events and count the
+//! drops). The buffer is registered in a global list on creation, so
+//! [`drain_trace`] can collect spans from *every* thread that ever
+//! recorded — including the detached persistent pool workers, which are
+//! parked between regions and never exit. The record path touches only
+//! the recording thread's own ring (its mutex is uncontended except
+//! against a concurrent drain); nothing global is locked per span.
+//!
+//! Timestamps are monotonic nanoseconds since the first [`now_ns`] call
+//! in the process, so spans from different threads share one time axis —
+//! which is exactly what the Chrome `trace_event` export needs.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Spans each thread retains before overwriting its oldest (~640 KiB).
+const RING_CAP: usize = 1 << 14;
+
+/// Monotonic nanoseconds since the process-wide trace epoch (the first
+/// call). All spans on all threads share this axis.
+pub fn now_ns() -> u64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One finished span, as stored in the ring buffers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Small sequential id of the recording thread (1-based).
+    pub tid: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Nesting depth at record time (0 = top-level span on its thread).
+    pub depth: u16,
+}
+
+struct Ring {
+    buf: Vec<TraceEvent>,
+    /// Oldest element once the buffer is full (next overwrite position).
+    head: usize,
+    dropped: u64,
+}
+
+struct Slot {
+    tid: u64,
+    ring: Mutex<Ring>,
+}
+
+static REGISTRY: Mutex<Vec<Arc<Slot>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<Slot>>> = const { RefCell::new(None) };
+    static DEPTH: Cell<u16> = const { Cell::new(0) };
+}
+
+/// Current span nesting depth on this thread; increments it.
+pub(crate) fn depth_push() -> u16 {
+    let d = DEPTH.get();
+    DEPTH.set(d.saturating_add(1));
+    d
+}
+
+pub(crate) fn depth_pop() {
+    DEPTH.set(DEPTH.get().saturating_sub(1));
+}
+
+/// Append a finished span to this thread's ring (registering the ring
+/// globally on first use).
+pub(crate) fn record(name: &'static str, start_ns: u64, end_ns: u64, depth: u16) {
+    LOCAL.with(|local| {
+        let mut local = local.borrow_mut();
+        let slot = local.get_or_insert_with(|| {
+            let slot = Arc::new(Slot {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                ring: Mutex::new(Ring {
+                    buf: Vec::with_capacity(RING_CAP),
+                    head: 0,
+                    dropped: 0,
+                }),
+            });
+            let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+            reg.push(slot.clone());
+            slot
+        });
+        let ev = TraceEvent { name, tid: slot.tid, start_ns, end_ns, depth };
+        let mut ring = slot.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.buf.len() < RING_CAP {
+            ring.buf.push(ev);
+        } else {
+            let head = ring.head;
+            ring.buf[head] = ev;
+            ring.head = (head + 1) % RING_CAP;
+            ring.dropped += 1;
+        }
+    });
+}
+
+/// Collect (and clear) every thread's ring into one [`Trace`], sorted by
+/// start time. Threads keep recording into their emptied rings.
+pub fn drain_trace() -> Trace {
+    let slots: Vec<Arc<Slot>> = {
+        let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        reg.clone()
+    };
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for slot in slots {
+        let mut ring = slot.ring.lock().unwrap_or_else(|e| e.into_inner());
+        let head = ring.head;
+        events.extend_from_slice(&ring.buf[head..]);
+        events.extend_from_slice(&ring.buf[..head]);
+        dropped += ring.dropped;
+        ring.buf.clear();
+        ring.head = 0;
+        ring.dropped = 0;
+    }
+    events.sort_by_key(|e| (e.start_ns, e.tid));
+    Trace { events, dropped }
+}
+
+/// A drained set of spans: the process-wide view the exporters run on.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Spans lost to ring overwrites before this drain.
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Chrome `trace_event` JSON (the object form): load the file in
+    /// `chrome://tracing` or <https://ui.perfetto.dev>. Complete events
+    /// (`"ph": "X"`) with microsecond timestamps on one shared clock.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.to_string()));
+                m.insert("cat".to_string(), Json::Str("cse".to_string()));
+                m.insert("ph".to_string(), Json::Str("X".to_string()));
+                m.insert("pid".to_string(), Json::Num(1.0));
+                m.insert("tid".to_string(), Json::Num(e.tid as f64));
+                m.insert("ts".to_string(), Json::Num(e.start_ns as f64 / 1e3));
+                m.insert(
+                    "dur".to_string(),
+                    Json::Num(e.end_ns.saturating_sub(e.start_ns) as f64 / 1e3),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        top.insert("droppedEvents".to_string(), Json::Num(self.dropped as f64));
+        Json::Obj(top)
+    }
+
+    /// Text flamegraph-style summary: one line per span name, indented by
+    /// its minimum nesting depth, with an inclusive-time bar. Durations
+    /// are inclusive of child spans (like a flamegraph frame).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        struct Agg {
+            count: u64,
+            total_ns: u64,
+            min_depth: u16,
+        }
+        let mut by_name: BTreeMap<&'static str, Agg> = BTreeMap::new();
+        for e in &self.events {
+            let a = by_name
+                .entry(e.name)
+                .or_insert_with(|| Agg { count: 0, total_ns: 0, min_depth: e.depth });
+            a.count += 1;
+            a.total_ns += e.end_ns.saturating_sub(e.start_ns);
+            a.min_depth = a.min_depth.min(e.depth);
+        }
+        let mut rows: Vec<(&'static str, Agg)> = by_name.into_iter().collect();
+        rows.sort_by(|a, b| (a.1.min_depth, b.1.total_ns).cmp(&(b.1.min_depth, a.1.total_ns)));
+        let max_total = rows.iter().map(|r| r.1.total_ns).max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        let _ = writeln!(out, "trace: {} spans ({} dropped)", self.events.len(), self.dropped);
+        for (name, a) in &rows {
+            let indent = "  ".repeat(a.min_depth as usize);
+            let label = format!("{indent}{name}");
+            let bar_len = ((a.total_ns as f64 / max_total as f64) * 24.0).round() as usize;
+            let _ = writeln!(
+                out,
+                "  {label:<28} {:>8}x  total {:>10}  mean {:>10}  {}",
+                a.count,
+                crate::util::human_secs(a.total_ns as f64 / 1e9),
+                crate::util::human_secs(a.total_ns as f64 / 1e9 / a.count.max(1) as f64),
+                "#".repeat(bar_len.max(1)),
+            );
+        }
+        out
+    }
+}

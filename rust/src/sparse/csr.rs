@@ -160,6 +160,7 @@ impl Csr {
     pub fn spmm_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        let _span = crate::obs::span(&crate::obs::SPMM);
         let d = x.cols;
         if exec.is_serial() {
             // Allocation-free serial path (the recursion's default): one
