@@ -86,12 +86,11 @@ fn run_pass(
 ) -> f64 {
     let s = measure_serving(service, queries, workers);
     println!(
-        "{label:<12} {:>8.0} qps ({workers} workers) | serial p50 {:.0} µs, p99 {:.0} µs, \
-         mean {:.0} µs | mean candidates {:.1}",
+        "{label:<12} {:>8.0} qps ({workers} workers) | serial p50 {:.0} µs, p99 {:.0} µs \
+         | mean candidates {:.1}",
         s.qps_batch,
         s.p50_us,
         s.p99_us,
-        s.mean_us,
         s.mean_candidates,
     );
     s.qps_batch

@@ -26,6 +26,7 @@ use cse::eigen::lanczos::{lanczos, LanczosParams};
 use cse::eigen::nystrom::nystrom;
 use cse::eigen::rsvd::{rsvd, RsvdParams};
 use cse::eigen::simult::simultaneous_iteration;
+use cse::embed::op::Operator;
 use cse::embed::{FastEmbed, Params};
 use cse::funcs::SpectralFn;
 use cse::index::{evaluate_recall, AnnIndex, RecallReport, SimHashIndex, SimHashParams};
@@ -576,10 +577,11 @@ impl ServingRow {
 
 /// Serving throughput: exact linear scan vs the SimHash ANN index, same
 /// embedding, same top-k workload, n ∈ {10k, 100k}. Reports QPS (serial
-/// and batched), histogram-backed p50/p99 latency (plus the legacy mean
-/// for one release), candidate-set sizes and recall@10, and writes
-/// BENCH_serving.json — including a per-stage breakdown from the obs
-/// layer — so future PRs can track the QPS trajectory.
+/// and batched), histogram-backed p50/p99 latency, candidate-set sizes
+/// and recall@10, and appends a trajectory entry to BENCH_serving.json —
+/// including a per-stage breakdown from the obs layer — so future PRs
+/// can track the QPS trend. (The legacy `mean_us` field is gone after
+/// its one bridging release; old entries that carry it still parse.)
 fn serving() {
     let topk = 10;
     let workers = 4;
@@ -690,9 +692,6 @@ fn serving() {
             m.insert("qps_batch".to_string(), Json::Num(s.qps_batch));
             m.insert("p50_us".to_string(), Json::Num(s.p50_us));
             m.insert("p99_us".to_string(), Json::Num(s.p99_us));
-            // Legacy mean alongside the histogram percentiles, kept for
-            // one release so trajectory plots bridge the changeover.
-            m.insert("mean_us".to_string(), Json::Num(s.mean_us));
             m.insert("mean_candidates".to_string(), Json::Num(s.mean_candidates));
             m.insert("build_secs".to_string(), Json::Num(r.build_secs));
             if let Some(rep) = &r.recall {
@@ -701,12 +700,35 @@ fn serving() {
             Json::Obj(m)
         })
         .collect();
+    let mut entry = std::collections::BTreeMap::new();
+    entry.insert("workers".to_string(), Json::Num(workers as f64));
+    entry.insert("results".to_string(), Json::Arr(json_rows));
+    entry.insert("stages".to_string(), stage_delta_json(&stage_base));
+    cse::obs::set_stats(false);
+    // Preserve prior runs as a trajectory; a legacy single-run file (and
+    // old entries still carrying `mean_us`) contribute as-is.
+    let prior = std::fs::read_to_string("BENCH_serving.json")
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let mut trajectory: Vec<Json> = match &prior {
+        Some(j) => match j.get("trajectory").and_then(|t| t.as_arr()) {
+            Some(entries) => entries.to_vec(),
+            None if j.get("results").is_some() => vec![j.clone()],
+            None => Vec::new(),
+        },
+        None => Vec::new(),
+    };
+    trajectory.push(Json::Obj(entry));
     let mut top = std::collections::BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("serving".to_string()));
-    top.insert("workers".to_string(), Json::Num(workers as f64));
-    top.insert("results".to_string(), Json::Arr(json_rows));
-    top.insert("stages".to_string(), stage_delta_json(&stage_base));
-    cse::obs::set_stats(false);
+    top.insert(
+        "note".to_string(),
+        Json::Str(
+            "appended per `cargo bench -- serving` run; keep qps_batch monotone across perf PRs"
+                .to_string(),
+        ),
+    );
+    top.insert("trajectory".to_string(), Json::Arr(trajectory));
     std::fs::write("BENCH_serving.json", Json::Obj(top).to_string()).unwrap();
 
     for &n in &ns {
@@ -815,7 +837,11 @@ fn recursion_allocs(na: &Csr, x: &Mat, order: usize, exec: &ExecPolicy) -> (f64,
 /// Parallel-execution-layer bench: SpMM GFLOP/s and embed wall-clock at
 /// 1/2/4 threads on the n=100k synthetic serving graph, plus the
 /// pre-refactor serial SpMM loop inlined as a reference so regressions of
-/// the 1-thread path are visible; region-dispatch overhead of the
+/// the 1-thread path are visible; a d=128 column-tiled headroom row
+/// (`spmm_tiled_gflops` — the register-blocked lanes vs the scalar
+/// reference, bitwise-checked); fused-step accounting
+/// (`fused_step_passes` — every interior recurrence step must arrive
+/// through the one-pass axpby entry); region-dispatch overhead of the
 /// persistent pool vs the scoped-spawn baseline; and allocs/iteration of
 /// the recursion with and without workspace reuse. Appends a trajectory
 /// entry to BENCH_kernels.json (and writes bench_out/kernels.tsv) so the
@@ -923,6 +949,110 @@ fn kernels() {
     )
     .unwrap();
 
+    // Column-tiled headroom at d=128: the scalar reference re-reads each
+    // nonzero's (u32 index, f64 value) once per column; the shipped
+    // kernel amortizes the load across register-blocked lanes of 8. Both
+    // accumulate per output element in identical nonzero order, so the
+    // results must match bitwise.
+    let d_wide = 128;
+    let xw = Mat::randn(&mut rng, n, d_wide);
+    let mut yw_ref = Mat::zeros(n, d_wide);
+    let reference_wide = cse::util::timer::bench(reps, || {
+        yw_ref.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..na.rows {
+            let (idx, val) = na.row(i);
+            let yrow = &mut yw_ref.data[i * d_wide..(i + 1) * d_wide];
+            for (&j, &aij) in idx.iter().zip(val) {
+                let xrow = &xw.data[j as usize * d_wide..(j as usize + 1) * d_wide];
+                for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += aij * xv;
+                }
+            }
+        }
+    });
+    let mut yw = Mat::zeros(n, d_wide);
+    let tiled = cse::util::timer::bench(reps, || na.spmm_into(&xw, &mut yw));
+    assert_eq!(yw.data, yw_ref.data, "tiled kernel must match the scalar reference bitwise");
+    let flops_wide = (2 * nnz * d_wide) as f64;
+    let spmm_tiled_gflops = flops_wide / tiled.mean_secs / 1e9;
+    let tiled_speedup_d128 = reference_wide.mean_secs / tiled.mean_secs;
+    println!(
+        "\ncolumn-tiled SpMM @ d={d_wide}: {:.1}ms ({spmm_tiled_gflops:.2} GFLOP/s), \
+         scalar reference {:.1}ms -> {tiled_speedup_d128:.2}x (want >= 1.3x)",
+        tiled.mean_secs * 1e3,
+        reference_wide.mean_secs * 1e3
+    );
+
+    // Fused-step accounting: wrap the operator and count which entry
+    // point the three-term recurrence drives. Every interior step must
+    // arrive through the fused axpby entry — one output pass, where the
+    // pre-rework loop took three (SpMM + scale + subtract sweeps).
+    struct CountingOp<'a> {
+        inner: &'a Csr,
+        fused: AtomicUsize,
+        plain: AtomicUsize,
+    }
+    impl Operator for CountingOp<'_> {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+            self.plain.fetch_add(1, Ordering::Relaxed);
+            self.inner.apply_into(x, y, exec);
+        }
+        fn apply_into_ws(
+            &self,
+            x: &Mat,
+            y: &mut Mat,
+            exec: &ExecPolicy,
+            ws: &mut cse::par::Workspace,
+        ) {
+            self.plain.fetch_add(1, Ordering::Relaxed);
+            self.inner.apply_into_ws(x, y, exec, ws);
+        }
+        fn apply_axpby_into_ws(
+            &self,
+            x: &Mat,
+            alpha: f64,
+            beta: f64,
+            z: &Mat,
+            y: &mut Mat,
+            exec: &ExecPolicy,
+            ws: &mut cse::par::Workspace,
+        ) {
+            self.fused.fetch_add(1, Ordering::Relaxed);
+            self.inner.apply_axpby_into_ws(x, alpha, beta, z, y, exec, ws);
+        }
+        fn nnz(&self) -> usize {
+            Csr::nnz(self.inner)
+        }
+    }
+    let counting =
+        CountingOp { inner: &na, fused: AtomicUsize::new(0), plain: AtomicUsize::new(0) };
+    let series = legendre::step_coeffs(20, 0.8);
+    let mut mv = 0usize;
+    let q0 = Mat::randn(&mut rng, n, 8);
+    std::hint::black_box(cse::embed::fastembed::apply_series(
+        &counting,
+        &series,
+        &q0,
+        &mut mv,
+        &ExecPolicy::serial(),
+    ));
+    let fused_calls = counting.fused.load(Ordering::Relaxed);
+    let plain_calls = counting.plain.load(Ordering::Relaxed);
+    assert_eq!(
+        fused_calls,
+        series.coeffs.len() - 2,
+        "every interior recurrence step must take the fused entry"
+    );
+    assert_eq!(plain_calls, 1, "only the q1 = S q0 bootstrap may use the plain entry");
+    let fused_step_passes = 1usize;
+    println!(
+        "fused recurrence: {fused_calls} interior steps fused, {plain_calls} plain bootstrap \
+         -> {fused_step_passes} output pass/step (was 3)"
+    );
+
     // Region-dispatch overhead: persistent pool vs scoped-spawn baseline
     // on 32-task micro-regions (the pool must win — that is the tentpole).
     println!("\n{:<12} {:>14} {:>14} {:>9}", "dispatch", "pool µs/reg", "scoped µs/reg", "speedup");
@@ -1017,6 +1147,10 @@ fn kernels() {
         ),
         ("spmm_reference_secs", Json::Num(reference.mean_secs)),
         ("serial_ratio_vs_reference", Json::Num(serial_ratio)),
+        ("spmm_tiled_gflops", Json::Num(spmm_tiled_gflops)),
+        ("spmm_reference_d128_secs", Json::Num(reference_wide.mean_secs)),
+        ("tiled_speedup_vs_reference_d128", Json::Num(tiled_speedup_d128)),
+        ("fused_step_passes", Json::Num(fused_step_passes as f64)),
         ("results", Json::Arr(json_rows)),
         ("dispatch", Json::Arr(dispatch_json)),
         ("recursion_allocs", Json::Arr(alloc_json)),
@@ -1041,8 +1175,9 @@ fn kernels() {
         (
             "note",
             Json::Str(
-                "appended per `cargo bench -- kernels` run; keep spmm_gflops, dispatch \
-                 pool-vs-scoped, and warm-workspace allocs (= 0) monotone across perf PRs"
+                "appended per `cargo bench -- kernels` run; keep spmm_gflops, \
+                 spmm_tiled_gflops, dispatch pool-vs-scoped, and warm-workspace allocs \
+                 (= 0) monotone across perf PRs; fused_step_passes must stay 1"
                     .to_string(),
             ),
         ),

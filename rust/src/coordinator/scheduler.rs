@@ -6,7 +6,9 @@
 //! column subset of Ω, and column chains never interact, so the
 //! reassembled embedding is bit-identical to the unsharded driver
 //! (property-tested below). Shard width also bounds worker memory:
-//! 3 ping-pong blocks of n × shard_width doubles.
+//! 4 blocks (result + 3 ping-pong) of n × shard_width doubles — which is
+//! why `shard_width == 0` derives the width from n, d and a fixed cache
+//! budget via [`par::adaptive_shard_width`] instead of a one-size knob.
 //!
 //! Two parallelism axes compose here: `workers` shard-level threads (this
 //! pool) × `job.params.exec.threads` row-parallel threads inside each
@@ -34,7 +36,7 @@ use crate::embed::op::{Operator, ScaledOp};
 use crate::embed::Params;
 use crate::funcs::SpectralFn;
 use crate::linalg::Mat;
-use crate::par::{ExecPolicy, Workspace};
+use crate::par::{self, ExecPolicy, Workspace};
 use crate::poly::cascade::CascadePlan;
 use crate::util::rng::Rng;
 
@@ -43,7 +45,10 @@ use crate::util::rng::Rng;
 pub struct EmbedJob {
     pub params: Params,
     pub f: SpectralFn,
-    /// Column-shard width (starting vectors per work item).
+    /// Column-shard width (starting vectors per work item); `0` picks an
+    /// adaptive width from n, d and a cache budget
+    /// ([`par::adaptive_shard_width`]). Purely a scheduling knob — any
+    /// width yields bit-identical embeddings.
     pub shard_width: usize,
     pub seed: u64,
     /// Let the coordinator pick the kernel thread count from the core
@@ -56,7 +61,7 @@ pub struct EmbedJob {
 
 impl EmbedJob {
     pub fn new(params: Params, f: SpectralFn, seed: u64) -> Self {
-        EmbedJob { params, f, shard_width: 8, seed, auto_threads: false }
+        EmbedJob { params, f, shard_width: 0, seed, auto_threads: false }
     }
 }
 
@@ -139,9 +144,15 @@ impl Coordinator {
         // through; `workers == 0` auto-composes the worker count, and
         // `job.auto_threads` opts the kernel thread count into the same
         // core-budget split (`workers × threads ≤ cores`).
-        let width = job.shard_width.clamp(1, d);
-        let nshards = d.div_ceil(width);
         let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        let width = if job.shard_width == 0 {
+            let workers_hint = if self.workers == 0 { cores } else { self.workers };
+            par::adaptive_shard_width(n, d, workers_hint)
+        } else {
+            job.shard_width
+        }
+        .clamp(1, d);
+        let nshards = d.div_ceil(width);
         let (workers, auto_t) = if self.workers == 0 {
             auto_split(cores, nshards)
         } else {
@@ -397,6 +408,22 @@ mod tests {
         let serial = Coordinator::auto().run(&na, &job(12, 16, 2, 4));
         assert_eq!(serial.threads, 1, "explicit serial kernels must not be overridden");
         assert_eq!(manual.e.data, serial.e.data);
+    }
+
+    #[test]
+    fn adaptive_width_matches_explicit_bitexact() {
+        let mut rng = Rng::new(217);
+        let g = gen::erdos_renyi(&mut rng, 70, 210);
+        let na = graph::normalized_adjacency(&g.adj);
+        let explicit = Coordinator::new(2).run(&na, &job(16, 16, 2, 4));
+        let adaptive = Coordinator::new(2).run(&na, &job(16, 16, 2, 0));
+        assert_eq!(
+            explicit.e.data, adaptive.e.data,
+            "adaptive width must not change bits"
+        );
+        // n=70, d=16, 2 workers: the fair split (16/2 = 8, already a
+        // lane multiple) binds → 2 shards of width 8.
+        assert_eq!(adaptive.shards, 2);
     }
 
     #[test]

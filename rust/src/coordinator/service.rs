@@ -2,9 +2,9 @@
 //!
 //! The embedding exists to answer ℓ₂-derived similarity queries (§1);
 //! this is the serving half of the system: normalized-correlation and
-//! top-k neighbour queries over the rows of Ẽ, batched behind a bounded
-//! queue and executed by a worker pool. Row norms are precomputed once,
-//! so a pairwise query is O(d) and an exact top-k scan O(n·d).
+//! top-k neighbour queries over the rows of Ẽ, batched across the
+//! persistent `par` pool ([`QueryBatch`]). Row norms are precomputed
+//! once, so a pairwise query is O(d) and an exact top-k scan O(n·d).
 //!
 //! Top-k can optionally be routed through an [`AnnIndex`]
 //! (`crate::index`): sublinear candidate generation + exact re-ranking,
@@ -16,9 +16,9 @@
 use std::sync::Arc;
 
 use super::metrics::Metrics;
-use super::queue::BoundedQueue;
 use crate::index::{rerank_top_k, AnnIndex};
 use crate::linalg::Mat;
+use crate::par::{self, ExecPolicy};
 
 /// A single query.
 #[derive(Clone, Debug)]
@@ -153,10 +153,6 @@ pub struct ServingSample {
     /// histogram's log-bucket grid, not derived from the mean.
     pub p50_us: f64,
     pub p99_us: f64,
-    /// Mean per-query latency of the serial pass (µs). Kept alongside
-    /// the percentiles for one release so trajectory plots of the old
-    /// mean-based reports stay comparable.
-    pub mean_us: f64,
     /// Mean candidate rows scored per top-k query (metrics delta across
     /// both passes; NaN-free — 0 when the workload had no top-k queries).
     pub mean_candidates: f64,
@@ -165,9 +161,9 @@ pub struct ServingSample {
 /// Measure `queries` over `service`: a serial pass for latency
 /// percentiles + serial QPS, then a batched pass for pool QPS.
 ///
-/// Latency p50/p99 (and the legacy mean) are taken from the delta of
-/// [`Metrics::query_hist`] across the serial pass, so a service reused
-/// for several measured workloads still reports per-window percentiles.
+/// Latency p50/p99 are taken from the delta of [`Metrics::query_hist`]
+/// across the serial pass, so a service reused for several measured
+/// workloads still reports per-window percentiles.
 pub fn measure_serving(
     service: &SimilarityService,
     queries: &[Query],
@@ -193,41 +189,31 @@ pub fn measure_serving(
         qps_batch,
         p50_us: serial.percentile(50.0) as f64 / 1e3,
         p99_us: serial.percentile(99.0) as f64 / 1e3,
-        mean_us: serial.mean() / 1e3,
         mean_candidates,
     }
 }
 
-/// A batch executor: pushes queries through a bounded queue to a worker
-/// pool, preserving input order in the answer vector.
+/// A batch executor: fans queries out over the persistent `par` pool
+/// (no per-batch thread spawns, no queue hand-off), preserving input
+/// order in the answer vector. Sharing the pool with the kernels means
+/// serving bursts and embedding jobs stop competing for oversubscribed
+/// cores — the pool's one-wake-per-region scheduling arbitrates.
 pub struct QueryBatch;
 
 impl QueryBatch {
-    /// Execute `queries` with `workers` threads over `service`.
+    /// Execute `queries` with `workers` pool threads over `service`.
+    /// Answers land in input order; oversplitting gives dynamic load
+    /// balance when query costs are skewed (top-k vs pairwise).
     pub fn run(service: &SimilarityService, queries: &[Query], workers: usize) -> Vec<Answer> {
-        let workers = workers.max(1);
-        let queue: BoundedQueue<(usize, Query)> = BoundedQueue::new(4 * workers);
-        let slots: Vec<std::sync::Mutex<Option<Answer>>> =
-            queries.iter().map(|_| std::sync::Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let queue = &queue;
-                let slots = &slots;
-                scope.spawn(move || {
-                    while let Some((idx, q)) = queue.pop() {
-                        *slots[idx].lock().unwrap() = Some(service.answer(&q));
-                    }
-                });
+        let exec = ExecPolicy::with_threads(workers.max(1));
+        let ranges = par::even_ranges(queries.len(), exec.chunks(queries.len()));
+        let mut answers: Vec<Option<Answer>> = queries.iter().map(|_| None).collect();
+        exec.for_chunks(&ranges, &mut answers, 1, |_, r, out| {
+            for (slot, qi) in out.iter_mut().zip(r) {
+                *slot = Some(service.answer(&queries[qi]));
             }
-            for (idx, q) in queries.iter().enumerate() {
-                queue.push((idx, q.clone())).ok();
-            }
-            queue.close();
         });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("missing answer"))
-            .collect()
+        answers.into_iter().map(|a| a.expect("missing answer")).collect()
     }
 }
 
@@ -354,11 +340,9 @@ mod tests {
         assert_eq!(s.metrics.snapshot().topk_queries, 40);
         assert!((sample.mean_candidates - 29.0).abs() < 1e-12);
         assert!(sample.qps_serial > 0.0 && sample.qps_batch > 0.0);
-        // Histogram-backed percentiles: ordered, positive, and the
-        // legacy mean rides along for one release.
+        // Histogram-backed percentiles: ordered and positive.
         assert!(sample.p50_us <= sample.p99_us);
         assert!(sample.p99_us > 0.0);
-        assert!(sample.mean_us > 0.0);
     }
 
     #[test]

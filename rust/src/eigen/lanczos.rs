@@ -58,30 +58,36 @@ pub fn lanczos(
 
     // Persistent iteration buffers: the only per-iteration allocation
     // left is the basis vector itself (which must be retained anyway).
+    // `x_prev` keeps the previous Lanczos vector so the beta-recurrence
+    // term folds into the operator application as one fused pass.
     let mut ws = Workspace::new();
     let mut x_buf = Mat::zeros(n, 1);
+    let mut x_prev = Mat::zeros(n, 1);
     let mut y_buf = Mat::zeros(n, 1);
     let mut w = vec![0.0; n];
     let mut dots = vec![0.0; m];
 
     for j in 0..m {
-        // w = S v_j
+        // w = S v_j − beta_{j−1} v_{j−1}, fused into one output pass.
+        // (After a restart beta_{j−1} is exactly 0.0, so the fused call
+        // degenerates to the plain product and never reads x_prev.)
+        std::mem::swap(&mut x_buf, &mut x_prev);
         x_buf.data.copy_from_slice(&v);
-        op.apply_into_ws(&x_buf, &mut y_buf, exec, &mut ws);
+        if j > 0 {
+            op.apply_axpby_into_ws(&x_buf, 1.0, -beta[j - 1], &x_prev, &mut y_buf, exec, &mut ws);
+        } else {
+            op.apply_into_ws(&x_buf, &mut y_buf, exec, &mut ws);
+        }
         matvecs += 1;
         w.copy_from_slice(&y_buf.data);
-        // alpha_j = v_j . w
+        // alpha_j = v_j . w (the beta term already subtracted above is
+        // orthogonal to v_j to machine precision, so the Rayleigh
+        // quotient is unchanged up to roundoff).
         let a: f64 = v.iter().zip(&w).map(|(a, b)| a * b).sum();
         alpha.push(a);
-        // w -= alpha_j v_j + beta_{j-1} v_{j-1}
+        // w -= alpha_j v_j
         for (wi, vi) in w.iter_mut().zip(&v) {
             *wi -= a * vi;
-        }
-        if j > 0 {
-            let b = beta[j - 1];
-            for (wi, vi) in w.iter_mut().zip(&basis[j - 1]) {
-                *wi -= b * vi;
-            }
         }
         basis.push(v.clone());
         // Full reorthogonalization (twice) against all previous vectors.

@@ -177,8 +177,11 @@ pub fn apply_series(
 /// returned block back (`ws.give_mat`) when it stops being needed to
 /// keep the cycle closed. `matvecs` counts *column* matvecs (one block
 /// application of width w adds w), matching the paper's L·d accounting.
-/// Block products run on `exec`'s persistent pool; the
-/// axpy/recombination steps are memory-bound and stay serial.
+/// Each recurrence step is one **fused** pass
+/// (`q_new = c1·S·q_prev − c2·q_prev2` via [`Operator::apply_axpby_into_ws`])
+/// on `exec`'s persistent pool, so the scale-and-subtract recombination
+/// no longer re-reads the output block; only the coefficient axpy into
+/// the accumulator remains a separate (serial, memory-bound) sweep.
 pub fn apply_series_ws(
     op: &(impl Operator + ?Sized),
     series: &Series,
@@ -206,17 +209,11 @@ pub fn apply_series_ws(
     let mut q_new = ws.take_mat(q0.rows, q0.cols);
     for r in 2..a.len() {
         let (c1, c2) = series.recursion_scalars(r);
-        // q_new = c1 * S q_prev − c2 * q_prev2
-        op.apply_into_ws(&q_prev, &mut q_new, exec, ws);
+        // q_new = c1 * S q_prev − c2 * q_prev2, in one fused output pass.
+        // (`alpha·t + (−c2)·z` is the same IEEE expression as
+        // `c1·t − c2·z`, so fusing does not move any bits.)
+        op.apply_axpby_into_ws(&q_prev, c1, -c2, &q_prev2, &mut q_new, exec, ws);
         *matvecs += q0.cols;
-        for ((qn, qp2), _) in q_new
-            .data
-            .iter_mut()
-            .zip(q_prev2.data.iter())
-            .zip(std::iter::repeat(()))
-        {
-            *qn = c1 * *qn - c2 * *qp2;
-        }
         e.axpy(a[r], &q_new);
         // Rotate buffers: prev2 <- prev <- new (reuse prev2's storage).
         std::mem::swap(&mut q_prev2, &mut q_prev);

@@ -34,6 +34,41 @@ pub trait Operator {
         self.apply_into(x, y, exec);
     }
 
+    /// Fused affine application `y ← alpha·(S x) + beta·z`, in as few
+    /// output passes as the implementation allows. `z` must have `y`'s
+    /// shape (and not alias it); it is only read when `beta != 0`.
+    ///
+    /// The contract pins the write-back expression so fused and fallback
+    /// paths agree bitwise: every output element is
+    /// `alpha·(S x)[i] + beta·z[i]`, with the `beta` term skipped when
+    /// `beta == 0` and the `alpha` scale skipped when additionally
+    /// `alpha == 1`. Like the plain applies, the result must be
+    /// bitwise-independent of `exec.threads`. The default falls back to
+    /// [`Self::apply_into_ws`] plus one elementwise pass; CSR fuses the
+    /// write-back into the SpMM kernel so each recurrence iteration
+    /// touches the output exactly once.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
+        self.apply_into_ws(x, y, exec, ws);
+        if beta != 0.0 {
+            for (yv, zv) in y.data.iter_mut().zip(&z.data) {
+                *yv = alpha * *yv + beta * zv;
+            }
+        } else if alpha != 1.0 {
+            y.scale(alpha);
+        }
+    }
+
     /// Convenience allocating form.
     fn apply(&self, x: &Mat, exec: &ExecPolicy) -> Mat {
         let mut y = Mat::zeros(self.dim(), x.cols);
@@ -60,6 +95,19 @@ impl Operator for Csr {
         self.spmm_into_ws(x, y, exec, ws);
     }
 
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        self.spmm_axpby_into_ws(x, alpha, beta, z, y, exec, ws);
+    }
+
     fn nnz(&self) -> usize {
         Csr::nnz(self)
     }
@@ -70,18 +118,21 @@ impl Operator for Csr {
 /// so results are bitwise-identical at any thread count.
 pub struct DenseOp(pub Mat);
 
-impl Operator for DenseOp {
-    fn dim(&self) -> usize {
-        assert_eq!(self.0.rows, self.0.cols);
-        self.0.rows
-    }
-
-    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
-        let mut ws = Workspace::new();
-        self.apply_into_ws(x, y, exec, &mut ws);
-    }
-
-    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+impl DenseOp {
+    /// Row-chunked dense product with the fused write-back: accumulate a
+    /// row of `S·x` in place, then rewrite it as `alpha·row + beta·z_row`
+    /// while it is still cache-hot — the same float expression as the
+    /// trait's fallback and the CSR kernel, so all paths match bitwise.
+    fn axpby_chunks(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: Option<&Mat>,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
         assert_eq!(x.rows, self.0.cols, "dense apply shape mismatch");
         assert_eq!((y.rows, y.cols), (self.0.rows, x.cols));
         let d = x.cols;
@@ -101,9 +152,49 @@ impl Operator for DenseOp {
                         *o += aik * b;
                     }
                 }
+                if beta != 0.0 {
+                    let zrow = z.expect("beta != 0 requires z").row(i);
+                    for (o, &zv) in orow.iter_mut().zip(zrow) {
+                        *o = alpha * *o + beta * zv;
+                    }
+                } else if alpha != 1.0 {
+                    for o in orow.iter_mut() {
+                        *o = alpha * *o;
+                    }
+                }
             }
         });
         ws.ranges = ranges;
+    }
+}
+
+impl Operator for DenseOp {
+    fn dim(&self) -> usize {
+        assert_eq!(self.0.rows, self.0.cols);
+        self.0.rows
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        let mut ws = Workspace::new();
+        self.apply_into_ws(x, y, exec, &mut ws);
+    }
+
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.axpby_chunks(x, 1.0, 0.0, None, y, exec, ws);
+    }
+
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
+        self.axpby_chunks(x, alpha, beta, Some(z), y, exec, ws);
     }
 
     fn nnz(&self) -> usize {
@@ -131,22 +222,45 @@ impl<O: Operator + ?Sized> Operator for ScaledOp<'_, O> {
     }
 
     fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
-        self.inner.apply_into(x, y, exec);
-        if self.alpha != 1.0 {
-            y.scale(self.alpha);
-        }
-        if self.beta != 0.0 {
-            y.axpy(self.beta, x);
-        }
+        let mut ws = Workspace::new();
+        self.apply_into_ws(x, y, exec, &mut ws);
     }
 
     fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
-        self.inner.apply_into_ws(x, y, exec, ws);
-        if self.alpha != 1.0 {
-            y.scale(self.alpha);
-        }
-        if self.beta != 0.0 {
-            y.axpy(self.beta, x);
+        // `(a·S + b·I)x` is exactly the fused form with z = x, so the
+        // whole affine rescale is one pass over the output instead of an
+        // apply plus separate scale and axpy sweeps.
+        self.inner.apply_axpby_into_ws(x, self.alpha, self.beta, x, y, exec, ws);
+    }
+
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        if self.beta == 0.0 {
+            // alpha·(a·(S x)) + beta·z = (alpha·a)·(S x) + beta·z: fold
+            // the scalars and keep the single fused pass. This is the hot
+            // case — §3.4 rescaling wraps operators as `a·S + 0·I`, so
+            // the whole recurrence iteration stays one output pass.
+            self.inner.apply_axpby_into_ws(x, alpha * self.alpha, beta, z, y, exec, ws);
+        } else {
+            // General affine-inside-affine (3 distinct terms): compute
+            // S'x fused, then one elementwise pass for the outer axpby.
+            assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
+            self.inner.apply_axpby_into_ws(x, self.alpha, self.beta, x, y, exec, ws);
+            if beta != 0.0 {
+                for (yv, zv) in y.data.iter_mut().zip(&z.data) {
+                    *yv = alpha * *yv + beta * zv;
+                }
+            } else if alpha != 1.0 {
+                y.scale(alpha);
+            }
         }
     }
 
@@ -227,6 +341,75 @@ mod tests {
         let y = s.apply(&x, &ExecPolicy::serial());
         for i in 0..5 {
             assert!((y[(i, i)] - 1.5).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn fused_axpby_agrees_across_operators_and_threads() {
+        forall(
+            124,
+            10,
+            |r| {
+                let n = 8 + r.below(40);
+                (
+                    random_sym_csr(r, n),
+                    Mat::randn(r, n, 5),
+                    Mat::randn(r, n, 5),
+                    r.uniform(-2.0, 2.0),
+                    r.uniform(-2.0, 2.0),
+                )
+            },
+            |(a, x, z, alpha, beta)| {
+                let serial = ExecPolicy::serial();
+                let mut ws = Workspace::new();
+                // Reference: the trait's pinned write-back expression over
+                // a plain apply.
+                let mut want = Operator::apply(a, x, &serial);
+                for (yv, zv) in want.data.iter_mut().zip(&z.data) {
+                    *yv = alpha * *yv + beta * zv;
+                }
+                let mut got = Mat::zeros(a.rows, x.cols);
+                a.apply_axpby_into_ws(x, *alpha, *beta, z, &mut got, &serial, &mut ws);
+                check(got.data == want.data, "csr fused != fallback expression")?;
+                let dense = DenseOp(a.to_dense());
+                let mut dgot = Mat::zeros(a.rows, x.cols);
+                dense.apply_axpby_into_ws(x, *alpha, *beta, z, &mut dgot, &serial, &mut ws);
+                all_close(&dgot.data, &want.data, 1e-12)?;
+                for threads in [2usize, 4] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    let mut yt = Mat::zeros(a.rows, x.cols);
+                    a.apply_axpby_into_ws(x, *alpha, *beta, z, &mut yt, &exec, &mut ws);
+                    check(yt.data == got.data, format!("csr fused differs at {threads} threads"))?;
+                    let mut dt = Mat::zeros(a.rows, x.cols);
+                    dense.apply_axpby_into_ws(x, *alpha, *beta, z, &mut dt, &exec, &mut ws);
+                    let dmsg = format!("dense fused differs at {threads} threads");
+                    check(dt.data == dgot.data, dmsg)?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scaled_op_fused_general_case_matches_composition() {
+        let mut rng = Rng::new(125);
+        let a = random_sym_csr(&mut rng, 20);
+        let x = Mat::randn(&mut rng, 20, 4);
+        let z = Mat::randn(&mut rng, 20, 4);
+        let exec = ExecPolicy::serial();
+        let mut ws = Workspace::new();
+        for (sa, sb, alpha, beta) in
+            [(0.7, -0.3, 1.5, -0.25), (0.7, -0.3, 1.5, 0.0), (0.9, 0.0, 2.0, -1.0)]
+        {
+            let s = ScaledOp::new(&a, sa, sb);
+            let mut got = Mat::zeros(20, 4);
+            s.apply_axpby_into_ws(&x, alpha, beta, &z, &mut got, &exec, &mut ws);
+            let mut want = s.apply(&x, &exec);
+            for (yv, zv) in want.data.iter_mut().zip(&z.data) {
+                *yv = alpha * *yv + beta * zv;
+            }
+            all_close(&got.data, &want.data, 1e-12)
+                .unwrap_or_else(|e| panic!("scaled fused ({sa},{sb},{alpha},{beta}): {e:?}"));
         }
     }
 

@@ -239,7 +239,11 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
                 default: Some("0"),
             },
             THREADS_OPT,
-            Opt { name: "shard", help: "columns per shard", default: Some("8") },
+            Opt {
+                name: "shard",
+                help: "columns per shard (0 = adaptive from n, d and cache budget)",
+                default: Some("0"),
+            },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
         opts.extend_from_slice(OBS_OPTS);
@@ -255,7 +259,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     params.exec = exec;
     let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
-    job.shard_width = a.usize("shard", 8)?;
+    job.shard_width = a.usize("shard", 0)?;
     job.auto_threads = auto_threads;
     let coord = Coordinator::new(workers);
     let t = Timer::start();

@@ -354,10 +354,68 @@ pub fn fixed_chunks(items: usize, per_chunk: usize) -> usize {
     items.div_ceil(per_chunk.max(1)).max(1)
 }
 
+/// Adaptive column-shard width for `n × d` embedding jobs: the widest
+/// shard such that one worker's ping-pong state (four `n × width` f64
+/// blocks: result + three recurrence buffers) fits a fixed memory
+/// budget, capped by a fair `d / workers` split so every worker gets
+/// work, and rounded down to a multiple of the kernels' widest lane (8)
+/// when there is room. Deterministic in its inputs — shard *boundaries*
+/// never affect bits (each shard's columns are computed by an
+/// independent serial-order recurrence), only scheduling.
+pub fn adaptive_shard_width(n: usize, d: usize, workers: usize) -> usize {
+    const SHARD_MEM_BUDGET: usize = 64 << 20;
+    let d = d.max(1);
+    // 4 blocks × 8 bytes per row, per shard column.
+    let per_col = 32 * n.max(1);
+    let cache_cap = (SHARD_MEM_BUDGET / per_col).max(1);
+    let fair = d.div_ceil(workers.max(1));
+    let w = cache_cap.min(fair).min(d).max(1);
+    if w >= 8 {
+        w - w % 8
+    } else {
+        w
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn adaptive_shard_width_pins_representative_shapes() {
+        // (n, d, workers) -> width. Hand-checked against the 64 MiB
+        // budget (four n×w f64 blocks), the fair d/workers split, and
+        // the round-to-lane-of-8 rule.
+        for (n, d, workers, want) in [
+            (100_000, 128, 4, 16), // cache cap 20 binds, rounded to lane
+            (1_000_000, 64, 8, 2), // huge n: memory budget binds hard
+            (10_000, 64, 4, 16),   // fair split binds, already a lane multiple
+            (20_000, 64, 2, 32),   // few workers: wide shards are fine
+            (100_000, 6, 16, 1),   // more workers than columns
+            (50, 16, 2, 8),        // tiny n: fair split, lane width
+            (0, 0, 0, 1),          // degenerate inputs clamp to 1
+        ] {
+            assert_eq!(
+                adaptive_shard_width(n, d, workers),
+                want,
+                "adaptive_shard_width({n}, {d}, {workers})"
+            );
+        }
+        // Invariants: width is in [1, max(d,1)] and the four ping-pong
+        // blocks stay inside the budget.
+        for n in [1usize, 1000, 250_000, 4_000_000] {
+            for d in [1usize, 7, 64, 512] {
+                for workers in [1usize, 3, 8, 64] {
+                    let w = adaptive_shard_width(n, d, workers);
+                    assert!(w >= 1 && w <= d.max(1));
+                    // Width 1 is the can't-shrink-further floor; above
+                    // it the blocks must fit the budget.
+                    assert!(w == 1 || 32 * n.max(1) * w <= 64 << 20, "budget: n={n} d={d} w={w}");
+                }
+            }
+        }
+    }
 
     #[test]
     fn even_ranges_cover_and_balance() {

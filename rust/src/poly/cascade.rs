@@ -26,9 +26,27 @@ pub struct CascadePlan {
 }
 
 impl CascadePlan {
+    /// Output-array passes per recurrence iteration with the fused
+    /// `y = c1·(S·x) − c2·z` kernel ([`Operator::apply_axpby_into_ws`]):
+    /// the SpMM, the scale and the subtract land in one sweep.
+    ///
+    /// [`Operator::apply_axpby_into_ws`]: crate::embed::op::Operator::apply_axpby_into_ws
+    pub const FUSED_STEP_PASSES: usize = 1;
+    /// Passes the pre-fusion kernel needed per recurrence iteration
+    /// (SpMM write, c1-scale read/write, c2-subtract read/write).
+    pub const UNFUSED_STEP_PASSES: usize = 3;
+
     /// Total matrix-vector products per starting vector (= b * stage order).
     pub fn total_matvecs(&self) -> usize {
         self.b * self.stage.order()
+    }
+
+    /// Fused recurrence steps per cascade stage: every term past the
+    /// linear one (orders 2..=L) is produced by one fused
+    /// scale-and-subtract pass instead of [`Self::UNFUSED_STEP_PASSES`]
+    /// separate sweeps.
+    pub fn fused_steps_per_stage(&self) -> usize {
+        self.stage.order().saturating_sub(1)
     }
 
     /// Effective end-to-end function value: (g̃(x))^b.
@@ -87,6 +105,16 @@ mod tests {
         assert_eq!(p.total_matvecs(), 120);
         let p1 = plan(&f, 120, 1, Basis::Legendre);
         assert_eq!(p1.stage.order(), 120);
+    }
+
+    #[test]
+    fn fused_step_accounting() {
+        let p = plan(&SpectralFn::Step { c: 0.5 }, 40, 2, Basis::Legendre);
+        // Stage order 20 → 19 recurrence steps (orders 2..=20), each one
+        // fused output pass instead of three.
+        assert_eq!(p.fused_steps_per_stage(), 19);
+        assert!(CascadePlan::FUSED_STEP_PASSES < CascadePlan::UNFUSED_STEP_PASSES);
+        assert_eq!(CascadePlan::FUSED_STEP_PASSES, 1);
     }
 
     #[test]

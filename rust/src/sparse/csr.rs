@@ -8,8 +8,31 @@
 //! (`spmm`, `matvec`, `transpose`, …) are serial wrappers, and
 //! `spmm_into_ws` is the allocation-free form iteration loops should
 //! prefer (partition scratch lives in a [`Workspace`]).
+//!
+//! ## Kernel shape (bandwidth-oriented)
+//!
+//! The multi-RHS product is column-tiled: the d right-hand-side columns
+//! are processed in register-blocked lanes of width 8, then 4, then a
+//! scalar remainder, so each nonzero's `(u32 index, f64 value)` load is
+//! amortized across the whole lane and the lane accumulator lives in
+//! registers for all of a row's nonzeros (the output row is written
+//! exactly once per lane). Row blocks are additionally bounded by a
+//! nonzero budget so the CSR segment a lane sweep re-reads stays
+//! cache-resident. `spmm_axpby_into_ws` fuses the three-term
+//! recurrence's scale-and-subtract (`y = alpha·(A·x) + beta·z`) into
+//! the same write-back, collapsing three output passes into one.
+//!
+//! Determinism: tiling splits *columns* and blocking splits *rows*;
+//! neither ever splits a row's nonzeros, so every output element is
+//! produced by the identical float-op sequence at any tile width, block
+//! boundary, or thread count.
 
 use std::ops::Range;
+
+/// Nonzero budget per row block in the tiled kernels: each block's CSR
+/// segment (12 bytes per nonzero) stays L2-resident while the column
+/// lanes sweep it repeatedly (~384 KiB of index+value traffic per sweep).
+const ROW_BLOCK_NNZ: usize = 32 * 1024;
 
 use super::coo::Coo;
 use crate::linalg::Mat;
@@ -176,20 +199,204 @@ impl Csr {
         ws.ranges = ranges;
     }
 
+    /// Fused SpMM-axpby: `y = alpha·(A·x) + beta·z` in a single pass over
+    /// the output (serial wrapper). `z` must have `y`'s shape; it is read
+    /// only when `beta != 0`. The write-back specializes `beta == 0`
+    /// (pure scaled product) and `alpha == 1 && beta == 0` (plain SpMM,
+    /// bitwise-identical to [`Self::spmm_into`]).
+    pub fn spmm_axpby_into(&self, x: &Mat, alpha: f64, beta: f64, z: &Mat, y: &mut Mat) {
+        let mut ws = Workspace::new();
+        self.spmm_axpby_into_ws(x, alpha, beta, z, y, &ExecPolicy::serial(), &mut ws);
+    }
+
+    /// [`Self::spmm_axpby_into`] with row-partitioned threading and
+    /// workspace-backed partition scratch — the recurrence hot path:
+    /// `apply_series_ws` calls this once per iteration instead of an
+    /// SpMM plus two more full passes for the scale and the subtraction.
+    /// Bitwise-identical at any thread count and any tile width.
+    pub fn spmm_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
+        let _span = crate::obs::span(&crate::obs::SPMM);
+        let d = x.cols;
+        if exec.is_serial() {
+            self.spmm_rows_fused(&x.data, d, 0..self.rows, &mut y.data, alpha, beta, &z.data);
+            return;
+        }
+        let mut ranges = std::mem::take(&mut ws.ranges);
+        par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
+        exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
+            let zc = &z.data[rows.start * d..rows.end * d];
+            self.spmm_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc);
+        });
+        ws.ranges = ranges;
+    }
+
+    /// Test-only entry: serial fused product with the lane width capped at
+    /// `max_tile` (1 = all-scalar, 4, 8 = production), for asserting that
+    /// the tile choice cannot change a single output bit.
+    #[doc(hidden)]
+    pub fn spmm_axpby_max_tile(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        max_tile: usize,
+    ) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols));
+        self.blocked_rows_fused(
+            &x.data,
+            x.cols,
+            0..self.rows,
+            &mut y.data,
+            alpha,
+            beta,
+            &z.data,
+            max_tile.max(1),
+        );
+    }
+
     /// The one SpMM kernel: output rows `rows` of `A·X` written into `y`
     /// (a slice holding exactly those rows), `x` row-major with width `d`.
     /// Both the full-matrix entry points and the parallel row chunks call
     /// this, so serial and threaded execution share every float op.
     fn spmm_rows(&self, x: &[f64], d: usize, rows: Range<usize>, y: &mut [f64]) {
-        y.fill(0.0);
+        self.spmm_rows_fused(x, d, rows, y, 1.0, 0.0, &[]);
+    }
+
+    /// Row-blocked, column-tiled fused kernel for output rows `rows`:
+    /// `y = alpha·(A·x) + beta·z`, with `y` (and `z` when `beta != 0`)
+    /// holding exactly those rows. Row blocks are bounded by
+    /// [`ROW_BLOCK_NNZ`] so the CSR segment the lanes re-sweep stays
+    /// cache-resident; block boundaries are cache blocking only and
+    /// cannot affect bits (no row's nonzeros are ever split).
+    fn spmm_rows_fused(
+        &self,
+        x: &[f64],
+        d: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        self.blocked_rows_fused(x, d, rows, y, alpha, beta, z, usize::MAX);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn blocked_rows_fused(
+        &self,
+        x: &[f64],
+        d: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+        max_tile: usize,
+    ) {
+        debug_assert!(beta == 0.0 || z.len() == y.len());
+        let mut start = rows.start;
+        while start < rows.end {
+            let budget = self.indptr[start] + ROW_BLOCK_NNZ;
+            let mut end = start + 1;
+            while end < rows.end && self.indptr[end + 1] <= budget {
+                end += 1;
+            }
+            let lo = (start - rows.start) * d;
+            let hi = (end - rows.start) * d;
+            let zb = if beta != 0.0 { &z[lo..hi] } else { &z[0..0] };
+            self.fused_block(x, d, start..end, &mut y[lo..hi], alpha, beta, zb, max_tile);
+            start = end;
+        }
+    }
+
+    /// Sweep one row block: column lanes of width 8, then 4, then scalar
+    /// remainder. `max_tile` caps the lane width (tests prove the cap is
+    /// bitwise-invisible; production passes `usize::MAX`).
+    #[allow(clippy::too_many_arguments)]
+    fn fused_block(
+        &self,
+        x: &[f64],
+        d: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+        max_tile: usize,
+    ) {
+        let mut c0 = 0;
+        while c0 + 8 <= d && max_tile >= 8 {
+            self.fused_lane::<8>(x, d, c0, rows.clone(), y, alpha, beta, z);
+            c0 += 8;
+        }
+        while c0 + 4 <= d && max_tile >= 4 {
+            self.fused_lane::<4>(x, d, c0, rows.clone(), y, alpha, beta, z);
+            c0 += 4;
+        }
+        while c0 < d {
+            self.fused_lane::<1>(x, d, c0, rows.clone(), y, alpha, beta, z);
+            c0 += 1;
+        }
+    }
+
+    /// One register-blocked lane: output columns `[c0, c0 + W)` of rows
+    /// `rows`. The accumulator array lives in registers across all of a
+    /// row's nonzeros, so each `(index, value)` pair is loaded once per
+    /// lane instead of once per column, and the output is written exactly
+    /// once. Per output element the float ops and their order are
+    /// identical for every lane width — the bitwise-determinism contract.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn fused_lane<const W: usize>(
+        &self,
+        x: &[f64],
+        d: usize,
+        c0: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
         for (local, i) in rows.enumerate() {
             let (idx, val) = self.row(i);
-            let yrow = &mut y[local * d..(local + 1) * d];
+            let mut acc = [0.0f64; W];
             for (&j, &aij) in idx.iter().zip(val) {
-                let xrow = &x[j as usize * d..(j as usize + 1) * d];
-                for (yv, xv) in yrow.iter_mut().zip(xrow) {
-                    *yv += aij * xv;
+                let base = j as usize * d + c0;
+                let xr: &[f64; W] = x[base..base + W].try_into().unwrap();
+                for c in 0..W {
+                    acc[c] += aij * xr[c];
                 }
+            }
+            let ybase = local * d + c0;
+            let out: &mut [f64; W] = (&mut y[ybase..ybase + W]).try_into().unwrap();
+            if beta != 0.0 {
+                let zr: &[f64; W] = z[ybase..ybase + W].try_into().unwrap();
+                for c in 0..W {
+                    out[c] = alpha * acc[c] + beta * zr[c];
+                }
+            } else if alpha != 1.0 {
+                for c in 0..W {
+                    out[c] = alpha * acc[c];
+                }
+            } else {
+                *out = acc;
             }
         }
     }
@@ -528,6 +735,119 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn spmm_axpby_matches_dense_oracle() {
+        forall(
+            41,
+            16,
+            |r| {
+                let rows = 2 + r.below(40);
+                let cols = 2 + r.below(40);
+                // d crossing the 8/4/1 lane boundaries, incl. misaligned.
+                let d = 1 + r.below(21);
+                // nnz ~ rows: plenty of empty rows in the scatter.
+                let coo = random_coo(r, rows, cols, rows);
+                (
+                    coo,
+                    Mat::randn(r, cols, d),
+                    Mat::randn(r, rows, d),
+                    r.uniform(-2.0, 2.0),
+                    r.uniform(-2.0, 2.0),
+                )
+            },
+            |(coo, x, z, alpha, beta)| {
+                let a = Csr::from_coo(coo);
+                let mut y = Mat::from_vec(a.rows, x.cols, vec![9.0; a.rows * x.cols]);
+                a.spmm_axpby_into(x, *alpha, *beta, z, &mut y);
+                let t = a.to_dense().matmul(x);
+                let want: Vec<f64> = t
+                    .data
+                    .iter()
+                    .zip(&z.data)
+                    .map(|(tv, zv)| alpha * tv + beta * zv)
+                    .collect();
+                all_close(&y.data, &want, 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn spmm_axpby_special_cases_match_plain_spmm_bitwise() {
+        let mut rng = Rng::new(42);
+        let coo = random_coo(&mut rng, 50, 50, 150);
+        let a = Csr::from_coo(&coo);
+        for d in [1usize, 3, 4, 8, 13, 16] {
+            let x = Mat::randn(&mut rng, 50, d);
+            let z = Mat::randn(&mut rng, 50, d);
+            let plain = a.spmm(&x);
+            // alpha = 1, beta = 0: exactly the plain product.
+            let mut y = Mat::zeros(50, d);
+            a.spmm_axpby_into(&x, 1.0, 0.0, &z, &mut y);
+            assert_eq!(y.data, plain.data, "identity case d={d}");
+            // beta = 0: pure scaled product, bitwise alpha·(A·x).
+            a.spmm_axpby_into(&x, -0.75, 0.0, &z, &mut y);
+            let want: Vec<f64> = plain.data.iter().map(|v| -0.75 * v).collect();
+            assert_eq!(y.data, want, "scaled case d={d}");
+            // beta = -c: y = c1·A·x − c·z, the recurrence's subtraction.
+            a.spmm_axpby_into(&x, 2.0, -0.5, &z, &mut y);
+            let want: Vec<f64> = plain
+                .data
+                .iter()
+                .zip(&z.data)
+                .map(|(t, zv)| 2.0 * t + (-0.5) * zv)
+                .collect();
+            assert_eq!(y.data, want, "fused case d={d}");
+        }
+    }
+
+    #[test]
+    fn tile_width_cap_cannot_change_bits() {
+        let mut rng = Rng::new(43);
+        let coo = random_coo(&mut rng, 70, 70, 280);
+        let a = Csr::from_coo(&coo);
+        for d in [1usize, 5, 8, 12, 13, 24] {
+            let x = Mat::randn(&mut rng, 70, d);
+            let z = Mat::randn(&mut rng, 70, d);
+            let mut want = Mat::zeros(70, d);
+            a.spmm_axpby_max_tile(&x, 1.3, -0.7, &z, &mut want, usize::MAX);
+            for cap in [1usize, 4, 8] {
+                let mut y = Mat::zeros(70, d);
+                a.spmm_axpby_max_tile(&x, 1.3, -0.7, &z, &mut y, cap);
+                assert_eq!(y.data, want.data, "tile cap {cap} at d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_handles_empty_rows_and_threads() {
+        // Deliberate empty rows: the fused result there must be exactly
+        // alpha·0 + beta·z, and bitwise equal across thread counts.
+        let mut rng = Rng::new(44);
+        let mut coo = Coo::new(40, 40);
+        for _ in 0..60 {
+            let i = rng.below(20) * 2; // even rows only: odd rows empty
+            coo.push(i, rng.below(40), rng.normal());
+        }
+        let a = Csr::from_coo(&coo);
+        let d = 13;
+        let x = Mat::randn(&mut rng, 40, d);
+        let z = Mat::randn(&mut rng, 40, d);
+        let mut want = Mat::zeros(40, d);
+        a.spmm_axpby_into(&x, 0.5, 2.0, &z, &mut want);
+        for i in (1..40).step_by(2) {
+            for c in 0..d {
+                assert_eq!(want[(i, c)], 0.5 * 0.0 + 2.0 * z[(i, c)], "empty row {i}");
+            }
+        }
+        let mut ws = Workspace::new();
+        for threads in [2usize, 4] {
+            let exec = ExecPolicy::with_threads(threads);
+            let mut y = Mat::from_vec(40, d, vec![5.0; 40 * d]);
+            a.spmm_axpby_into_ws(&x, 0.5, 2.0, &z, &mut y, &exec, &mut ws);
+            assert_eq!(y.data, want.data, "{threads} threads");
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Cross-layer determinism of the parallel execution layer
-//! (`cse::par`): every hot path it touches — SpMM, matvec, transpose,
-//! the FastEmbed recursion, the coordinator pipeline, the eigensolvers
+//! (`cse::par`): every hot path it touches — SpMM (including the
+//! column-tiled fused axpby kernel, at any tile width), matvec,
+//! transpose, the FastEmbed recursion, the coordinator pipeline, the
+//! eigensolvers
 //! (now including the parallel MGS / Lanczos reorthogonalization),
 //! SimHash builds and K-means (now including the parallel centroid
 //! update) — must produce results bitwise-identical to the serial path
@@ -52,6 +54,60 @@ fn spmm_and_matvec_bitwise_identical_across_threads() {
             let exec = ExecPolicy::with_threads(threads);
             assert_eq!(a.spmm_with(&x, &exec).data, want.data, "spmm @ {threads}");
             assert_eq!(a.matvec_with(&xv, &exec), want_v, "matvec @ {threads}");
+        }
+    }
+}
+
+/// The fused axpby kernel's determinism contract: bitwise-identical
+/// output at any thread count AND any tile width, and bitwise-identical
+/// to the unfused SpMM-then-elementwise expression it replaced.
+#[test]
+fn fused_axpby_bitwise_identical_across_threads_and_tile_widths() {
+    let mut rng = Rng::new(50);
+    for &d in &[1usize, 5, 8, 13, 24] {
+        let rows = 400 + rng.below(800);
+        let cols = 400 + rng.below(800);
+        let a = random_csr(&mut rng, rows, cols, rows * 5);
+        let x = Mat::randn(&mut rng, cols, d);
+        let z = Mat::randn(&mut rng, rows, d);
+        let (alpha, beta) = (1.75, -0.4);
+        // Unfused reference: plain SpMM then the pinned elementwise
+        // write-back expression.
+        let mut want = a.spmm(&x);
+        for (yv, zv) in want.data.iter_mut().zip(&z.data) {
+            *yv = alpha * *yv + beta * zv;
+        }
+        let mut ws = Workspace::new();
+        for threads in THREADS {
+            let exec = ExecPolicy::with_threads(threads);
+            let mut y = Mat::zeros(rows, d);
+            a.spmm_axpby_into_ws(&x, alpha, beta, &z, &mut y, &exec, &mut ws);
+            assert_eq!(y.data, want.data, "fused axpby d={d} @ {threads} threads");
+        }
+        // Tile-width invariance: capping the kernel at narrower lanes
+        // (scalar-only, width-4, width-8) must not move a single bit.
+        for max_tile in [1usize, 4, 8] {
+            let mut y = Mat::zeros(rows, d);
+            a.spmm_axpby_max_tile(&x, alpha, beta, &z, &mut y, max_tile);
+            assert_eq!(y.data, want.data, "fused axpby d={d} max_tile={max_tile}");
+        }
+    }
+}
+
+/// Full pipeline bits must survive the tile-width cap too: an embedding
+/// computed with the kernel forced scalar equals the lane-8 default.
+#[test]
+fn spmm_tile_width_invariant_under_plain_product() {
+    let mut rng = Rng::new(51);
+    let a = random_csr(&mut rng, 1200, 1200, 7200);
+    for &d in &[3usize, 8, 17, 32] {
+        let x = Mat::randn(&mut rng, 1200, d);
+        let want = a.spmm(&x);
+        let z = Mat::zeros(1200, d);
+        for max_tile in [1usize, 4, 8] {
+            let mut y = Mat::zeros(1200, d);
+            a.spmm_axpby_max_tile(&x, 1.0, 0.0, &z, &mut y, max_tile);
+            assert_eq!(y.data, want.data, "plain spmm d={d} max_tile={max_tile}");
         }
     }
 }
