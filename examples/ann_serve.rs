@@ -34,7 +34,7 @@ fn main() {
         1,
     );
     let t = Timer::start();
-    let res = Coordinator::new(workers).run(&na, &job);
+    let res = Coordinator::new(workers).run(&na, &job).expect("embed job failed");
     println!(
         "embedding: d={} in {} ({} matvecs)",
         res.e.cols,

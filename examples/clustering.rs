@@ -87,7 +87,7 @@ fn main() {
         SpectralFn::Step { c: lam_keep - 1e-3 },
         7,
     );
-    let res = Coordinator::new(1).run(&na, &job);
+    let res = Coordinator::new(1).run(&na, &job).expect("embed job failed");
     let t_fe = t.elapsed_secs();
     let (q_fe, nmi_fe) = median_modularity(&na, &res.e, kk, restarts, &labels, 1);
 

@@ -32,7 +32,7 @@ fn main() {
         1,
     );
     let t = Timer::start();
-    let res = Coordinator::new(workers).run(&na, &job);
+    let res = Coordinator::new(workers).run(&na, &job).expect("embed job failed");
     println!(
         "index build: d={} in {:.1}s ({} matvecs)",
         res.e.cols,

@@ -413,7 +413,7 @@ fn clustering_table() {
         SpectralFn::Step { c },
         11,
     );
-    let res = Coordinator::new(1).run(&na, &job);
+    let res = Coordinator::new(1).run(&na, &job).unwrap();
     let t_fe = t.elapsed_secs();
     report(&format!("FastEmbed d={d} capturing {keep} eigs"), t_fe, med_mod(&res.e, 21), 0);
 
@@ -603,7 +603,7 @@ fn serving() {
             SpectralFn::Step { c: 0.75 },
             5,
         );
-        let res = Coordinator::new(workers).run(&na, &job);
+        let res = Coordinator::new(workers).run(&na, &job).unwrap();
         println!("\nn={n}: embedded d={} in {:.1}s ({} matvecs)", res.e.cols, t.elapsed_secs(), res.matvecs);
         let mut service = SimilarityService::new(res.e);
 

@@ -1,0 +1,74 @@
+//! Typed job failures surfaced by the coordinator and serving layers.
+
+use std::fmt;
+
+/// Why an embedding job or a query batch could not produce a result.
+///
+/// Everything here is *recoverable at the process level*: the pool and
+/// coordinator stay reusable after any of these, and the CLI renders
+/// them and exits non-zero instead of aborting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// A shard kept panicking past its retry budget.
+    ShardFailed { shard: usize, attempts: usize, reason: String },
+    /// A shard's recurrence produced non-finite values past its retry
+    /// budget; `stage` is the 0-based cascade stage that blew up.
+    NumericalBlowup { shard: usize, stage: usize, stages: usize },
+    /// The job ran past its deadline; `done`/`total` report partial
+    /// progress (shards for embedding jobs, queries for batches).
+    DeadlineExceeded { done: usize, total: usize, elapsed_ms: u64 },
+    /// The input failed validation before any compute started.
+    InvalidInput(String),
+    /// An internal invariant broke (a bug, not an input problem).
+    Internal(String),
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::ShardFailed { shard, attempts, reason } => {
+                write!(f, "shard {shard} failed after {attempts} attempt(s): {reason}")
+            }
+            JobError::NumericalBlowup { shard, stage, stages } => write!(
+                f,
+                "numerical blow-up in cascade stage {}/{stages} of shard {shard}: \
+                 recurrence output is non-finite",
+                stage + 1
+            ),
+            JobError::DeadlineExceeded { done, total, elapsed_ms } => write!(
+                f,
+                "deadline exceeded after {elapsed_ms} ms with {done}/{total} units complete"
+            ),
+            JobError::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            JobError::Internal(msg) => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<crate::sparse::csr::CsrError> for JobError {
+    fn from(e: crate::sparse::csr::CsrError) -> Self {
+        JobError::InvalidInput(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_offending_stage() {
+        let e = JobError::NumericalBlowup { shard: 3, stage: 1, stages: 2 };
+        let msg = e.to_string();
+        assert!(msg.contains("stage 2/2"), "got {msg:?}");
+        assert!(msg.contains("shard 3"), "got {msg:?}");
+    }
+
+    #[test]
+    fn display_reports_partial_progress() {
+        let e = JobError::DeadlineExceeded { done: 4, total: 9, elapsed_ms: 17 };
+        let msg = e.to_string();
+        assert!(msg.contains("4/9") && msg.contains("17 ms"), "got {msg:?}");
+    }
+}

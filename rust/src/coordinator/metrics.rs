@@ -37,6 +37,16 @@ pub struct Metrics {
     /// `candidates_scanned`, but as a histogram: the tail matters — one
     /// bucket collision can cost 100× the mean scan).
     pub candidates_hist: Histogram,
+    /// Shard re-executions after a caught panic or blow-up (the retry
+    /// path of the fault-tolerant scheduler).
+    pub shard_retries: AtomicUsize,
+    /// Jobs/batches aborted because their deadline passed.
+    pub deadline_aborts: AtomicUsize,
+    /// Top-k queries that fell back from a failed/empty ANN probe to
+    /// the exact scanner.
+    pub fallback_exact: AtomicUsize,
+    /// Top-k queries rejected by load shedding (p99 over threshold).
+    pub queries_shed: AtomicUsize,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -52,6 +62,10 @@ pub struct Snapshot {
     pub rows_flushed: usize,
     pub topk_queries: usize,
     pub candidates_scanned: usize,
+    pub shard_retries: usize,
+    pub deadline_aborts: usize,
+    pub fallback_exact: usize,
+    pub queries_shed: usize,
 }
 
 impl Metrics {
@@ -66,6 +80,16 @@ impl Metrics {
 
     pub fn shard_done(&self) {
         self.shards_done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shard re-execution (caught panic or blow-up).
+    pub fn shard_retry(&self) {
+        self.shard_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one load-shed (rejected) query.
+    pub fn query_shed(&self) {
+        self.queries_shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_query(&self, ns: u64) {
@@ -102,6 +126,10 @@ impl Metrics {
             rows_flushed: self.rows_flushed.load(Ordering::Relaxed),
             topk_queries: self.topk_queries.load(Ordering::Relaxed),
             candidates_scanned: self.candidates_scanned.load(Ordering::Relaxed),
+            shard_retries: self.shard_retries.load(Ordering::Relaxed),
+            deadline_aborts: self.deadline_aborts.load(Ordering::Relaxed),
+            fallback_exact: self.fallback_exact.load(Ordering::Relaxed),
+            queries_shed: self.queries_shed.load(Ordering::Relaxed),
         }
     }
 
@@ -131,10 +159,16 @@ mod tests {
         m.shard_done();
         m.record_query(2_000);
         m.record_query(4_000);
+        m.shard_retry();
+        m.query_shed();
         let s = m.snapshot();
         assert_eq!(s.matvecs, 15);
         assert_eq!(s.shards_done, 1);
         assert_eq!(s.queries, 2);
+        assert_eq!(s.shard_retries, 1);
+        assert_eq!(s.queries_shed, 1);
+        assert_eq!(s.deadline_aborts, 0);
+        assert_eq!(s.fallback_exact, 0);
         assert_eq!(s.query_ns, 6_000, "histogram keeps the exact sum");
         assert!((m.mean_query_us() - 3.0).abs() < 1e-12);
     }

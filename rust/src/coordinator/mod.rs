@@ -19,11 +19,16 @@
 //!   Top-k optionally routes through a `crate::index` ANN index
 //!   (sublinear candidates + exact re-ranking).
 //! * [`metrics`] — atomic counters/gauges exported by the CLI.
+//! * [`error`]   — the typed [`JobError`] every fallible path returns:
+//!   shard panics past the retry budget, numerical blow-ups, missed
+//!   deadlines, invalid inputs. The process survives all of them.
 
+pub mod error;
 pub mod metrics;
 pub mod queue;
 pub mod scheduler;
 pub mod service;
 
+pub use error::JobError;
 pub use scheduler::{Coordinator, EmbedJob, JobResult};
 pub use service::{measure_serving, QueryBatch, ServingSample, SimilarityService};

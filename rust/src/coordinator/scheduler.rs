@@ -24,9 +24,12 @@
 //! recursion's steady state performs zero heap allocations (the shard
 //! blocks themselves recycle through the same arena).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
+use super::error::JobError;
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use crate::embed::fastembed::{apply_series_ws, plan_scaled};
@@ -34,11 +37,18 @@ use crate::embed::norm::spectral_norm;
 use crate::embed::omega::rademacher_omega;
 use crate::embed::op::{Operator, ScaledOp};
 use crate::embed::Params;
+use crate::fault::FaultKind;
 use crate::funcs::SpectralFn;
 use crate::linalg::Mat;
-use crate::par::{self, ExecPolicy, Workspace};
+use crate::par::{self, CancelToken, ExecPolicy, Workspace};
 use crate::poly::cascade::CascadePlan;
 use crate::util::rng::Rng;
+
+/// Default per-shard retry budget (see [`EmbedJob::max_retries`]).
+/// Generous on purpose: retries are cheap (one shard's recurrence), and
+/// at the chaos harness's p = 0.3 injection rate the probability of a
+/// shard exhausting 8 retries is 0.3⁹ ≈ 2·10⁻⁵.
+pub const DEFAULT_MAX_RETRIES: usize = 8;
 
 /// An embedding job specification.
 #[derive(Clone, Debug)]
@@ -57,11 +67,31 @@ pub struct EmbedJob {
     /// serial kernels — is always respected; the CLI sets this when
     /// `--threads 0`.
     pub auto_threads: bool,
+    /// How many times a failed shard (panic or numerical blow-up) is
+    /// re-executed before the job fails with [`JobError::ShardFailed`] /
+    /// [`JobError::NumericalBlowup`]. Each shard is a pure function of
+    /// its Ω column slice, so re-execution is bitwise-safe: the final
+    /// embedding is identical whether or not any retry happened.
+    pub max_retries: usize,
+    /// Wall-clock deadline in milliseconds (`None` = unbounded). The
+    /// token is polled at row-block granularity inside the kernels, per
+    /// recurrence step, and at shard boundaries; an over-deadline job
+    /// returns [`JobError::DeadlineExceeded`] with partial-progress
+    /// stats instead of hanging.
+    pub deadline_ms: Option<u64>,
 }
 
 impl EmbedJob {
     pub fn new(params: Params, f: SpectralFn, seed: u64) -> Self {
-        EmbedJob { params, f, shard_width: 0, seed, auto_threads: false }
+        EmbedJob {
+            params,
+            f,
+            shard_width: 0,
+            seed,
+            auto_threads: false,
+            max_retries: DEFAULT_MAX_RETRIES,
+            deadline_ms: None,
+        }
     }
 }
 
@@ -76,6 +106,8 @@ pub struct JobResult {
     pub workers: usize,
     /// Kernel threads per shard actually used (after auto-composition).
     pub threads: usize,
+    /// Shard re-executions this job survived (0 on a healthy run).
+    pub retries: usize,
 }
 
 /// Worker-pool coordinator. `workers` is the shard-level pool size
@@ -115,8 +147,15 @@ impl Coordinator {
     }
 
     /// Run an embedding job over `op`, sharding Ω's columns across the
-    /// worker pool. Deterministic given `job.seed`.
-    pub fn run<O: Operator + Sync + ?Sized>(&self, op: &O, job: &EmbedJob) -> JobResult {
+    /// worker pool. Deterministic given `job.seed`. Fails softly — a
+    /// shard that exhausts its retry budget, a blown-up recurrence, or a
+    /// missed deadline returns a [`JobError`] and leaves the coordinator
+    /// (and the process-wide pool) fully reusable for the next job.
+    pub fn run<O: Operator + Sync + ?Sized>(
+        &self,
+        op: &O,
+        job: &EmbedJob,
+    ) -> Result<JobResult, JobError> {
         let n = op.dim();
         let mut rng = Rng::new(job.seed);
         let d = if job.params.d > 0 {
@@ -134,7 +173,7 @@ impl Coordinator {
         op: &O,
         job: &EmbedJob,
         omega: Mat,
-    ) -> JobResult {
+    ) -> Result<JobResult, JobError> {
         let n = op.dim();
         assert_eq!(omega.rows, n);
         let d = omega.cols;
@@ -185,8 +224,20 @@ impl Coordinator {
 
         let scaled = ScaledOp::new(op, 1.0 / kappa, 0.0);
         let total_matvecs = AtomicUsize::new(0);
-        let results: Vec<std::sync::Mutex<Option<Mat>>> =
-            (0..nshards).map(|_| std::sync::Mutex::new(None)).collect();
+        let job_retries = AtomicUsize::new(0);
+        let results: Vec<Mutex<Option<Mat>>> = (0..nshards).map(|_| Mutex::new(None)).collect();
+
+        // One token for the whole job: trips on the deadline (polled
+        // down to row-block granularity inside the kernels) or on the
+        // first unrecoverable shard failure, stopping the producer and
+        // turning remaining workers into drain-and-discard loops so the
+        // bounded queue can never deadlock a failing job.
+        let started = Instant::now();
+        let cancel = match job.deadline_ms {
+            Some(ms) => CancelToken::with_deadline(Duration::from_millis(ms)),
+            None => CancelToken::new(),
+        };
+        let first_error: Mutex<Option<JobError>> = Mutex::new(None);
 
         std::thread::scope(|scope| {
             // Workers, each owning a recycling workspace: after the first
@@ -197,9 +248,13 @@ impl Coordinator {
                 let scaled = &scaled;
                 let results = &results;
                 let total = &total_matvecs;
+                let retries = &job_retries;
+                let first_error = &first_error;
+                let cancel = cancel.clone();
                 let metrics = Arc::clone(&self.metrics);
                 scope.spawn(move || {
                     let mut ws = Workspace::new();
+                    ws.cancel = Some(cancel.clone());
                     loop {
                         // Queue wait vs. run time, attributed separately
                         // (the wait that ends in shutdown is discarded).
@@ -209,50 +264,95 @@ impl Coordinator {
                             break;
                         };
                         drop(wait);
-                        let _run = crate::obs::span(&crate::obs::SHARD_RUN);
-                        let mut mv = 0usize;
-                        let mut e = shard.omega;
-                        for _ in 0..plan.b {
-                            let next =
-                                apply_series_ws(scaled, &plan.stage, &e, &mut mv, exec, &mut ws);
-                            ws.give_mat(e);
-                            e = next;
+                        if cancel.is_cancelled() {
+                            // Keep draining so the producer never blocks
+                            // on a full queue mid-abort; shards are
+                            // discarded, not run.
+                            continue;
                         }
-                        total.fetch_add(mv, Ordering::Relaxed);
-                        metrics.add_matvecs(mv);
+                        let _run = crate::obs::span(&crate::obs::SHARD_RUN);
                         let idx = shard.start / width;
-                        *results[idx].lock().unwrap() = Some(e);
-                        metrics.shard_done();
+                        match run_shard(
+                            scaled,
+                            plan,
+                            &shard,
+                            idx,
+                            exec,
+                            &mut ws,
+                            job.max_retries,
+                            &cancel,
+                            &metrics,
+                        ) {
+                            ShardOutcome::Done { e, matvecs, attempts } => {
+                                total.fetch_add(matvecs, Ordering::Relaxed);
+                                retries.fetch_add(attempts - 1, Ordering::Relaxed);
+                                metrics.add_matvecs(matvecs);
+                                *results[idx].lock().unwrap() = Some(e);
+                                metrics.shard_done();
+                            }
+                            ShardOutcome::Cancelled => {}
+                            ShardOutcome::Failed(err) => {
+                                crate::obs::failstats::SHARD_FAILURES
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let mut slot =
+                                    first_error.lock().unwrap_or_else(|p| p.into_inner());
+                                if slot.is_none() {
+                                    *slot = Some(err);
+                                }
+                                drop(slot);
+                                cancel.cancel();
+                            }
+                        }
                     }
                 });
             }
             // Producer: slice Ω into shards (backpressure via the queue).
             let mut start = 0;
             while start < d {
+                if cancel.is_cancelled() {
+                    break;
+                }
                 let end = (start + width).min(d);
                 let mut cols = Mat::zeros(n, end - start);
                 for i in 0..n {
                     cols.row_mut(i)
                         .copy_from_slice(&omega.row(i)[start..end]);
                 }
-                queue
-                    .push(Shard { start, omega: cols })
-                    .unwrap_or_else(|_| panic!("queue closed early"));
+                if queue.push(Shard { start, omega: cols }).is_err() {
+                    break; // queue closed under us: abort in progress
+                }
                 start = end;
             }
             queue.close();
         });
 
+        if let Some(err) = first_error.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            return Err(err);
+        }
+        if cancel.is_cancelled() {
+            crate::obs::failstats::DEADLINE_ABORTS.fetch_add(1, Ordering::Relaxed);
+            self.metrics.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(JobError::DeadlineExceeded {
+                done: self.metrics.shards_done.load(Ordering::Relaxed),
+                total: nshards,
+                elapsed_ms: started.elapsed().as_millis() as u64,
+            });
+        }
+
         // Reassemble.
         let mut e = Mat::zeros(n, d);
         for (s, slot) in results.iter().enumerate() {
-            let shard = slot.lock().unwrap().take().expect("missing shard result");
+            let shard = slot
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .take()
+                .ok_or_else(|| JobError::Internal(format!("missing result for shard {s}")))?;
             let start = s * width;
             for i in 0..n {
                 e.row_mut(i)[start..start + shard.cols].copy_from_slice(shard.row(i));
             }
         }
-        JobResult {
+        Ok(JobResult {
             e,
             plan,
             norm_estimate: kappa,
@@ -260,7 +360,135 @@ impl Coordinator {
             shards: nshards,
             workers,
             threads: exec.threads,
+            retries: job_retries.into_inner(),
+        })
+    }
+}
+
+/// Terminal state of one shard after retries.
+enum ShardOutcome {
+    Done { e: Mat, matvecs: usize, attempts: usize },
+    Cancelled,
+    Failed(JobError),
+}
+
+/// Why a single attempt failed (retryable until the budget runs out).
+enum AttemptError {
+    Panicked(String),
+    Blowup { stage: usize },
+}
+
+/// Run one shard with bounded retry. Each attempt recomputes the full
+/// cascade from the shard's (immutable) Ω slice, so a retried shard
+/// produces exactly the bits a first-try shard would — determinism is
+/// preserved by construction, and the matvec count added on success is
+/// the clean single-pass count (failed attempts are not billed).
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    op: &(impl Operator + ?Sized),
+    plan: &CascadePlan,
+    shard: &Shard,
+    idx: usize,
+    exec: &ExecPolicy,
+    ws: &mut Workspace,
+    max_retries: usize,
+    cancel: &CancelToken,
+    metrics: &Metrics,
+) -> ShardOutcome {
+    let mut attempt = 0usize;
+    loop {
+        if cancel.is_cancelled() {
+            return ShardOutcome::Cancelled;
         }
+        let retry_span =
+            if attempt > 0 { Some(crate::obs::span(&crate::obs::SHARD_RETRY)) } else { None };
+        let result = run_attempt(op, plan, shard, exec, ws, cancel);
+        drop(retry_span);
+        match result {
+            Ok(Some((e, matvecs))) => {
+                return ShardOutcome::Done { e, matvecs, attempts: attempt + 1 }
+            }
+            Ok(None) => return ShardOutcome::Cancelled,
+            Err(err) if attempt >= max_retries => {
+                return ShardOutcome::Failed(match err {
+                    AttemptError::Panicked(reason) => {
+                        JobError::ShardFailed { shard: idx, attempts: attempt + 1, reason }
+                    }
+                    AttemptError::Blowup { stage } => {
+                        JobError::NumericalBlowup { shard: idx, stage, stages: plan.b }
+                    }
+                });
+            }
+            Err(_) => {
+                attempt += 1;
+                metrics.shard_retry();
+                crate::obs::failstats::SHARD_RETRIES.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// One isolated execution attempt: panics inside the recurrence (or
+/// injected by the chaos harness) are caught and reported as data, and
+/// every stage output is checked for finiteness so a blown-up recurrence
+/// names its stage instead of poisoning the assembled embedding.
+/// `Ok(None)` = cancelled mid-attempt (partial state already retired).
+fn run_attempt(
+    op: &(impl Operator + ?Sized),
+    plan: &CascadePlan,
+    shard: &Shard,
+    exec: &ExecPolicy,
+    ws: &mut Workspace,
+    cancel: &CancelToken,
+) -> Result<Option<(Mat, usize)>, AttemptError> {
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        // Chaos failpoint: no-op (one relaxed load) unless armed.
+        let injected = crate::fault::inject("shard_run");
+        let mut mv = 0usize;
+        // Work on a copy so the shard's Ω slice survives for retries.
+        let mut e = ws.take_mat(shard.omega.rows, shard.omega.cols);
+        e.data.copy_from_slice(&shard.omega.data);
+        for stage in 0..plan.b {
+            let next = apply_series_ws(op, &plan.stage, &e, &mut mv, exec, ws);
+            ws.give_mat(e);
+            e = next;
+            if cancel.is_cancelled() {
+                ws.give_mat(e);
+                return Ok(None);
+            }
+            if stage == 0 {
+                if let (Some(FaultKind::Poison), Some(v)) = (injected, e.data.first_mut()) {
+                    *v = f64::NAN; // injected data corruption
+                }
+            }
+            if !block_is_finite(&e) {
+                ws.give_mat(e);
+                return Err(AttemptError::Blowup { stage });
+            }
+        }
+        Ok(Some((e, mv)))
+    }));
+    match caught {
+        Ok(r) => r,
+        Err(payload) => Err(AttemptError::Panicked(panic_message(payload.as_ref()))),
+    }
+}
+
+/// Single-pass finiteness probe: the sum of squares is finite iff every
+/// element is finite and no square overflows — embedding-stage outputs
+/// are O(1) per element, so overflow only happens when the recurrence
+/// has genuinely diverged.
+fn block_is_finite(m: &Mat) -> bool {
+    m.data.iter().map(|v| v * v).sum::<f64>().is_finite()
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
     }
 }
 
@@ -279,6 +507,8 @@ mod tests {
             shard_width: width,
             seed: 99,
             auto_threads: false,
+            max_retries: DEFAULT_MAX_RETRIES,
+            deadline_ms: None,
         }
     }
 
@@ -300,7 +530,7 @@ mod tests {
                 let omega = rademacher_omega(&mut rng, na.rows, 16);
 
                 let coord = Coordinator::new(*workers);
-                let sharded = coord.run_with_omega(na, &j, omega.clone());
+                let sharded = coord.run_with_omega(na, &j, omega.clone()).unwrap();
 
                 let fe = FastEmbed::new(j.params.clone());
                 let mut rng2 = Rng::new(0);
@@ -323,8 +553,9 @@ mod tests {
         let na = graph::normalized_adjacency(&g.adj);
         let coord = Coordinator::new(3);
         let j = job(20, 12, 1, 6);
-        let res = coord.run(&na, &j);
+        let res = coord.run(&na, &j).unwrap();
         assert_eq!(res.shards, 4); // ceil(20/6)
+        assert_eq!(res.retries, 0, "healthy run must not retry");
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.shards_done, 4);
         assert_eq!(snap.shards_total, 4);
@@ -338,8 +569,8 @@ mod tests {
         let g = gen::sbm_by_degree(&mut rng, 80, 4, 6.0, 1.0);
         let na = graph::normalized_adjacency(&g.adj);
         let j = job(12, 20, 2, 3);
-        let a = Coordinator::new(1).run(&na, &j);
-        let b = Coordinator::new(4).run(&na, &j);
+        let a = Coordinator::new(1).run(&na, &j).unwrap();
+        let b = Coordinator::new(4).run(&na, &j).unwrap();
         assert_eq!(a.e.data, b.e.data);
     }
 
@@ -350,12 +581,12 @@ mod tests {
         let mut rng = Rng::new(215);
         let g = gen::sbm_by_degree(&mut rng, 120, 4, 6.0, 1.0);
         let na = graph::normalized_adjacency(&g.adj);
-        let base = Coordinator::new(1).run(&na, &job(10, 16, 2, 4));
+        let base = Coordinator::new(1).run(&na, &job(10, 16, 2, 4)).unwrap();
         for (workers, threads) in [(1usize, 2usize), (2, 2), (3, 4)] {
             let mut j = job(10, 16, 2, 4);
             j.params.exec = crate::par::ExecPolicy::with_threads(threads);
             let coord = Coordinator::new(workers);
-            let res = coord.run(&na, &j);
+            let res = coord.run(&na, &j).unwrap();
             assert_eq!(base.e.data, res.e.data, "workers={workers} threads={threads}");
             assert_eq!(coord.metrics.snapshot().threads, threads);
         }
@@ -388,11 +619,11 @@ mod tests {
         let g = gen::sbm_by_degree(&mut rng, 100, 4, 6.0, 1.0);
         let na = graph::normalized_adjacency(&g.adj);
         let j = job(12, 16, 2, 4);
-        let manual = Coordinator::new(2).run(&na, &j);
+        let manual = Coordinator::new(2).run(&na, &j).unwrap();
         // Fully automatic: workers and kernel threads both composed.
         let mut ja = job(12, 16, 2, 4);
         ja.auto_threads = true;
-        let auto = Coordinator::auto().run(&na, &ja);
+        let auto = Coordinator::auto().run(&na, &ja).unwrap();
         assert_eq!(manual.e.data, auto.e.data, "auto-composition must not change bits");
         assert_eq!(auto.shards, 3);
         assert!(auto.workers >= 1 && auto.threads >= 1);
@@ -402,10 +633,10 @@ mod tests {
         // always respected by the auto coordinator.
         let mut jt = job(12, 16, 2, 4);
         jt.params.exec = crate::par::ExecPolicy::with_threads(2);
-        let auto_t = Coordinator::auto().run(&na, &jt);
+        let auto_t = Coordinator::auto().run(&na, &jt).unwrap();
         assert_eq!(auto_t.threads, 2);
         assert_eq!(manual.e.data, auto_t.e.data);
-        let serial = Coordinator::auto().run(&na, &job(12, 16, 2, 4));
+        let serial = Coordinator::auto().run(&na, &job(12, 16, 2, 4)).unwrap();
         assert_eq!(serial.threads, 1, "explicit serial kernels must not be overridden");
         assert_eq!(manual.e.data, serial.e.data);
     }
@@ -415,8 +646,8 @@ mod tests {
         let mut rng = Rng::new(217);
         let g = gen::erdos_renyi(&mut rng, 70, 210);
         let na = graph::normalized_adjacency(&g.adj);
-        let explicit = Coordinator::new(2).run(&na, &job(16, 16, 2, 4));
-        let adaptive = Coordinator::new(2).run(&na, &job(16, 16, 2, 0));
+        let explicit = Coordinator::new(2).run(&na, &job(16, 16, 2, 4)).unwrap();
+        let adaptive = Coordinator::new(2).run(&na, &job(16, 16, 2, 0)).unwrap();
         assert_eq!(
             explicit.e.data, adaptive.e.data,
             "adaptive width must not change bits"
@@ -432,7 +663,7 @@ mod tests {
         let g = gen::erdos_renyi(&mut rng, 50, 100);
         let na = graph::normalized_adjacency(&g.adj);
         let j = job(0, 8, 1, 4);
-        let res = Coordinator::new(2).run(&na, &j);
+        let res = Coordinator::new(2).run(&na, &j).unwrap();
         let want = (6.0 * (50f64).ln()).ceil() as usize;
         assert_eq!(res.e.cols, want);
     }

@@ -13,12 +13,20 @@
 //! `(correlation desc, vertex id asc)` so their answers are comparable
 //! element-wise (ties no longer depend on scan order).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use super::error::JobError;
 use super::metrics::Metrics;
 use crate::index::{rerank_top_k, AnnIndex};
 use crate::linalg::Mat;
-use crate::par::{self, ExecPolicy};
+use crate::par::{self, CancelToken, ExecPolicy};
+
+/// Load shedding needs a latency sample before p99 means anything:
+/// below this many recorded queries the threshold is never consulted.
+const SHED_MIN_QUERIES: usize = 32;
 
 /// A single query.
 #[derive(Clone, Debug)]
@@ -34,6 +42,9 @@ pub enum Query {
 pub enum Answer {
     Corr(f64),
     TopK(Vec<(usize, f64)>),
+    /// The query was rejected by load shedding (top-k p99 latency over
+    /// the configured threshold). The caller may retry later.
+    Shed,
 }
 
 /// The service: an embedding with precomputed row norms and an optional
@@ -42,13 +53,32 @@ pub struct SimilarityService {
     e: Mat,
     norms: Vec<f64>,
     index: Option<Box<dyn AnnIndex>>,
+    /// Shed top-k queries when query-latency p99 (µs) exceeds this.
+    shed_p99_us: Option<f64>,
     pub metrics: Arc<Metrics>,
 }
 
 impl SimilarityService {
     pub fn new(e: Mat) -> Self {
         let norms = crate::index::row_norms(&e);
-        SimilarityService { e, norms, index: None, metrics: Arc::new(Metrics::default()) }
+        SimilarityService {
+            e,
+            norms,
+            index: None,
+            shed_p99_us: None,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Enable (or disable with `None`) load shedding: once at least
+    /// [`SHED_MIN_QUERIES`] latencies are recorded and their p99 exceeds
+    /// `us` microseconds, `Query::TopK` — the expensive class — is
+    /// answered with [`Answer::Shed`] instead of being executed. Shed
+    /// queries are counted but not recorded into the latency histogram,
+    /// so cheap pairwise traffic keeps flowing and keeps the estimate
+    /// honest.
+    pub fn set_shed_threshold(&mut self, us: Option<f64>) {
+        self.shed_p99_us = us;
     }
 
     /// Route `Query::TopK` through `index` (replaces any previous index).
@@ -108,24 +138,44 @@ impl SimilarityService {
     }
 
     /// Top-k through the attached index (exact scan when none), with
-    /// candidate accounting.
+    /// candidate accounting. A probe that panics, or comes back empty
+    /// when hits were clearly available, falls back to the exact scan —
+    /// the scan is always correct, just `O(n·d)` — and the fallback is
+    /// counted in [`Metrics::fallback_exact`] / `obs::failstats`.
     fn top_k_routed(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
-        match &self.index {
-            Some(idx) => {
-                let r = idx.top_k(&self.e, &self.norms, i, k);
-                self.metrics.record_topk(r.candidates);
-                r.hits
-            }
-            None => {
-                self.metrics.record_topk(self.e.rows.saturating_sub(1));
-                self.top_k(i, k)
+        if let Some(idx) = &self.index {
+            let probe = catch_unwind(AssertUnwindSafe(|| idx.top_k(&self.e, &self.norms, i, k)));
+            match probe {
+                Ok(r) if !(r.hits.is_empty() && k > 0 && self.e.rows > 1) => {
+                    self.metrics.record_topk(r.candidates);
+                    return r.hits;
+                }
+                _ => {
+                    crate::obs::failstats::FALLBACK_EXACT.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.fallback_exact.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
+        self.metrics.record_topk(self.e.rows.saturating_sub(1));
+        self.top_k(i, k)
     }
 
     /// Answer one query, recording latency into the metrics histogram
     /// (and a `query` stage span when `--stats`/`--trace` is on).
+    ///
+    /// When a shed threshold is set and top-k p99 latency has crossed
+    /// it, `Query::TopK` is rejected with [`Answer::Shed`] before any
+    /// work is done (pairwise queries always run).
     pub fn answer(&self, q: &Query) -> Answer {
+        if let (Some(th), Query::TopK { .. }) = (self.shed_p99_us, q) {
+            if self.metrics.queries.load(Ordering::Relaxed) >= SHED_MIN_QUERIES
+                && self.metrics.query_percentile_us(99.0) > th
+            {
+                self.metrics.query_shed();
+                crate::obs::failstats::QUERIES_SHED.fetch_add(1, Ordering::Relaxed);
+                return Answer::Shed;
+            }
+        }
         let _span = crate::obs::span(&crate::obs::QUERY);
         let t = std::time::Instant::now();
         let ans = match *q {
@@ -214,6 +264,42 @@ impl QueryBatch {
             }
         });
         answers.into_iter().map(|a| a.expect("missing answer")).collect()
+    }
+
+    /// Like [`QueryBatch::run`] but bounded by a wall-clock `deadline`:
+    /// a [`CancelToken`] is polled before every query, so an
+    /// over-deadline batch stops within one query's latency per worker
+    /// and returns [`JobError::DeadlineExceeded`] with partial-progress
+    /// stats instead of answers.
+    pub fn run_with_deadline(
+        service: &SimilarityService,
+        queries: &[Query],
+        workers: usize,
+        deadline: Duration,
+    ) -> Result<Vec<Answer>, JobError> {
+        let started = Instant::now();
+        let cancel = CancelToken::with_deadline(deadline);
+        let exec = ExecPolicy::with_threads(workers.max(1));
+        let ranges = par::even_ranges(queries.len(), exec.chunks(queries.len()));
+        let mut answers: Vec<Option<Answer>> = queries.iter().map(|_| None).collect();
+        exec.for_chunks(&ranges, &mut answers, 1, |_, r, out| {
+            for (slot, qi) in out.iter_mut().zip(r) {
+                if cancel.is_cancelled() {
+                    return;
+                }
+                *slot = Some(service.answer(&queries[qi]));
+            }
+        });
+        if cancel.is_cancelled() {
+            crate::obs::failstats::DEADLINE_ABORTS.fetch_add(1, Ordering::Relaxed);
+            service.metrics.deadline_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(JobError::DeadlineExceeded {
+                done: answers.iter().filter(|a| a.is_some()).count(),
+                total: queries.len(),
+                elapsed_ms: started.elapsed().as_millis() as u64,
+            });
+        }
+        Ok(answers.into_iter().map(|a| a.expect("missing answer")).collect())
     }
 }
 
@@ -351,5 +437,106 @@ mod tests {
         e.row_mut(1).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
         let s = SimilarityService::new(e);
         assert_eq!(s.corr(0, 1), 0.0);
+    }
+
+    /// An index whose probe always panics — the fault the serving layer
+    /// must isolate.
+    struct PanickyIndex(usize);
+
+    impl AnnIndex for PanickyIndex {
+        fn name(&self) -> &'static str {
+            "panicky"
+        }
+        fn len(&self) -> usize {
+            self.0
+        }
+        fn top_k(&self, _e: &Mat, _norms: &[f64], _i: usize, _k: usize) -> crate::index::TopK {
+            panic!("probe exploded");
+        }
+        fn mem_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    /// An index that returns no candidates at all (a degenerate probe).
+    struct EmptyIndex(usize);
+
+    impl AnnIndex for EmptyIndex {
+        fn name(&self) -> &'static str {
+            "empty"
+        }
+        fn len(&self) -> usize {
+            self.0
+        }
+        fn top_k(&self, _e: &Mat, _norms: &[f64], _i: usize, _k: usize) -> crate::index::TopK {
+            crate::index::TopK { hits: Vec::new(), candidates: 0 }
+        }
+        fn mem_bytes(&self) -> usize {
+            0
+        }
+    }
+
+    #[test]
+    fn panicking_index_falls_back_to_exact_scan() {
+        let mut s = service(30, 4, 228);
+        let want: Vec<_> = (0..5).map(|i| s.top_k(i, 3)).collect();
+        s.attach_index(Box::new(PanickyIndex(30)));
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(s.answer(&Query::TopK { i, k: 3 }), Answer::TopK(w.clone()));
+        }
+        assert_eq!(s.metrics.snapshot().fallback_exact, 5);
+        // The service stays usable after the panics.
+        assert!(matches!(s.answer(&Query::Corr { i: 0, j: 1 }), Answer::Corr(_)));
+    }
+
+    #[test]
+    fn empty_probe_falls_back_to_exact_scan() {
+        let mut s = service(30, 4, 229);
+        let want = s.top_k(2, 4);
+        s.attach_index(Box::new(EmptyIndex(30)));
+        assert_eq!(s.answer(&Query::TopK { i: 2, k: 4 }), Answer::TopK(want));
+        assert_eq!(s.metrics.snapshot().fallback_exact, 1);
+        // k = 0 legitimately has no hits: not a fallback.
+        assert_eq!(s.answer(&Query::TopK { i: 2, k: 0 }), Answer::TopK(Vec::new()));
+        assert_eq!(s.metrics.snapshot().fallback_exact, 1);
+    }
+
+    #[test]
+    fn shed_threshold_rejects_topk_once_p99_crosses() {
+        let mut s = service(20, 4, 230);
+        s.set_shed_threshold(Some(0.0));
+        // Below the minimum sample size nothing is shed.
+        assert!(matches!(s.answer(&Query::TopK { i: 0, k: 2 }), Answer::TopK(_)));
+        // Build up a latency sample with cheap pairwise queries.
+        for t in 0..SHED_MIN_QUERIES {
+            let a = s.answer(&Query::Corr { i: t % 20, j: (t + 1) % 20 });
+            assert!(matches!(a, Answer::Corr(_)));
+        }
+        // p99 of any real workload is > 0.0 µs → top-k is shed now...
+        assert_eq!(s.answer(&Query::TopK { i: 1, k: 2 }), Answer::Shed);
+        assert!(s.metrics.snapshot().queries_shed >= 1);
+        // ...while pairwise queries keep flowing,
+        assert!(matches!(s.answer(&Query::Corr { i: 0, j: 1 }), Answer::Corr(_)));
+        // and clearing the threshold restores top-k service.
+        s.set_shed_threshold(None);
+        assert!(matches!(s.answer(&Query::TopK { i: 1, k: 2 }), Answer::TopK(_)));
+    }
+
+    #[test]
+    fn batch_deadline_zero_aborts_with_partial_progress() {
+        let s = service(25, 4, 231);
+        let queries: Vec<Query> = (0..40).map(|i| Query::TopK { i: i % 25, k: 3 }).collect();
+        let err = QueryBatch::run_with_deadline(&s, &queries, 2, Duration::ZERO).unwrap_err();
+        match err {
+            JobError::DeadlineExceeded { done, total, .. } => {
+                assert_eq!(total, 40);
+                assert!(done < 40, "a zero deadline cannot finish the batch");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(s.metrics.snapshot().deadline_aborts >= 1);
+        // A generous deadline answers everything, identically to run().
+        let ok = QueryBatch::run_with_deadline(&s, &queries, 2, Duration::from_secs(600)).unwrap();
+        assert_eq!(ok, QueryBatch::run(&s, &queries, 2));
     }
 }

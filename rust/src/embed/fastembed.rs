@@ -208,6 +208,13 @@ pub fn apply_series_ws(
     e.axpy(a[1], &q_prev);
     let mut q_new = ws.take_mat(q0.rows, q0.cols);
     for r in 2..a.len() {
+        // Cancellation checkpoint (deadline/cancel plumbed through the
+        // workspace): bail between recurrence steps, retire the buffers
+        // normally, and return the partial accumulator — the caller that
+        // observed cancellation discards it.
+        if ws.cancelled() {
+            break;
+        }
         let (c1, c2) = series.recursion_scalars(r);
         // q_new = c1 * S q_prev − c2 * q_prev2, in one fused output pass.
         // (`alpha·t + (−c2)·z` is the same IEEE expression as

@@ -1,0 +1,314 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A process-global failpoint registry. Call sites name themselves with
+//! a string key and call [`inject`]; the registry decides — from an
+//! armed spec and a deterministic counter-seeded draw — whether that
+//! site should panic, sleep, or report that the caller must poison its
+//! own data. Disarmed (the default), [`inject`] is a single relaxed
+//! atomic load, the same cost model as `obs::stats_enabled()`, so
+//! production hot paths pay nothing.
+//!
+//! # Spec grammar
+//!
+//! A spec is a comma-separated list of rules:
+//!
+//! ```text
+//! site:kind[:p=P][:seed=N][:ms=N]
+//! ```
+//!
+//! * `site` — failpoint name; current sites are `shard_run` (fires once
+//!   per shard attempt in the coordinator) and `pool_task` (fires once
+//!   per worker claim loop in the persistent pool).
+//! * `kind` — `panic` (unwinds with a tagged message), `delay` (sleeps
+//!   `ms` milliseconds, default 5), or `poison` (the call site corrupts
+//!   its own freshly computed data with a NaN, exercising the numerical
+//!   guards).
+//! * `p` — injection probability in `[0, 1]`, default 1.
+//! * `seed` — seed for the deterministic draw, default 0.
+//!
+//! Example: `--fault-spec 'shard_run:panic:p=0.3:seed=7'`.
+//!
+//! Draws are `splitmix64(seed ⊕ f(draw_index, site))` — a pure function
+//! of the spec and the per-registry draw counter, never of wall clock or
+//! OS entropy, so a single-threaded run replays identically. Under
+//! concurrency the draw *order* varies with scheduling, but the
+//! fault-tolerance contract under test is stronger than replayed faults:
+//! embedding output must be bitwise identical to the fault-free run for
+//! **any** injection pattern, because every injected failure is caught
+//! and the shard deterministically re-executed.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// What an armed rule does when its draw succeeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Unwind with a `fault injected: <site> panic` message.
+    Panic,
+    /// Sleep for the given number of milliseconds.
+    Delay(u64),
+    /// Returned to the caller, which scribbles a NaN into its own
+    /// output to exercise downstream numerical guards.
+    Poison,
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    site: String,
+    kind: FaultKind,
+    p: f64,
+    seed: u64,
+}
+
+/// Fast-path gate: one relaxed load when disarmed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static RULES: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+/// Monotone draw counter; reset on (re-)arm so a given spec replays.
+static DRAWS: AtomicU64 = AtomicU64::new(0);
+
+/// Environment variable consulted by the CLI when `--fault-spec` is
+/// absent.
+pub const ENV_SPEC: &str = "CSE_FAULT_SPEC";
+
+fn rules() -> MutexGuard<'static, Vec<Rule>> {
+    // An injected panic can unwind while a caller holds this lock in a
+    // test harness; treat poison as recoverable — the data is a plain
+    // rule list that no panic leaves half-written.
+    RULES.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm the registry with a spec (see module docs for the grammar).
+/// Replaces any previous spec and resets the draw counter.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let parsed = parse(spec)?;
+    let mut g = rules();
+    *g = parsed;
+    DRAWS.store(0, Ordering::Relaxed);
+    ARMED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm and clear every rule; [`inject`] returns to its one-load
+/// fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    rules().clear();
+}
+
+/// Whether any spec is armed.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Total faults injected since process start (all kinds, all sites).
+pub fn injected() -> u64 {
+    crate::obs::failstats::FAULTS_INJECTED.load(Ordering::Relaxed)
+}
+
+/// Evaluate the failpoint `site`. Disarmed this is one relaxed load.
+/// Armed, a successful draw either panics or sleeps here, or returns
+/// `Some(FaultKind::Poison)` for the caller to act on; `None` means
+/// "no fault this time".
+#[inline]
+pub fn inject(site: &str) -> Option<FaultKind> {
+    if !armed() {
+        return None;
+    }
+    inject_slow(site)
+}
+
+#[cold]
+fn inject_slow(site: &str) -> Option<FaultKind> {
+    let kind = {
+        let g = rules();
+        let rule = g.iter().find(|r| r.site == site)?;
+        // Count draws only for matching sites so rule evaluation order
+        // elsewhere cannot shift this rule's sequence.
+        let n = DRAWS.fetch_add(1, Ordering::Relaxed);
+        if rule.p < 1.0 {
+            let h = splitmix64(rule.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ site_hash(site));
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+            if u >= rule.p {
+                return None;
+            }
+        }
+        rule.kind
+        // Lock dropped here, before any panic below.
+    };
+    crate::obs::failstats::FAULTS_INJECTED.fetch_add(1, Ordering::Relaxed);
+    match kind {
+        FaultKind::Panic => panic!("fault injected: {site} panic"),
+        FaultKind::Delay(ms) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+        FaultKind::Poison => {}
+    }
+    Some(kind)
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn site_hash(s: &str) -> u64 {
+    // FNV-1a; only needs to decorrelate sites sharing a seed.
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3))
+}
+
+fn parse(spec: &str) -> Result<Vec<Rule>, String> {
+    let mut out = Vec::new();
+    for raw in spec.split(',') {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        let mut parts = raw.split(':');
+        let site = parts.next().unwrap_or("").trim();
+        if site.is_empty() || site.contains('=') {
+            return Err(format!("fault rule '{raw}': expected 'site:kind[:p=..][:seed=..][:ms=..]'"));
+        }
+        let kind_name = parts.next().unwrap_or("").trim();
+        let mut p = 1.0f64;
+        let mut seed = 0u64;
+        let mut ms = 5u64;
+        for kv in parts {
+            let kv = kv.trim();
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("fault rule '{raw}': bad parameter '{kv}' (want k=v)"))?;
+            match key.trim() {
+                "p" => {
+                    p = val
+                        .trim()
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|p| (0.0..=1.0).contains(p))
+                        .ok_or_else(|| format!("fault rule '{raw}': p must be in [0,1], got '{val}'"))?;
+                }
+                "seed" => {
+                    seed = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("fault rule '{raw}': bad seed '{val}'"))?;
+                }
+                "ms" => {
+                    ms = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("fault rule '{raw}': bad ms '{val}'"))?;
+                }
+                other => return Err(format!("fault rule '{raw}': unknown parameter '{other}'")),
+            }
+        }
+        let kind = match kind_name {
+            "panic" => FaultKind::Panic,
+            "delay" => FaultKind::Delay(ms),
+            "poison" => FaultKind::Poison,
+            other => {
+                return Err(format!(
+                    "fault rule '{raw}': unknown kind '{other}' (want panic|delay|poison)"
+                ))
+            }
+        };
+        out.push(Rule { site: site.to_string(), kind, p, seed });
+    }
+    if out.is_empty() {
+        return Err("empty fault spec".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; serialize the tests that arm it.
+    // Sites used here are private to this module so armed windows never
+    // interfere with coordinator/pool tests in the same binary.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn serialize() -> MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "   ",
+            "shard_run",
+            "shard_run:explode",
+            "shard_run:panic:p=1.5",
+            "shard_run:panic:p=nan",
+            "shard_run:panic:q=1",
+            "shard_run:panic:seed=x",
+            "p=0.5:panic",
+        ] {
+            assert!(parse(bad).is_err(), "spec {bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let rules =
+            parse("shard_run:panic:p=0.3:seed=7, pool_task:delay:ms=2,x:poison").unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[0].site, "shard_run");
+        assert_eq!(rules[0].kind, FaultKind::Panic);
+        assert!((rules[0].p - 0.3).abs() < 1e-12);
+        assert_eq!(rules[0].seed, 7);
+        assert_eq!(rules[1].kind, FaultKind::Delay(2));
+        assert_eq!(rules[2].kind, FaultKind::Poison);
+        assert_eq!(rules[2].p, 1.0);
+    }
+
+    #[test]
+    fn certain_panic_fires_and_is_catchable() {
+        let _g = serialize();
+        arm("fault_test_panic:panic").unwrap();
+        let before = injected();
+        let r = std::panic::catch_unwind(|| inject("fault_test_panic"));
+        disarm();
+        let payload = r.expect_err("p=1 panic rule must fire");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("fault injected: fault_test_panic panic"), "got {msg:?}");
+        assert!(injected() > before, "injection counter must advance");
+    }
+
+    #[test]
+    fn unmatched_sites_and_disarmed_registry_are_silent() {
+        let _g = serialize();
+        arm("fault_test_other:poison").unwrap();
+        assert_eq!(inject("fault_test_nomatch"), None);
+        disarm();
+        assert_eq!(inject("fault_test_other"), None);
+        assert!(!armed());
+    }
+
+    #[test]
+    fn draws_replay_deterministically_after_rearm() {
+        let _g = serialize();
+        let draw_sequence = || {
+            arm("fault_test_seq:poison:p=0.5:seed=42").unwrap();
+            let seq: Vec<bool> =
+                (0..64).map(|_| inject("fault_test_seq").is_some()).collect();
+            disarm();
+            seq
+        };
+        let a = draw_sequence();
+        let b = draw_sequence();
+        assert_eq!(a, b, "same spec must replay the same draw sequence");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!(hits > 10 && hits < 54, "p=0.5 over 64 draws, got {hits} hits");
+    }
+
+    #[test]
+    fn poison_is_returned_to_the_caller() {
+        let _g = serialize();
+        arm("fault_test_poison:poison").unwrap();
+        assert_eq!(inject("fault_test_poison"), Some(FaultKind::Poison));
+        disarm();
+    }
+}

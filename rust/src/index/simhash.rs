@@ -405,7 +405,7 @@ mod tests {
             SpectralFn::Step { c: 0.7 },
             17,
         );
-        let e = Coordinator::new(2).run(&na, &job).e;
+        let e = Coordinator::new(2).run(&na, &job).unwrap().e;
         let norms = row_norms(&e);
         let idx = SimHashIndex::build(&e, SimHashParams::default());
         let queries: Vec<usize> = (0..100).map(|_| rng.below(e.rows)).collect();

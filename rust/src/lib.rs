@@ -45,6 +45,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod eigen;
 pub mod embed;
+pub mod fault;
 pub mod funcs;
 pub mod index;
 pub mod linalg;

@@ -71,6 +71,7 @@ fn top_usage() -> String {
 fn load_or_gen(a: &Args) -> Result<(Csr, Option<Vec<usize>>), String> {
     if let Some(path) = a.get("graph") {
         let (adj, _) = io::read_edge_list(Path::new(path)).map_err(|e| e.to_string())?;
+        adj.validate().map_err(|e| format!("invalid graph in {path}: {e}"))?;
         eprintln!("loaded {}: n={} nnz={}", path, adj.rows, adj.nnz());
         return Ok((adj, None));
     }
@@ -144,6 +145,58 @@ const THREADS_OPT: Opt = Opt {
            under the coordinator); deterministic at any value",
     default: Some("0"),
 };
+
+/// Robustness knobs shared by the coordinator-driven subcommands.
+const FAULT_OPTS: &[Opt] = &[
+    Opt {
+        name: "fault-spec",
+        help: "arm deterministic fault injection: comma-separated site:kind[:p=P][:seed=N][:ms=N] \
+               with kinds panic|delay|poison and sites shard_run|pool_task (or env CSE_FAULT_SPEC)",
+        default: None,
+    },
+    Opt {
+        name: "max-retries",
+        help: "shard re-executions after a caught panic/blow-up before the job fails",
+        default: Some("8"),
+    },
+    Opt {
+        name: "deadline-ms",
+        help: "embedding-job deadline in milliseconds (0 = no deadline)",
+        default: Some("0"),
+    },
+];
+
+/// Arm the fault-injection registry from `--fault-spec` or the
+/// `CSE_FAULT_SPEC` environment variable (flag wins). No-op when
+/// neither is set — the disarmed fast path costs one atomic load.
+fn fault_setup(a: &Args) -> Result<(), String> {
+    let spec = a
+        .get("fault-spec")
+        .map(str::to_string)
+        .or_else(|| std::env::var(cse::fault::ENV_SPEC).ok().filter(|s| !s.is_empty()));
+    if let Some(spec) = spec {
+        cse::fault::arm(&spec)?;
+        eprintln!("fault injection armed: {spec}");
+    }
+    Ok(())
+}
+
+/// Apply `--max-retries` / `--deadline-ms` to an [`EmbedJob`].
+fn job_robustness(a: &Args, job: &mut EmbedJob) -> Result<(), String> {
+    job.max_retries = a.usize("max-retries", cse::coordinator::scheduler::DEFAULT_MAX_RETRIES)?;
+    job.deadline_ms = match a.u64("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(ms),
+    };
+    Ok(())
+}
+
+/// Post-job line making silent recoveries visible on the console.
+fn report_retries(retries: usize) {
+    if retries > 0 {
+        println!("recovered from {retries} shard failure(s) via retry");
+    }
+}
 
 const OBS_OPTS: &[Opt] = &[
     Opt {
@@ -246,11 +299,13 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
+        opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse embed", "Compressive spectral embedding of a graph", &opts));
         return Ok(());
     }
     let trace = obs_setup(&a);
+    fault_setup(&a)?;
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 0)?;
@@ -261,9 +316,10 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
     job.shard_width = a.usize("shard", 0)?;
     job.auto_threads = auto_threads;
+    job_robustness(&a, &mut job)?;
     let coord = Coordinator::new(workers);
     let t = Timer::start();
-    let res = coord.run(&na, &job);
+    let res = coord.run(&na, &job).map_err(|e| e.to_string())?;
     let secs = t.elapsed_secs();
     println!(
         "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards, {} workers x {} kernel threads) in {}",
@@ -277,6 +333,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
         res.threads,
         human_secs(secs)
     );
+    report_retries(res.retries);
     let out = a.get_or("out", "embedding.tsv");
     let rows: Vec<Vec<f64>> = (0..res.e.rows).map(|i| res.e.row(i).to_vec()).collect();
     let header: Vec<String> = (0..res.e.cols).map(|j| format!("e{j}")).collect();
@@ -344,11 +401,13 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
         return Ok(());
     }
     let trace = obs_setup(&a);
+    fault_setup(&a)?;
     let (adj, labels) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 0)?;
@@ -358,10 +417,12 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
     job.auto_threads = auto_threads;
+    job_robustness(&a, &mut job)?;
     let coord = Coordinator::new(workers);
     let t = Timer::start();
-    let res = coord.run(&na, &job);
+    let res = coord.run(&na, &job).map_err(|e| e.to_string())?;
     println!("embedding: {}", human_secs(t.elapsed_secs()));
+    report_retries(res.retries);
     let kk = a.usize("kmeans-k", 200)?;
     let restarts = a.usize("restarts", 5)?;
     let mut rng = Rng::new(a.u64("seed", 0)? + 1);
@@ -404,13 +465,20 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
                 help: "sampled top-k queries for the recall@k report (0 = skip)",
                 default: Some("50"),
             },
+            Opt {
+                name: "shed-p99-us",
+                help: "shed top-k queries once latency p99 exceeds this many µs (0 = off)",
+                default: Some("0"),
+            },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
         return Ok(());
     }
     let trace = obs_setup(&a);
+    fault_setup(&a)?;
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let workers = a.usize("workers", 2)?;
@@ -427,8 +495,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     let f = SpectralFn::Step { c: a.f64("c", 0.7)? };
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
     job.auto_threads = auto_threads;
-    let res = Coordinator::new(workers).run(&na, &job);
+    job_robustness(&a, &mut job)?;
+    let res = Coordinator::new(workers).run(&na, &job).map_err(|e| e.to_string())?;
+    report_retries(res.retries);
     let mut service = SimilarityService::new(res.e);
+    let shed = a.f64("shed-p99-us", 0.0)?;
+    if shed > 0.0 {
+        service.set_shed_threshold(Some(shed));
+        println!("load shedding armed: top-k rejected above p99 {shed} µs");
+    }
 
     // Optional ANN index over the embedding rows, with a build report.
     let defaults = SimHashParams::default();
@@ -491,6 +566,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
         service.metrics.mean_query_us()
     );
     let snap = service.metrics.snapshot();
+    if snap.queries_shed > 0 || snap.fallback_exact > 0 {
+        println!(
+            "robustness: {} queries shed, {} exact-scan fallbacks",
+            snap.queries_shed, snap.fallback_exact
+        );
+    }
     if snap.topk_queries > 0 {
         println!(
             "top-k: {} queries, mean candidate set {:.1} rows ({:.2}% of n={})",

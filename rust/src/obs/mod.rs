@@ -136,6 +136,9 @@ declare_stages! {
     SHARD_WAIT => "shard_queue_wait",
     /// Coordinator worker: running one column shard's cascade.
     SHARD_RUN => "shard_run",
+    /// Coordinator worker: re-executing a shard after a caught panic or
+    /// numerical blow-up (the fault-tolerance retry path).
+    SHARD_RETRY => "shard_retry",
     /// One serviced similarity query (corr or top-k), end to end.
     QUERY => "query",
     /// SimHash query: hyperplane projections + signature packing.
@@ -251,6 +254,40 @@ pub mod poolstats {
     }
 }
 
+/// Always-on failure/robustness counters (relaxed atomics, same budget
+/// as [`poolstats`]). Written by the coordinator retry path, the
+/// serving fallback/shedding paths, and `crate::fault`; read by
+/// [`ObsReport`] so recoveries are visible, not silent.
+pub mod failstats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Shard re-executions after a caught panic or blow-up.
+    pub static SHARD_RETRIES: AtomicU64 = AtomicU64::new(0);
+    /// Shards that exhausted their retry budget (the job failed).
+    pub static SHARD_FAILURES: AtomicU64 = AtomicU64::new(0);
+    /// Jobs/batches aborted at their deadline.
+    pub static DEADLINE_ABORTS: AtomicU64 = AtomicU64::new(0);
+    /// Top-k queries that fell back from a failed/empty ANN probe to
+    /// the exact scanner.
+    pub static FALLBACK_EXACT: AtomicU64 = AtomicU64::new(0);
+    /// Top-k queries rejected by load shedding.
+    pub static QUERIES_SHED: AtomicU64 = AtomicU64::new(0);
+    /// Faults injected by an armed `crate::fault` spec (all kinds).
+    pub static FAULTS_INJECTED: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of every failure counter.
+    pub fn capture() -> super::FailStats {
+        super::FailStats {
+            shard_retries: SHARD_RETRIES.load(Ordering::Relaxed),
+            shard_failures: SHARD_FAILURES.load(Ordering::Relaxed),
+            deadline_aborts: DEADLINE_ABORTS.load(Ordering::Relaxed),
+            fallback_exact: FALLBACK_EXACT.load(Ordering::Relaxed),
+            queries_shed: QUERIES_SHED.load(Ordering::Relaxed),
+            faults_injected: FAULTS_INJECTED.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Histogram-derived summary of one stage, all durations in µs.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StageStats {
@@ -274,6 +311,17 @@ pub struct PoolStats {
     pub worker_busy_ns: Vec<(usize, u64)>,
 }
 
+/// Failure counter snapshot (see [`failstats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FailStats {
+    pub shard_retries: u64,
+    pub shard_failures: u64,
+    pub deadline_aborts: u64,
+    pub fallback_exact: u64,
+    pub queries_shed: u64,
+    pub faults_injected: u64,
+}
+
 /// `Snapshot`-style point-in-time report over every declared stage and
 /// the pool counters — printed at job end under `--stats`, exported into
 /// the bench JSON breakdowns.
@@ -282,6 +330,7 @@ pub struct ObsReport {
     /// Stages that recorded at least one span, in [`STAGES`] order.
     pub stages: Vec<StageStats>,
     pub pool: PoolStats,
+    pub failures: FailStats,
 }
 
 impl ObsReport {
@@ -305,7 +354,7 @@ impl ObsReport {
                 })
             })
             .collect();
-        ObsReport { stages, pool: poolstats::capture() }
+        ObsReport { stages, pool: poolstats::capture(), failures: failstats::capture() }
     }
 
     /// Human-readable table (percentiles are exact on the log-bucket
@@ -351,6 +400,20 @@ impl ObsReport {
                 .collect();
             let _ = writeln!(out, "  worker busy: {}", busy.join(", "));
         }
+        // Always printed (even all-zero) in a grep-friendly k=v form:
+        // the chaos-smoke CI job parses `shard_retries=N` out of this.
+        let fs = &self.failures;
+        let _ = writeln!(
+            out,
+            "  failures: shard_retries={} shard_failures={} deadline_aborts={} \
+             fallback_exact={} queries_shed={} faults_injected={}",
+            fs.shard_retries,
+            fs.shard_failures,
+            fs.deadline_aborts,
+            fs.fallback_exact,
+            fs.queries_shed,
+            fs.faults_injected
+        );
         out
     }
 
@@ -384,9 +447,18 @@ impl ObsReport {
                     .collect(),
             ),
         );
+        let fs = &self.failures;
+        let mut failures = BTreeMap::new();
+        failures.insert("shard_retries".to_string(), Json::Num(fs.shard_retries as f64));
+        failures.insert("shard_failures".to_string(), Json::Num(fs.shard_failures as f64));
+        failures.insert("deadline_aborts".to_string(), Json::Num(fs.deadline_aborts as f64));
+        failures.insert("fallback_exact".to_string(), Json::Num(fs.fallback_exact as f64));
+        failures.insert("queries_shed".to_string(), Json::Num(fs.queries_shed as f64));
+        failures.insert("faults_injected".to_string(), Json::Num(fs.faults_injected as f64));
         let mut top = BTreeMap::new();
         top.insert("stages".to_string(), Json::Obj(stages));
         top.insert("pool".to_string(), Json::Obj(pool));
+        top.insert("failures".to_string(), Json::Obj(failures));
         Json::Obj(top)
     }
 }
@@ -471,6 +543,6 @@ mod tests {
         let n = names.len();
         names.dedup();
         assert_eq!(names.len(), n, "duplicate stage names");
-        assert_eq!(n, 14);
+        assert_eq!(n, 15);
     }
 }

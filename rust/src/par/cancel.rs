@@ -1,0 +1,113 @@
+//! Cooperative cancellation for long-running compute jobs.
+//!
+//! A [`CancelToken`] is a shared flag (plus an optional wall-clock
+//! deadline) that hot loops poll at natural checkpoints — row blocks in
+//! the SpMM kernels, recurrence steps in `apply_series_ws`, shard and
+//! stage boundaries in the coordinator. Polling is one relaxed atomic
+//! load once the flag is set (or when no deadline is attached), so the
+//! checks are free on the fast path; a deadline adds one monotonic clock
+//! read per poll until it expires, after which the cached flag answers.
+//!
+//! Cancellation is *cooperative and lossy by design*: a cancelled kernel
+//! may leave its output half-written. Callers that observe cancellation
+//! must discard the partial result (the coordinator drops the shard and
+//! reports [`crate::coordinator::JobError::DeadlineExceeded`]); nothing
+//! downstream ever reads a cancelled block, so the bitwise-determinism
+//! contract is unaffected.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A cloneable cancellation handle; all clones share one flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; trips only via [`Self::cancel`].
+    pub fn new() -> Self {
+        CancelToken::default()
+    }
+
+    /// A token that additionally trips once `timeout` has elapsed
+    /// (measured from now, checked lazily by [`Self::is_cancelled`]).
+    pub fn with_deadline(timeout: Duration) -> Self {
+        // `checked_add` so absurd timeouts degrade to "no deadline"
+        // instead of panicking on Instant overflow.
+        let deadline = Instant::now().checked_add(timeout);
+        CancelToken { inner: Arc::new(Inner { cancelled: AtomicBool::new(false), deadline }) }
+    }
+
+    /// Trip the token; every clone observes it.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the token has been cancelled or its deadline has passed.
+    /// A passed deadline latches the flag, so subsequent polls are one
+    /// relaxed load with no clock read.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        match self.inner.deadline {
+            Some(dl) if Instant::now() >= dl => {
+                self.inner.cancelled.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The attached deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!t.is_cancelled() && !c.is_cancelled());
+        c.cancel();
+        assert!(t.is_cancelled() && c.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_trips_and_latches() {
+        let t = CancelToken::with_deadline(Duration::from_millis(5));
+        assert!(t.deadline().is_some());
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(t.is_cancelled(), "deadline must trip after it passes");
+        // Latched: the flag now answers without the clock.
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn generous_deadline_does_not_trip() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled(), "manual cancel works alongside a deadline");
+    }
+
+    #[test]
+    fn absurd_timeout_degrades_to_no_deadline() {
+        let t = CancelToken::with_deadline(Duration::from_secs(u64::MAX));
+        assert!(!t.is_cancelled());
+    }
+}

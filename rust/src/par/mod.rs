@@ -46,9 +46,11 @@
 
 use std::ops::Range;
 
+mod cancel;
 mod pool;
 mod workspace;
 
+pub use cancel::CancelToken;
 pub use workspace::Workspace;
 
 /// Execution policy for a parallel region: how many OS threads to use

@@ -151,12 +151,18 @@ fn worker_loop(p: &'static Pool, id: usize) {
         let Some(JobRef(ptr)) = claim else { continue };
         let job = unsafe { &*ptr };
         let busy_from = if obs::stats_enabled() { Some(obs::now_ns()) } else { None };
-        let result = catch_unwind(AssertUnwindSafe(|| loop {
-            let k = job.cursor.fetch_add(1, Ordering::Relaxed);
-            if k >= job.tasks {
-                break;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // Chaos-test failpoint: one draw per claim, a no-op (single
+            // relaxed load) unless a fault spec is armed. An injected
+            // panic takes the exact path a real task panic does.
+            crate::fault::inject("pool_task");
+            loop {
+                let k = job.cursor.fetch_add(1, Ordering::Relaxed);
+                if k >= job.tasks {
+                    break;
+                }
+                (job.f)(k);
             }
-            (job.f)(k);
         }));
         if let Some(t0) = busy_from {
             obs::poolstats::add_worker_busy(id, obs::now_ns().saturating_sub(t0));

@@ -20,6 +20,7 @@
 
 use std::ops::Range;
 
+use super::CancelToken;
 use crate::linalg::Mat;
 
 /// A recycling arena of `f64` buffers plus partition scratch.
@@ -30,11 +31,22 @@ pub struct Workspace {
     /// (`Csr::spmm_into_ws` and friends) — cleared and refilled by
     /// [`super::even_ranges_into`] / [`super::weighted_ranges_into`].
     pub ranges: Vec<Range<usize>>,
+    /// Optional cancellation token polled by the kernels that draw
+    /// scratch from this workspace (`spmm_into_ws` at row-block
+    /// granularity, `apply_series_ws` per recurrence step). `None` —
+    /// the default — costs one `Option` discriminant branch per poll.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Workspace {
     pub const fn new() -> Self {
-        Workspace { bufs: Vec::new(), ranges: Vec::new() }
+        Workspace { bufs: Vec::new(), ranges: Vec::new(), cancel: None }
+    }
+
+    /// Whether the attached token (if any) has been tripped.
+    #[inline]
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.is_cancelled())
     }
 
     /// A zeroed buffer of exactly `len` elements, reusing the retired

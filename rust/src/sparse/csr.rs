@@ -36,7 +36,75 @@ const ROW_BLOCK_NNZ: usize = 32 * 1024;
 
 use super::coo::Coo;
 use crate::linalg::Mat;
-use crate::par::{self, ExecPolicy, Workspace};
+use crate::par::{self, CancelToken, ExecPolicy, Workspace};
+
+/// Why a matrix (or the COO triplets meant to build one) was rejected.
+///
+/// Produced by [`Csr::validate`] and [`Csr::try_from_coo`] — the
+/// ingestion guards that keep malformed or non-finite data out of the
+/// kernels, which assume sorted in-bounds indices and would otherwise
+/// silently produce garbage (or panic mid-job) deep inside a recurrence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CsrError {
+    /// `indptr` must have exactly `rows + 1` entries.
+    IndptrShape { expected_len: usize, got_len: usize },
+    /// `indptr` must start at 0 and never decrease; `row` is the first
+    /// offending position.
+    IndptrNotMonotone { row: usize },
+    /// `indptr[rows]` must equal the number of stored entries.
+    IndptrMismatch { end: usize, nnz: usize },
+    /// `indices` and `values` must have the same length.
+    ValueCountMismatch { indices: usize, values: usize },
+    /// A stored column index is out of bounds.
+    ColumnOutOfBounds { row: usize, col: usize, cols: usize },
+    /// Column indices within a row must be strictly increasing
+    /// (`prev == col` means a duplicate).
+    ColumnsNotSorted { row: usize, prev: usize, col: usize },
+    /// A stored value is NaN or infinite.
+    NonFiniteValue { row: usize, col: usize },
+    /// A COO triplet addresses a cell outside the matrix shape.
+    EntryOutOfBounds { index: usize, row: usize, col: usize, rows: usize, cols: usize },
+    /// A COO triplet carries a NaN or infinite value.
+    NonFiniteEntry { index: usize, row: usize, col: usize },
+}
+
+impl std::fmt::Display for CsrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsrError::IndptrShape { expected_len, got_len } => {
+                write!(f, "indptr has {got_len} entries, expected {expected_len}")
+            }
+            CsrError::IndptrNotMonotone { row } => {
+                write!(f, "indptr is not monotone non-decreasing at row {row}")
+            }
+            CsrError::IndptrMismatch { end, nnz } => {
+                write!(f, "indptr ends at {end} but the matrix stores {nnz} entries")
+            }
+            CsrError::ValueCountMismatch { indices, values } => {
+                write!(f, "{indices} column indices but {values} values")
+            }
+            CsrError::ColumnOutOfBounds { row, col, cols } => {
+                write!(f, "row {row} stores column {col}, out of bounds for {cols} columns")
+            }
+            CsrError::ColumnsNotSorted { row, prev, col } => write!(
+                f,
+                "row {row} columns are not strictly increasing ({prev} then {col})"
+            ),
+            CsrError::NonFiniteValue { row, col } => {
+                write!(f, "non-finite value at ({row}, {col})")
+            }
+            CsrError::EntryOutOfBounds { index, row, col, rows, cols } => write!(
+                f,
+                "COO entry {index} addresses ({row}, {col}), out of bounds for {rows}x{cols}"
+            ),
+            CsrError::NonFiniteEntry { index, row, col } => {
+                write!(f, "COO entry {index} at ({row}, {col}) is non-finite")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CsrError {}
 
 /// CSR sparse matrix (`f64` values).
 #[derive(Clone, Debug)]
@@ -53,7 +121,36 @@ pub struct Csr {
 
 impl Csr {
     /// Build from COO, summing duplicates and sorting row segments.
+    /// Panics (with the rendered [`CsrError`]) on out-of-bounds or
+    /// non-finite triplets — use [`Self::try_from_coo`] at ingestion
+    /// boundaries where malformed input is survivable.
     pub fn from_coo(coo: &Coo) -> Csr {
+        Self::try_from_coo(coo).unwrap_or_else(|e| panic!("invalid COO input: {e}"))
+    }
+
+    /// Fallible [`Self::from_coo`]: rejects triplets that address cells
+    /// outside `rows × cols` or carry NaN/infinite values, with a typed
+    /// error naming the first offender. Duplicates remain legal (they
+    /// are summed).
+    pub fn try_from_coo(coo: &Coo) -> Result<Csr, CsrError> {
+        for (k, &(i, j, v)) in coo.entries.iter().enumerate() {
+            if i >= coo.rows || j >= coo.cols {
+                return Err(CsrError::EntryOutOfBounds {
+                    index: k,
+                    row: i,
+                    col: j,
+                    rows: coo.rows,
+                    cols: coo.cols,
+                });
+            }
+            if !v.is_finite() {
+                return Err(CsrError::NonFiniteEntry { index: k, row: i, col: j });
+            }
+        }
+        Ok(Self::from_coo_unchecked(coo))
+    }
+
+    fn from_coo_unchecked(coo: &Coo) -> Csr {
         let mut counts = vec![0usize; coo.rows + 1];
         for &(i, _, _) in &coo.entries {
             counts[i + 1] += 1;
@@ -119,6 +216,67 @@ impl Csr {
         self.indices.len()
     }
 
+    /// Check every structural and numerical invariant the kernels rely
+    /// on: `indptr` shaped `rows + 1`, starting at 0, monotone, ending
+    /// at nnz; matching index/value lengths; strictly increasing
+    /// in-bounds column indices per row; finite values. `O(nnz)` — run
+    /// it once at ingestion, not per product.
+    pub fn validate(&self) -> Result<(), CsrError> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err(CsrError::IndptrShape {
+                expected_len: self.rows + 1,
+                got_len: self.indptr.len(),
+            });
+        }
+        if self.indptr[0] != 0 {
+            return Err(CsrError::IndptrNotMonotone { row: 0 });
+        }
+        for i in 0..self.rows {
+            if self.indptr[i + 1] < self.indptr[i] {
+                return Err(CsrError::IndptrNotMonotone { row: i });
+            }
+        }
+        if self.indices.len() != self.values.len() {
+            return Err(CsrError::ValueCountMismatch {
+                indices: self.indices.len(),
+                values: self.values.len(),
+            });
+        }
+        if self.indptr[self.rows] != self.indices.len() {
+            return Err(CsrError::IndptrMismatch {
+                end: self.indptr[self.rows],
+                nnz: self.indices.len(),
+            });
+        }
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let mut prev: Option<u32> = None;
+            for (&j, &v) in idx.iter().zip(val) {
+                if j as usize >= self.cols {
+                    return Err(CsrError::ColumnOutOfBounds {
+                        row: i,
+                        col: j as usize,
+                        cols: self.cols,
+                    });
+                }
+                if let Some(p) = prev {
+                    if j <= p {
+                        return Err(CsrError::ColumnsNotSorted {
+                            row: i,
+                            prev: p as usize,
+                            col: j as usize,
+                        });
+                    }
+                }
+                if !v.is_finite() {
+                    return Err(CsrError::NonFiniteValue { row: i, col: j as usize });
+                }
+                prev = Some(j);
+            }
+        }
+        Ok(())
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
         let (s, e) = (self.indptr[i], self.indptr[i + 1]);
@@ -137,11 +295,13 @@ impl Csr {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
         if exec.is_serial() {
-            self.spmm_rows(x, 1, 0..self.rows, &mut y);
+            self.spmm_rows(x, 1, 0..self.rows, &mut y, None);
             return y;
         }
         let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
-        exec.for_chunks(&ranges, &mut y, 1, |_, rows, chunk| self.spmm_rows(x, 1, rows, chunk));
+        exec.for_chunks(&ranges, &mut y, 1, |_, rows, chunk| {
+            self.spmm_rows(x, 1, rows, chunk, None)
+        });
         y
     }
 
@@ -185,16 +345,20 @@ impl Csr {
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         let _span = crate::obs::span(&crate::obs::SPMM);
         let d = x.cols;
+        // Cloning an `Option<CancelToken>` is free for `None` (the
+        // default) and one atomic refcount bump otherwise — never an
+        // allocation, so the warm-workspace zero-alloc contract holds.
+        let cancel = ws.cancel.clone();
         if exec.is_serial() {
             // Allocation-free serial path (the recursion's default): one
             // whole-matrix chunk, no partitioning.
-            self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data);
+            self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data, cancel.as_ref());
             return;
         }
         let mut ranges = std::mem::take(&mut ws.ranges);
         par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
-            self.spmm_rows(&x.data, d, rows, chunk)
+            self.spmm_rows(&x.data, d, rows, chunk, cancel.as_ref())
         });
         ws.ranges = ranges;
     }
@@ -229,15 +393,25 @@ impl Csr {
         assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
         let _span = crate::obs::span(&crate::obs::SPMM);
         let d = x.cols;
+        let cancel = ws.cancel.clone();
         if exec.is_serial() {
-            self.spmm_rows_fused(&x.data, d, 0..self.rows, &mut y.data, alpha, beta, &z.data);
+            self.spmm_rows_fused(
+                &x.data,
+                d,
+                0..self.rows,
+                &mut y.data,
+                alpha,
+                beta,
+                &z.data,
+                cancel.as_ref(),
+            );
             return;
         }
         let mut ranges = std::mem::take(&mut ws.ranges);
         par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
             let zc = &z.data[rows.start * d..rows.end * d];
-            self.spmm_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc);
+            self.spmm_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc, cancel.as_ref());
         });
         ws.ranges = ranges;
     }
@@ -267,6 +441,7 @@ impl Csr {
             beta,
             &z.data,
             max_tile.max(1),
+            None,
         );
     }
 
@@ -274,8 +449,15 @@ impl Csr {
     /// (a slice holding exactly those rows), `x` row-major with width `d`.
     /// Both the full-matrix entry points and the parallel row chunks call
     /// this, so serial and threaded execution share every float op.
-    fn spmm_rows(&self, x: &[f64], d: usize, rows: Range<usize>, y: &mut [f64]) {
-        self.spmm_rows_fused(x, d, rows, y, 1.0, 0.0, &[]);
+    fn spmm_rows(
+        &self,
+        x: &[f64],
+        d: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        cancel: Option<&CancelToken>,
+    ) {
+        self.spmm_rows_fused(x, d, rows, y, 1.0, 0.0, &[], cancel);
     }
 
     /// Row-blocked, column-tiled fused kernel for output rows `rows`:
@@ -284,6 +466,7 @@ impl Csr {
     /// [`ROW_BLOCK_NNZ`] so the CSR segment the lanes re-sweep stays
     /// cache-resident; block boundaries are cache blocking only and
     /// cannot affect bits (no row's nonzeros are ever split).
+    #[allow(clippy::too_many_arguments)]
     fn spmm_rows_fused(
         &self,
         x: &[f64],
@@ -293,8 +476,9 @@ impl Csr {
         alpha: f64,
         beta: f64,
         z: &[f64],
+        cancel: Option<&CancelToken>,
     ) {
-        self.blocked_rows_fused(x, d, rows, y, alpha, beta, z, usize::MAX);
+        self.blocked_rows_fused(x, d, rows, y, alpha, beta, z, usize::MAX, cancel);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -308,10 +492,20 @@ impl Csr {
         beta: f64,
         z: &[f64],
         max_tile: usize,
+        cancel: Option<&CancelToken>,
     ) {
         debug_assert!(beta == 0.0 || z.len() == y.len());
         let mut start = rows.start;
         while start < rows.end {
+            // Cancellation checkpoint: one poll per ~[`ROW_BLOCK_NNZ`]
+            // nonzeros. A cancelled product returns with `y` partially
+            // written — the caller that observed cancellation discards
+            // it, so partial state never reaches a result.
+            if let Some(c) = cancel {
+                if c.is_cancelled() {
+                    return;
+                }
+            }
             let budget = self.indptr[start] + ROW_BLOCK_NNZ;
             let mut end = start + 1;
             while end < rows.end && self.indptr[end + 1] <= budget {
@@ -848,6 +1042,152 @@ mod tests {
             a.spmm_axpby_into_ws(&x, 0.5, 2.0, &z, &mut y, &exec, &mut ws);
             assert_eq!(y.data, want.data, "{threads} threads");
         }
+    }
+
+    #[test]
+    fn try_from_coo_rejects_malformed_triplets() {
+        // Constructed directly: `Coo::push` debug-asserts bounds, and
+        // these tests exist precisely for data that bypassed it.
+        let oob_row = Coo { rows: 2, cols: 2, entries: vec![(2, 0, 1.0)] };
+        assert!(matches!(
+            Csr::try_from_coo(&oob_row),
+            Err(CsrError::EntryOutOfBounds { index: 0, row: 2, .. })
+        ));
+        let oob_col = Coo { rows: 2, cols: 2, entries: vec![(0, 0, 1.0), (1, 5, 1.0)] };
+        assert!(matches!(
+            Csr::try_from_coo(&oob_col),
+            Err(CsrError::EntryOutOfBounds { index: 1, col: 5, .. })
+        ));
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let c = Coo { rows: 2, cols: 2, entries: vec![(1, 1, bad)] };
+            assert!(matches!(
+                Csr::try_from_coo(&c),
+                Err(CsrError::NonFiniteEntry { index: 0, row: 1, col: 1 })
+            ));
+        }
+        // Duplicates stay legal — they sum.
+        let dup = Coo { rows: 1, cols: 1, entries: vec![(0, 0, 1.0), (0, 0, 2.0)] };
+        assert_eq!(Csr::try_from_coo(&dup).unwrap().values, vec![3.0]);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_matrices() {
+        let mut rng = Rng::new(45);
+        for _ in 0..20 {
+            let coo = random_coo(&mut rng, 1 + rng.below(30), 1 + rng.below(30), 60);
+            Csr::from_coo(&coo).validate().unwrap();
+        }
+        Csr::eye(7).validate().unwrap();
+        Csr::from_coo(&Coo::new(4, 4)).validate().unwrap(); // all rows empty
+        Csr::from_coo(&Coo::new(0, 0)).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_each_corruption_class() {
+        let base = Csr::from_coo(&Coo {
+            rows: 3,
+            cols: 4,
+            entries: vec![(0, 1, 1.0), (0, 3, 2.0), (1, 0, -1.0), (2, 2, 0.5)],
+        });
+        base.validate().unwrap();
+
+        let mut m = base.clone();
+        m.indptr.pop();
+        assert!(matches!(m.validate(), Err(CsrError::IndptrShape { .. })));
+
+        let mut m = base.clone();
+        m.indptr[1] = 3;
+        m.indptr[2] = 2; // decreasing
+        assert!(matches!(m.validate(), Err(CsrError::IndptrNotMonotone { row: 1 })));
+
+        let mut m = base.clone();
+        *m.indptr.last_mut().unwrap() += 1;
+        assert!(matches!(m.validate(), Err(CsrError::IndptrMismatch { .. })));
+
+        let mut m = base.clone();
+        m.values.pop();
+        assert!(matches!(m.validate(), Err(CsrError::ValueCountMismatch { .. })));
+
+        let mut m = base.clone();
+        m.indices[3] = 9; // row 2 stores column 9 of 4
+        assert!(matches!(
+            m.validate(),
+            Err(CsrError::ColumnOutOfBounds { row: 2, col: 9, cols: 4 })
+        ));
+
+        let mut m = base.clone();
+        m.indices.swap(0, 1); // row 0 now [3, 1]: unsorted
+        assert!(matches!(m.validate(), Err(CsrError::ColumnsNotSorted { row: 0, .. })));
+
+        let mut m = base.clone();
+        m.indices[1] = m.indices[0]; // duplicate column in row 0
+        assert!(matches!(m.validate(), Err(CsrError::ColumnsNotSorted { row: 0, .. })));
+
+        let mut m = base.clone();
+        m.values[2] = f64::NAN;
+        assert!(matches!(m.validate(), Err(CsrError::NonFiniteValue { row: 1, col: 0 })));
+    }
+
+    #[test]
+    fn validate_fuzz_rejects_random_corruptions() {
+        let mut rng = Rng::new(46);
+        for trial in 0..50 {
+            let rows = 2 + rng.below(20);
+            let cols = 2 + rng.below(20);
+            let coo = random_coo(&mut rng, rows, cols, 3 * rows);
+            let mut m = Csr::from_coo(&coo);
+            if m.nnz() == 0 {
+                continue;
+            }
+            let k = rng.below(m.nnz());
+            match rng.below(4) {
+                0 => m.indices[k] = (cols + rng.below(5)) as u32,
+                1 => m.values[k] = f64::NAN,
+                2 => {
+                    m.indptr.truncate(rows); // wrong length
+                }
+                _ => {
+                    // Force a strict-ordering violation inside some row
+                    // by duplicating its first stored column.
+                    let row = m.indptr.partition_point(|&p| p <= k) - 1;
+                    let (s, e) = (m.indptr[row], m.indptr[row + 1]);
+                    if e - s < 2 {
+                        m.indices[k] = (cols + 1) as u32; // fall back to OOB
+                    } else {
+                        let first = m.indices[s];
+                        m.indices[s + 1] = first;
+                    }
+                }
+            }
+            assert!(m.validate().is_err(), "trial {trial}: corruption went undetected");
+        }
+    }
+
+    #[test]
+    fn cancelled_workspace_aborts_spmm_before_writing() {
+        use crate::par::CancelToken;
+        let mut rng = Rng::new(47);
+        let coo = random_coo(&mut rng, 30, 30, 90);
+        let a = Csr::from_coo(&coo);
+        let x = Mat::randn(&mut rng, 30, 4);
+        let z = Mat::randn(&mut rng, 30, 4);
+        let token = CancelToken::new();
+        token.cancel();
+        let mut ws = Workspace::new();
+        ws.cancel = Some(token);
+        for threads in [1usize, 3] {
+            let exec = ExecPolicy::with_threads(threads);
+            let mut y = Mat::from_vec(30, 4, vec![7.0; 120]);
+            a.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+            assert!(y.data.iter().all(|&v| v == 7.0), "cancelled spmm must not write");
+            a.spmm_axpby_into_ws(&x, 2.0, -1.0, &z, &mut y, &exec, &mut ws);
+            assert!(y.data.iter().all(|&v| v == 7.0), "cancelled fused spmm must not write");
+        }
+        // Clearing the token restores normal operation with the same ws.
+        ws.cancel = None;
+        let mut y = Mat::zeros(30, 4);
+        a.spmm_into_ws(&x, &mut y, &ExecPolicy::serial(), &mut ws);
+        assert_eq!(y.data, a.spmm(&x).data);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Chaos tests: deterministic fault injection (`cse::fault`) against
+//! the fault-tolerant coordinator. Every test arms a failpoint spec,
+//! runs a real embedding job, and requires the recovery to be
+//! *bitwise invisible*: the surviving output must equal the fault-free
+//! run exactly, because a retried shard re-executes the same pure
+//! function of its Ω column slice.
+//!
+//! The fault registry is process-global, so every test that arms it
+//! holds `LOCK` for its whole body and disarms before releasing.
+
+use std::sync::Mutex;
+
+use cse::coordinator::{Coordinator, EmbedJob, JobError, JobResult};
+use cse::embed::Params;
+use cse::funcs::SpectralFn;
+use cse::par::ExecPolicy;
+use cse::sparse::{gen, graph, Csr};
+use cse::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn test_graph() -> Csr {
+    let mut rng = Rng::new(61);
+    let g = gen::sbm_by_degree(&mut rng, 600, 6, 7.0, 1.0);
+    graph::normalized_adjacency(&g.adj)
+}
+
+/// One-column shards → 24 shards → at least 24 deterministic fault
+/// draws per run, so a per-shard fault probability is exercised many
+/// times whatever the worker interleaving.
+fn run_job(
+    na: &Csr,
+    workers: usize,
+    threads: usize,
+    max_retries: usize,
+) -> Result<JobResult, JobError> {
+    let mut job = EmbedJob::new(
+        Params {
+            d: 24,
+            order: 24,
+            cascade: 2,
+            exec: ExecPolicy::with_threads(threads),
+            ..Params::default()
+        },
+        SpectralFn::Step { c: 0.6 },
+        19,
+    );
+    job.shard_width = 1;
+    job.max_retries = max_retries;
+    Coordinator::new(workers).run(na, &job)
+}
+
+#[test]
+fn shard_panics_are_retried_and_bitwise_invisible() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let na = test_graph();
+    cse::fault::disarm();
+    let clean = run_job(&na, 3, 1, 8).unwrap();
+    assert_eq!(clean.retries, 0);
+
+    let before = cse::fault::injected();
+    cse::fault::arm("shard_run:panic:p=0.3:seed=7").unwrap();
+    let faulted = run_job(&na, 3, 1, 8).unwrap();
+    cse::fault::disarm();
+
+    assert!(cse::fault::injected() > before, "the armed spec must actually fire");
+    assert!(faulted.retries > 0, "every injected panic costs one retry");
+    assert_eq!(clean.e.data, faulted.e.data, "recovery must be bitwise invisible");
+    assert_eq!(clean.matvecs, faulted.matvecs, "retries must not bill extra matvecs");
+}
+
+#[test]
+fn injected_delays_reorder_shard_completion_but_not_bits() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let na = test_graph();
+    cse::fault::disarm();
+    let clean = run_job(&na, 4, 1, 8).unwrap();
+
+    let before = cse::fault::injected();
+    cse::fault::arm("shard_run:delay:p=0.5:ms=2:seed=3").unwrap();
+    let delayed = run_job(&na, 4, 1, 8).unwrap();
+    cse::fault::disarm();
+
+    assert!(cse::fault::injected() > before);
+    assert_eq!(delayed.retries, 0, "a delay is not a failure");
+    assert_eq!(clean.e.data, delayed.e.data);
+}
+
+#[test]
+fn poisoned_shards_trip_the_blowup_guard_and_are_retried_clean() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let na = test_graph();
+    cse::fault::disarm();
+    let clean = run_job(&na, 3, 1, 8).unwrap();
+
+    // Poison corrupts a shard's accumulator with NaN after stage 0; the
+    // non-finite guard must catch it (instead of NaN silently reaching
+    // the output) and the retry must land a clean attempt at p = 0.5.
+    // A generous budget makes retry exhaustion (0.5^31) impossible.
+    cse::fault::arm("shard_run:poison:p=0.5:seed=5").unwrap();
+    let poisoned = run_job(&na, 3, 1, 30).unwrap();
+    cse::fault::disarm();
+
+    assert!(poisoned.retries > 0, "every poison costs one blow-up retry");
+    assert_eq!(clean.e.data, poisoned.e.data, "no NaN may survive into the output");
+    assert!(poisoned.e.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn exhausted_retry_budget_fails_typed_and_coordinator_survives() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let na = test_graph();
+    cse::fault::disarm();
+    let clean = run_job(&na, 2, 1, 8).unwrap();
+
+    cse::fault::arm("shard_run:panic:p=1.0:seed=1").unwrap();
+    let err = run_job(&na, 2, 1, 1).unwrap_err();
+    cse::fault::disarm();
+
+    match err {
+        JobError::ShardFailed { attempts, ref reason, .. } => {
+            assert_eq!(attempts, 2, "budget of 1 retry = 2 attempts");
+            assert!(reason.contains("fault injected"), "reason carries the payload: {reason}");
+        }
+        other => panic!("expected ShardFailed, got {other:?}"),
+    }
+    // The process survived a certain-panic storm; the same pool now
+    // runs a healthy job to the same bits as before.
+    let after = run_job(&na, 2, 1, 8).unwrap();
+    assert_eq!(clean.e.data, after.e.data);
+}
+
+#[test]
+fn pool_task_panics_inside_kernels_are_contained() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let na = test_graph();
+    cse::fault::disarm();
+    let clean = run_job(&na, 2, 3, 8).unwrap();
+
+    // Faults at the pool-task site unwind out of the kernel region into
+    // the shard attempt, which catches and retries — two layers below
+    // the coordinator. The site draws once per helper claim, and a
+    // shard attempt spans dozens of kernel regions, so p stays tiny
+    // (each fire dooms the whole attempt) and the retry budget large.
+    let before = cse::fault::injected();
+    cse::fault::arm("pool_task:panic:p=0.002:seed=9").unwrap();
+    let faulted = run_job(&na, 2, 3, 50).unwrap();
+    cse::fault::disarm();
+
+    assert_eq!(clean.e.data, faulted.e.data, "pool-level recovery must be bitwise invisible");
+    if cse::fault::injected() > before {
+        assert!(faulted.retries > 0, "a fired pool fault must have cost a shard retry");
+    }
+}

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use cse::coordinator::queue::BoundedQueue;
 use cse::coordinator::service::{Answer, Query};
-use cse::coordinator::{Coordinator, EmbedJob, QueryBatch, SimilarityService};
+use cse::coordinator::{Coordinator, EmbedJob, JobError, QueryBatch, SimilarityService};
 use cse::embed::Params;
 use cse::funcs::SpectralFn;
 use cse::linalg::Mat;
@@ -26,7 +26,7 @@ fn many_sequential_jobs_share_a_coordinator() {
             SpectralFn::Step { c: 0.5 },
             seed,
         );
-        let res = coord.run(&na, &job);
+        let res = coord.run(&na, &job).unwrap();
         assert_eq!(res.e.cols, 16);
         total_matvecs += res.matvecs;
     }
@@ -45,13 +45,13 @@ fn narrow_shards_and_many_workers_stress() {
         9,
     );
     job.shard_width = 1; // 33 shards, maximal contention
-    let res = Coordinator::new(8).run(&na, &job);
+    let res = Coordinator::new(8).run(&na, &job).unwrap();
     assert_eq!(res.shards, 33);
     assert_eq!(res.e.cols, 33);
     assert!(res.e.data.iter().all(|v| v.is_finite()));
 
     // Must equal the 1-worker result exactly.
-    let res1 = Coordinator::new(1).run(&na, &job);
+    let res1 = Coordinator::new(1).run(&na, &job).unwrap();
     assert_eq!(res.e.data, res1.e.data);
 }
 
@@ -86,6 +86,7 @@ fn service_survives_concurrent_mixed_batches() {
                             assert!(w[0].1 >= w[1].1);
                         }
                     }
+                    Answer::Shed => panic!("no shed threshold was configured"),
                 }
             }
             answers.len()
@@ -133,9 +134,43 @@ fn job_is_reproducible_across_processes_semantics() {
         )
     };
     let coord = Coordinator::new(2);
-    let a = coord.run(&na, &mk(1));
-    let b = coord.run(&na, &mk(1));
-    let c = coord.run(&na, &mk(2));
+    let a = coord.run(&na, &mk(1)).unwrap();
+    let b = coord.run(&na, &mk(1)).unwrap();
+    let c = coord.run(&na, &mk(2)).unwrap();
     assert_eq!(a.e.data, b.e.data);
     assert_ne!(a.e.data, c.e.data);
+}
+
+#[test]
+fn short_deadline_job_aborts_promptly_and_pool_survives() {
+    let mut rng = Rng::new(25);
+    let g = gen::sbm_by_degree(&mut rng, 2000, 8, 8.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let mut job = EmbedJob::new(
+        Params { d: 32, order: 200, cascade: 2, ..Params::default() },
+        SpectralFn::Step { c: 0.6 },
+        13,
+    );
+    job.shard_width = 2;
+    job.deadline_ms = Some(1); // far below what order-200 over 16 shards needs
+    let coord = Coordinator::new(3);
+    let t = std::time::Instant::now();
+    let err = coord.run(&na, &job).unwrap_err();
+    // Cancellation is cooperative but fine-grained (row blocks, series
+    // steps, shard boundaries) — the abort must land promptly, not
+    // after the job would have finished anyway.
+    assert!(t.elapsed() < std::time::Duration::from_secs(30), "abort took {:?}", t.elapsed());
+    match err {
+        JobError::DeadlineExceeded { done, total, .. } => {
+            assert_eq!(total, 16);
+            assert!(done < total, "a 1 ms deadline cannot complete all shards");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // The coordinator and its pool stay reusable after an abort.
+    job.deadline_ms = None;
+    job.params.order = 12;
+    let res = coord.run(&na, &job).unwrap();
+    assert_eq!(res.e.cols, 32);
+    assert!(res.e.data.iter().all(|v| v.is_finite()));
 }

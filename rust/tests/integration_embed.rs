@@ -107,7 +107,7 @@ fn coordinator_matches_library_end_to_end() {
     let job = EmbedJob::new(params.clone(), f.clone(), 77);
 
     let coord = Coordinator::new(2);
-    let res = coord.run(&na, &job);
+    let res = coord.run(&na, &job).unwrap();
 
     // The library path with the same seed derives the same Ω.
     let mut rng2 = Rng::new(77);

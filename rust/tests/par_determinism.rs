@@ -11,6 +11,8 @@
 //! regions and repeated workspace-backed calls give the same bits as
 //! fresh-allocation serial runs.
 
+use std::sync::Mutex;
+
 use cse::cluster::{kmeans, KmeansParams};
 use cse::coordinator::{Coordinator, EmbedJob};
 use cse::eigen::lanczos::{lanczos, LanczosParams};
@@ -29,6 +31,11 @@ use cse::sparse::{gen, graph, Csr};
 use cse::util::rng::Rng;
 
 const THREADS: [usize; 3] = [1, 2, 4];
+
+/// The fault-injection registry is process-global: tests that run
+/// coordinator jobs while a `shard_run` spec may be armed must not
+/// overlap, or one test's injected panics leak into the other's runs.
+static SHARD_RUN_LOCK: Mutex<()> = Mutex::new(());
 
 fn random_csr(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Csr {
     let mut coo = Coo::new(rows, cols);
@@ -153,6 +160,7 @@ fn fastembed_pipeline_thread_count_invariant() {
 
 #[test]
 fn coordinator_pipeline_invariant_across_both_parallel_axes() {
+    let _guard = SHARD_RUN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let mut rng = Rng::new(44);
     let g = gen::sbm_by_degree(&mut rng, 900, 6, 7.0, 1.0);
     let na = graph::normalized_adjacency(&g.adj);
@@ -163,7 +171,7 @@ fn coordinator_pipeline_invariant_across_both_parallel_axes() {
             11,
         );
         job.params.exec = ExecPolicy::with_threads(threads);
-        Coordinator::new(workers).run(&na, &job)
+        Coordinator::new(workers).run(&na, &job).unwrap()
     };
     let base = run(1, 1);
     for (workers, threads) in [(1usize, 4usize), (2, 2), (4, 1), (3, 4)] {
@@ -171,6 +179,37 @@ fn coordinator_pipeline_invariant_across_both_parallel_axes() {
         assert_eq!(base.e.data, res.e.data, "workers={workers} threads={threads}");
         assert_eq!(base.matvecs, res.matvecs);
     }
+}
+
+/// Retry-path determinism: a run that recovers from injected shard
+/// panics must be bitwise-identical to the fault-free run — a retried
+/// shard re-executes from its own Ω column slice, so recovery is
+/// invisible in both the embedding and the matvec accounting.
+#[test]
+fn injected_shard_panics_leave_the_embedding_bitwise_identical() {
+    let _guard = SHARD_RUN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(52);
+    let g = gen::sbm_by_degree(&mut rng, 800, 6, 7.0, 1.0);
+    let na = graph::normalized_adjacency(&g.adj);
+    let run = || {
+        let mut job = EmbedJob::new(
+            Params { d: 20, order: 24, cascade: 2, ..Params::default() },
+            SpectralFn::Step { c: 0.6 },
+            17,
+        );
+        job.shard_width = 1; // 20 shards → 20+ deterministic fault draws
+        job.max_retries = 30; // p=0.5: exhaustion (0.5^31) is impossible
+        Coordinator::new(3).run(&na, &job).unwrap()
+    };
+    cse::fault::disarm();
+    let clean = run();
+    cse::fault::arm("shard_run:panic:p=0.5:seed=11").unwrap();
+    let faulted = run();
+    cse::fault::disarm();
+    assert!(faulted.retries > 0, "p=0.5 over 20 shards should fire at least once");
+    assert_eq!(clean.e.data, faulted.e.data, "retries must be bitwise invisible");
+    assert_eq!(clean.matvecs, faulted.matvecs, "retries must not bill extra matvecs");
+    assert_eq!(clean.retries, 0);
 }
 
 #[test]
