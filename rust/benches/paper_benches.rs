@@ -33,7 +33,7 @@ use cse::index::{evaluate_recall, AnnIndex, RecallReport, SimHashIndex, SimHashP
 use cse::linalg::Mat;
 use cse::par::ExecPolicy;
 use cse::poly::{cascade, chebyshev, legendre, Basis};
-use cse::sparse::{gen, graph, io, Csr};
+use cse::sparse::{gen, graph, io, tune, Csr, SellCs};
 use cse::util::json::Json;
 use cse::util::rng::Rng;
 use cse::util::stats;
@@ -839,7 +839,9 @@ fn recursion_allocs(na: &Csr, x: &Mat, order: usize, exec: &ExecPolicy) -> (f64,
 /// pre-refactor serial SpMM loop inlined as a reference so regressions of
 /// the 1-thread path are visible; a d=128 column-tiled headroom row
 /// (`spmm_tiled_gflops` — the register-blocked lanes vs the scalar
-/// reference, bitwise-checked); fused-step accounting
+/// reference, bitwise-checked); sparse-format rows (CSR vs SELL-C-σ at
+/// d=128 on the uniform and a power-law graph, bitwise-asserted, plus
+/// the autotuner's pick on the power-law graph); fused-step accounting
 /// (`fused_step_passes` — every interior recurrence step must arrive
 /// through the one-pass axpby entry); region-dispatch overhead of the
 /// persistent pool vs the scoped-spawn baseline; and allocs/iteration of
@@ -981,6 +983,77 @@ fn kernels() {
          scalar reference {:.1}ms -> {tiled_speedup_d128:.2}x (want >= 1.3x)",
         tiled.mean_secs * 1e3,
         reference_wide.mean_secs * 1e3
+    );
+
+    // Sparse-format comparison at d=128, two degree regimes. On the
+    // uniform-degree SBM graph above CSR is already well shaped — the CI
+    // gate only holds SELL-C-σ to >= 0.95x of it. On a power-law
+    // Barabási–Albert graph the σ-window sort packs hub and leaf rows
+    // into separate slices and SELL should win outright (the tentpole's
+    // >= 1.2x acceptance row). Both are asserted bitwise against CSR.
+    let exec1 = ExecPolicy::serial();
+    let mut ws = cse::par::Workspace::new();
+    let sell = SellCs::from_csr_default(&na).unwrap();
+    let mut yw_sell = Mat::zeros(n, d_wide);
+    let sell_uni = cse::util::timer::bench(reps, || {
+        sell.spmm_into_ws(&xw, &mut yw_sell, &exec1, &mut ws)
+    });
+    assert_eq!(yw_sell.data, yw_ref.data, "SELL must match CSR bitwise (uniform)");
+    let mut yw_csr = Mat::zeros(n, d_wide);
+    let csr_uni = cse::util::timer::bench(reps, || {
+        na.spmm_into_ws(&xw, &mut yw_csr, &exec1, &mut ws)
+    });
+    let format_speedup_sell_vs_csr = csr_uni.mean_secs / sell_uni.mean_secs;
+
+    let n_pl = (n / 2).max(1_000);
+    let g_pl = gen::barabasi_albert(&mut rng, n_pl, 8);
+    let na_pl = graph::normalized_adjacency(&g_pl.adj);
+    let nnz_pl = na_pl.nnz();
+    let sell_pl = SellCs::from_csr_default(&na_pl).unwrap();
+    let x_pl = Mat::randn(&mut rng, n_pl, d_wide);
+    let mut y_pl_csr = Mat::zeros(n_pl, d_wide);
+    let csr_pl = cse::util::timer::bench(reps, || {
+        na_pl.spmm_into_ws(&x_pl, &mut y_pl_csr, &exec1, &mut ws)
+    });
+    let mut y_pl_sell = Mat::zeros(n_pl, d_wide);
+    let sell_pl_t = cse::util::timer::bench(reps, || {
+        sell_pl.spmm_into_ws(&x_pl, &mut y_pl_sell, &exec1, &mut ws)
+    });
+    assert_eq!(y_pl_sell.data, y_pl_csr.data, "SELL must match CSR bitwise (power-law)");
+    let flops_pl = (2 * nnz_pl * d_wide) as f64;
+    let format_speedup_sell_vs_csr_powerlaw = csr_pl.mean_secs / sell_pl_t.mean_secs;
+    println!(
+        "\n{:<34} {:>10} {:>10} {:>9} {:>9}",
+        "format @ d=128", "csr", "sell", "speedup", "padding"
+    );
+    println!(
+        "{:<34} {:>7.2} GF {:>7.2} GF {:>8.2}x {:>8.1}%",
+        format!("uniform SBM (cv={:.2})", cse::sparse::degree_cv(&na)),
+        flops_wide / csr_uni.mean_secs / 1e9,
+        flops_wide / sell_uni.mean_secs / 1e9,
+        format_speedup_sell_vs_csr,
+        100.0 * sell.padding_ratio()
+    );
+    println!(
+        "{:<34} {:>7.2} GF {:>7.2} GF {:>8.2}x {:>8.1}%",
+        format!("power-law BA (cv={:.2})", cse::sparse::degree_cv(&na_pl)),
+        flops_pl / csr_pl.mean_secs / 1e9,
+        flops_pl / sell_pl_t.mean_secs / 1e9,
+        format_speedup_sell_vs_csr_powerlaw,
+        100.0 * sell_pl.padding_ratio()
+    );
+
+    // Autotune point on the power-law graph, recorded in the trajectory
+    // so regressions of the sweep itself (cost or pick) are visible.
+    let tp = tune::tune(&na_pl, d_wide);
+    let tuned_format = match tp.format {
+        tune::TunedFormat::Sell => "sell-c-sigma",
+        tune::TunedFormat::Csr => "csr",
+    };
+    println!(
+        "autotune (power-law, d={d_wide}): {tuned_format} max_tile={} row_block_nnz={} \
+         (csr {:.2} GF, sell {:.2} GF; swept in {:.1} ms)",
+        tp.cfg.max_tile, tp.cfg.row_block_nnz, tp.csr_gflops, tp.sell_gflops, tp.tune_ms
     );
 
     // Fused-step accounting: wrap the operator and count which entry
@@ -1150,6 +1223,23 @@ fn kernels() {
         ("spmm_tiled_gflops", Json::Num(spmm_tiled_gflops)),
         ("spmm_reference_d128_secs", Json::Num(reference_wide.mean_secs)),
         ("tiled_speedup_vs_reference_d128", Json::Num(tiled_speedup_d128)),
+        ("format_speedup_sell_vs_csr", Json::Num(format_speedup_sell_vs_csr)),
+        (
+            "format_speedup_sell_vs_csr_powerlaw",
+            Json::Num(format_speedup_sell_vs_csr_powerlaw),
+        ),
+        ("sell_padding_ratio_powerlaw", Json::Num(sell_pl.padding_ratio())),
+        (
+            "autotune",
+            obj(vec![
+                ("format", Json::Str(tuned_format.to_string())),
+                ("max_tile", Json::Num(tp.cfg.max_tile as f64)),
+                ("row_block_nnz", Json::Num(tp.cfg.row_block_nnz as f64)),
+                ("csr_gflops", Json::Num(tp.csr_gflops)),
+                ("sell_gflops", Json::Num(tp.sell_gflops)),
+                ("tune_ms", Json::Num(tp.tune_ms)),
+            ]),
+        ),
         ("fused_step_passes", Json::Num(fused_step_passes as f64)),
         ("results", Json::Arr(json_rows)),
         ("dispatch", Json::Arr(dispatch_json)),
@@ -1177,7 +1267,8 @@ fn kernels() {
             Json::Str(
                 "appended per `cargo bench -- kernels` run; keep spmm_gflops, \
                  spmm_tiled_gflops, dispatch pool-vs-scoped, and warm-workspace allocs \
-                 (= 0) monotone across perf PRs; fused_step_passes must stay 1"
+                 (= 0) monotone across perf PRs; fused_step_passes must stay 1; \
+                 format_speedup_sell_vs_csr must stay >= 0.95 on the uniform graph"
                     .to_string(),
             ),
         ),

@@ -23,6 +23,12 @@
 //! Each shard worker owns a [`Workspace`], so after its first shard the
 //! recursion's steady state performs zero heap allocations (the shard
 //! blocks themselves recycle through the same arena).
+//!
+//! The scheduler is generic over [`Operator`], so shard workers run the
+//! same code on any sparse backend — the CLI hands it a
+//! `crate::sparse::SparseMat` (CSR or SELL-C-σ, `--format`/`--tune`
+//! resolved), and because every backend's products are
+//! bitwise-identical, the format choice never shows up in results.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -4,6 +4,9 @@
 //! drives residuals to machine precision, matching what ARPACK delivers
 //! on the paper's testbed. Cost is Ω(k·T) matvecs + O(n·m²) reorth work —
 //! exactly the scaling wall (§1 bottleneck (a)) FastEmbed sidesteps.
+//! Generic over [`Operator`], so it runs unchanged on any sparse
+//! backend (`crate::sparse::SparseMat` dispatches CSR or SELL-C-σ with
+//! bitwise-identical matvecs).
 
 use super::PartialEig;
 use crate::embed::op::Operator;

@@ -1,6 +1,9 @@
 //! Simultaneous (orthogonal) iteration [13] — the second classic Ω(kT)
 //! iterative eigensolver named in §2. Converges on the dominant-|λ|
 //! invariant subspace; a final Rayleigh–Ritz rotation yields eigenpairs.
+//! Generic over [`Operator`]: the filtered block products run on
+//! whichever sparse backend the caller built (CSR or SELL-C-σ behind
+//! `crate::sparse::SparseMat`), with bitwise-identical results.
 
 use super::PartialEig;
 use crate::embed::fastembed::apply_series_ws;

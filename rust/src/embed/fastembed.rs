@@ -1,5 +1,7 @@
 //! Algorithm 1 (FASTEMBEDEIG) + §3.5 general-matrix embedding + §4
-//! cascading, generic over [`Operator`].
+//! cascading, generic over [`Operator`] — so the driver is agnostic to
+//! the sparse storage format behind the block products (CSR or
+//! SELL-C-σ via `crate::sparse::SparseMat`, both bitwise-identical).
 
 use super::norm::{spectral_norm, NormEstParams};
 use super::omega::rademacher_omega;

@@ -2,9 +2,12 @@
 //!
 //! FastEmbed only ever touches the matrix through block products `S·Q`
 //! (paper's key structural property), so the driver is generic over
-//! [`Operator`]. Implementations here: CSR (the scalable native path),
-//! dense (oracles/tests), and an affine wrapper for §3.4 spectrum
-//! rescaling. `crate::runtime::PjrtOp` adds the AOT/PJRT tile path.
+//! [`Operator`]. Implementations here: CSR and SELL-C-σ (the scalable
+//! native paths, interchangeable bit-for-bit), [`SparseMat`] (the
+//! format-choice wrapper the CLI builds, carrying the autotuner's
+//! kernel configuration), dense (oracles/tests), and an affine wrapper
+//! for §3.4 spectrum rescaling. `crate::runtime::PjrtOp` adds the
+//! AOT/PJRT tile path.
 //!
 //! Every application takes an [`ExecPolicy`]: the block product is the
 //! parallelizable unit (the paper's "parallel across starting vectors",
@@ -13,7 +16,7 @@
 
 use crate::linalg::Mat;
 use crate::par::{self, ExecPolicy, Workspace};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, SellCs, SparseMat};
 
 /// A symmetric linear operator usable by the recursion.
 pub trait Operator {
@@ -110,6 +113,75 @@ impl Operator for Csr {
 
     fn nnz(&self) -> usize {
         Csr::nnz(self)
+    }
+}
+
+impl Operator for SellCs {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols, "operator must be square");
+        self.rows
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        let mut ws = Workspace::new();
+        self.spmm_into_ws(x, y, exec, &mut ws);
+    }
+
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.spmm_into_ws(x, y, exec, ws);
+    }
+
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        self.spmm_axpby_into_ws(x, alpha, beta, z, y, exec, ws);
+    }
+
+    fn nnz(&self) -> usize {
+        SellCs::nnz(self)
+    }
+}
+
+/// The format-choice wrapper: whichever backend `--format`/the
+/// autotuner picked, the products are bitwise-identical, so solvers and
+/// the coordinator stay format-agnostic.
+impl Operator for SparseMat {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows(), self.cols(), "operator must be square");
+        self.rows()
+    }
+
+    fn apply_into(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy) {
+        let mut ws = Workspace::new();
+        self.spmm_into_ws(x, y, exec, &mut ws);
+    }
+
+    fn apply_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.spmm_into_ws(x, y, exec, ws);
+    }
+
+    fn apply_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        self.spmm_axpby_into_ws(x, alpha, beta, z, y, exec, ws);
+    }
+
+    fn nnz(&self) -> usize {
+        SparseMat::nnz(self)
     }
 }
 

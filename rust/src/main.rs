@@ -28,7 +28,7 @@ use cse::funcs::SpectralFn;
 use cse::index::{evaluate_recall, AnnIndex, ExactIndex, SimHashIndex, SimHashParams};
 use cse::par::ExecPolicy;
 use cse::poly::Basis;
-use cse::sparse::{gen, graph, io, Csr};
+use cse::sparse::{gen, graph, io, tune, Csr, FormatChoice, KernelCfg, SparseMat};
 use cse::util::args::{usage, Args, Opt};
 use cse::util::rng::Rng;
 use cse::util::timer::Timer;
@@ -137,6 +137,65 @@ fn embed_params(a: &Args) -> Result<Params, String> {
         norm_est: None, // normalized adjacency: ||S|| <= 1 by construction
         exec: exec_from(a)?,
     })
+}
+
+/// Sparse-backend knobs shared by the iterating subcommands.
+const FORMAT_OPTS: &[Opt] = &[
+    Opt {
+        name: "format",
+        help: "sparse storage backend: csr|sell|auto (auto = SELL-C-sigma when the \
+               degree distribution's coefficient of variation crosses 0.75); \
+               every backend produces bitwise-identical results",
+        default: Some("auto"),
+    },
+    Opt {
+        name: "tune",
+        help: "micro-benchmark kernel lane width x block budget x format on the \
+               actual matrix before the job and run with the fastest point (flag; \
+               cached per matrix shape for the process lifetime)",
+        default: None,
+    },
+];
+
+/// RHS-width hint for the autotuner: the block width the job will
+/// actually iterate with (0 = the scheduler's `6 ln n` auto-pick).
+fn tune_d_hint(d: usize, n: usize) -> usize {
+    if d > 0 {
+        d
+    } else {
+        (6.0 * (n.max(2) as f64).ln()).ceil() as usize
+    }
+}
+
+/// Resolve `--format`/`--tune` into the sparse backend the job iterates.
+/// `--tune` measures the actual matrix (cached per shape); its kernel
+/// configuration always applies, but its format pick only overrides
+/// `--format auto` — an explicit csr/sell request is honored.
+fn build_operator(a: &Args, na: Csr, d_hint: usize) -> Result<SparseMat, String> {
+    let mut choice = FormatChoice::parse(a.get_or("format", "auto"))?;
+    let mut cfg = KernelCfg::default();
+    if a.flag("tune") {
+        let p = tune::tune(&na, d_hint);
+        cfg = p.cfg;
+        if choice == FormatChoice::Auto {
+            choice = match p.format {
+                tune::TunedFormat::Sell => FormatChoice::Sell,
+                tune::TunedFormat::Csr => FormatChoice::Csr,
+            };
+        }
+        let provenance = if p.cached {
+            "cached".to_string()
+        } else {
+            format!("swept in {:.1} ms", p.tune_ms)
+        };
+        eprintln!(
+            "autotune (d={}): csr {:.2} GFLOP/s, sell {:.2} GFLOP/s -> max_tile={} row_block_nnz={} ({provenance})",
+            d_hint, p.csr_gflops, p.sell_gflops, p.cfg.max_tile, p.cfg.row_block_nnz
+        );
+    }
+    let op = SparseMat::build(na, choice, cfg).map_err(|e| e.to_string())?;
+    eprintln!("sparse backend: {} ({})", op.format_name(), human_bytes(op.mem_bytes()));
+    Ok(op)
 }
 
 const THREADS_OPT: Opt = Opt {
@@ -277,7 +336,7 @@ fn cmd_gen_graph(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -299,6 +358,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             },
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
+        opts.extend_from_slice(FORMAT_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse embed", "Compressive spectral embedding of a graph", &opts));
@@ -308,6 +368,8 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     fault_setup(&a)?;
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
+    let n = na.rows;
+    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
     let workers = a.usize("workers", 0)?;
     let mut params = embed_params(&a)?;
     let (exec, auto_threads) = coord_exec(&a)?;
@@ -319,11 +381,11 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     job_robustness(&a, &mut job)?;
     let coord = Coordinator::new(workers);
     let t = Timer::start();
-    let res = coord.run(&na, &job).map_err(|e| e.to_string())?;
+    let res = coord.run(&op, &job).map_err(|e| e.to_string())?;
     let secs = t.elapsed_secs();
     println!(
         "embedded n={} into d={} (order={}, b={}, {} matvecs, {} shards, {} workers x {} kernel threads) in {}",
-        na.rows,
+        n,
         res.e.cols,
         job.params.order,
         res.plan.b,
@@ -344,7 +406,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -352,6 +414,7 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "eig-k", help: "number of eigenpairs", default: Some("50") },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(FORMAT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse eig", "Partial eigendecomposition baselines", &opts));
         return Ok(());
@@ -360,13 +423,14 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let k = a.usize("eig-k", 50)?;
+    let op = build_operator(&a, na, k)?;
     let exec = exec_from(&a)?;
     let mut rng = Rng::new(a.u64("seed", 0)?);
     let t = Timer::start();
     let pe = match a.get_or("solver", "lanczos") {
-        "lanczos" => lanczos(&na, k, &LanczosParams { exec, ..Default::default() }, &mut rng),
-        "rsvd" => rsvd(&na, k, &RsvdParams { exec, ..Default::default() }, &mut rng),
-        "simult" => simultaneous_iteration(&na, k, 100, &mut rng, &exec),
+        "lanczos" => lanczos(&op, k, &LanczosParams { exec, ..Default::default() }, &mut rng),
+        "rsvd" => rsvd(&op, k, &RsvdParams { exec, ..Default::default() }, &mut rng),
+        "simult" => simultaneous_iteration(&op, k, 100, &mut rng, &exec),
         s => return Err(format!("unknown solver '{s}'")),
     };
     println!(
@@ -385,7 +449,7 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -401,6 +465,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(FORMAT_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
@@ -410,6 +475,8 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     fault_setup(&a)?;
     let (adj, labels) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
+    let n = na.rows;
+    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 80)?, n))?;
     let workers = a.usize("workers", 0)?;
     let mut params = Params { d: a.usize("d", 80)?, ..embed_params(&a)? };
     let (exec, auto_threads) = coord_exec(&a)?;
@@ -420,7 +487,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     job_robustness(&a, &mut job)?;
     let coord = Coordinator::new(workers);
     let t = Timer::start();
-    let res = coord.run(&na, &job).map_err(|e| e.to_string())?;
+    let res = coord.run(&op, &job).map_err(|e| e.to_string())?;
     println!("embedding: {}", human_secs(t.elapsed_secs()));
     report_retries(res.retries);
     let kk = a.usize("kmeans-k", 200)?;
@@ -445,7 +512,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -472,6 +539,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
             },
             THREADS_OPT,
         ]);
+        opts.extend_from_slice(FORMAT_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
@@ -481,6 +549,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     fault_setup(&a)?;
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
+    let n = na.rows;
+    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
     let workers = a.usize("workers", 2)?;
     // Query-phase worker pool: `0` auto-sizes to the core count (the
     // coordinator separately auto-composes its own shard split).
@@ -496,7 +566,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     let mut job = EmbedJob::new(params, f, a.u64("seed", 0)?);
     job.auto_threads = auto_threads;
     job_robustness(&a, &mut job)?;
-    let res = Coordinator::new(workers).run(&na, &job).map_err(|e| e.to_string())?;
+    let res = Coordinator::new(workers).run(&op, &job).map_err(|e| e.to_string())?;
     report_retries(res.retries);
     let mut service = SimilarityService::new(res.e);
     let shed = a.f64("shed-p99-us", 0.0)?;

@@ -118,8 +118,11 @@ macro_rules! declare_stages {
 }
 
 declare_stages! {
-    /// One `Csr::spmm_into_ws` sparse block-product.
+    /// One sparse block-product (`spmm_into_ws`, CSR or SELL-C-σ).
     SPMM => "spmm",
+    /// One runtime kernel-autotune sweep (`sparse::tune`, cache misses
+    /// only — cache hits never enter the tuner).
+    AUTOTUNE => "autotune",
     /// One polynomial three-term-recursion pass (`apply_series_ws`).
     APPLY_SERIES => "apply_series",
     /// One CGS2/MGS orthonormalization (`mgs_orthonormalize_ws`).
@@ -543,6 +546,6 @@ mod tests {
         let n = names.len();
         names.dedup();
         assert_eq!(names.len(), n, "duplicate stage names");
-        assert_eq!(n, 15);
+        assert_eq!(n, 16);
     }
 }

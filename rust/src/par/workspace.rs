@@ -31,16 +31,22 @@ pub struct Workspace {
     /// (`Csr::spmm_into_ws` and friends) — cleared and refilled by
     /// [`super::even_ranges_into`] / [`super::weighted_ranges_into`].
     pub ranges: Vec<Range<usize>>,
+    /// Reusable partition scratch for the SELL-C-σ kernels, which
+    /// partition *slices* rather than rows. Separate from
+    /// [`Self::ranges`] so a format-mixed pipeline (e.g. CSR transpose
+    /// feeding SELL products) never thrashes one list between layouts.
+    pub slice_ranges: Vec<Range<usize>>,
     /// Optional cancellation token polled by the kernels that draw
-    /// scratch from this workspace (`spmm_into_ws` at row-block
-    /// granularity, `apply_series_ws` per recurrence step). `None` —
-    /// the default — costs one `Option` discriminant branch per poll.
+    /// scratch from this workspace (`spmm_into_ws` at row-block or
+    /// slice-block granularity, `apply_series_ws` per recurrence step).
+    /// `None` — the default — costs one `Option` discriminant branch
+    /// per poll.
     pub cancel: Option<CancelToken>,
 }
 
 impl Workspace {
     pub const fn new() -> Self {
-        Workspace { bufs: Vec::new(), ranges: Vec::new(), cancel: None }
+        Workspace { bufs: Vec::new(), ranges: Vec::new(), slice_ranges: Vec::new(), cancel: None }
     }
 
     /// Whether the attached token (if any) has been tripped.

@@ -12,15 +12,21 @@
 //! ## Kernel shape (bandwidth-oriented)
 //!
 //! The multi-RHS product is column-tiled: the d right-hand-side columns
-//! are processed in register-blocked lanes of width 8, then 4, then a
-//! scalar remainder, so each nonzero's `(u32 index, f64 value)` load is
+//! are processed in register-blocked lanes (by default width 8, then 4,
+//! then a scalar remainder; the runtime autotuner in
+//! [`super::tune`] can raise the cap to 16 or lower it via
+//! [`KernelCfg`]), so each nonzero's `(u32 index, f64 value)` load is
 //! amortized across the whole lane and the lane accumulator lives in
 //! registers for all of a row's nonzeros (the output row is written
 //! exactly once per lane). Row blocks are additionally bounded by a
-//! nonzero budget so the CSR segment a lane sweep re-reads stays
-//! cache-resident. `spmm_axpby_into_ws` fuses the three-term
-//! recurrence's scale-and-subtract (`y = alpha·(A·x) + beta·z`) into
-//! the same write-back, collapsing three output passes into one.
+//! nonzero budget (also autotunable) so the CSR segment a lane sweep
+//! re-reads stays cache-resident. `spmm_axpby_into_ws` fuses the
+//! three-term recurrence's scale-and-subtract
+//! (`y = alpha·(A·x) + beta·z`) into the same write-back, collapsing
+//! three output passes into one. With the opt-in `simd` cargo feature
+//! the width-8 lane uses explicit AVX2/NEON intrinsics when the host
+//! supports them ([`super::simd`]); the ops and their order are the
+//! same as the autovectorized path, so the bits are too.
 //!
 //! Determinism: tiling splits *columns* and blocking splits *rows*;
 //! neither ever splits a row's nonzeros, so every output element is
@@ -33,6 +39,43 @@ use std::ops::Range;
 /// segment (12 bytes per nonzero) stays L2-resident while the column
 /// lanes sweep it repeatedly (~384 KiB of index+value traffic per sweep).
 const ROW_BLOCK_NNZ: usize = 32 * 1024;
+
+/// Default column-lane width cap: lanes of 8, then 4, then scalar. The
+/// autotuner may raise it to 16 for wide-d workloads via [`KernelCfg`];
+/// the cap moves lane boundaries only and can never change output bits.
+pub const DEFAULT_MAX_TILE: usize = 8;
+
+/// Kernel tuning knobs shared by the CSR and SELL-C-σ backends: the
+/// column-lane width cap and the stored-entry budget per row/slice
+/// block. Defaults reproduce the untuned kernels exactly; the runtime
+/// autotuner ([`super::tune`]) picks alternatives by measuring the
+/// actual matrix. Both knobs move loop boundaries only — no `KernelCfg`
+/// can change a single output bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelCfg {
+    /// Widest column lane the cascade may use (16, 8, 4, or 1).
+    pub max_tile: usize,
+    /// Stored entries per cache block (one cancellation poll each).
+    pub row_block_nnz: usize,
+}
+
+impl Default for KernelCfg {
+    fn default() -> Self {
+        KernelCfg { max_tile: DEFAULT_MAX_TILE, row_block_nnz: ROW_BLOCK_NNZ }
+    }
+}
+
+/// Shared ingestion guard for every u32-indexed storage format (CSR
+/// column indices, SELL-C-σ column indices and slot→row permutation):
+/// dimensions beyond `u32::MAX` cannot be addressed by the packed
+/// 4-byte indices, so all constructors reject them with the same typed
+/// error instead of silently truncating.
+pub fn ensure_u32_indexable(dim: usize) -> Result<(), CsrError> {
+    if dim > u32::MAX as usize {
+        return Err(CsrError::ColumnIndexOverflow { cols: dim });
+    }
+    Ok(())
+}
 
 use super::coo::Coo;
 use crate::linalg::Mat;
@@ -66,6 +109,9 @@ pub enum CsrError {
     EntryOutOfBounds { index: usize, row: usize, col: usize, rows: usize, cols: usize },
     /// A COO triplet carries a NaN or infinite value.
     NonFiniteEntry { index: usize, row: usize, col: usize },
+    /// A dimension exceeds the `u32` index range, so packed 4-byte
+    /// indices could not address it (see [`ensure_u32_indexable`]).
+    ColumnIndexOverflow { cols: usize },
 }
 
 impl std::fmt::Display for CsrError {
@@ -100,6 +146,9 @@ impl std::fmt::Display for CsrError {
             CsrError::NonFiniteEntry { index, row, col } => {
                 write!(f, "COO entry {index} at ({row}, {col}) is non-finite")
             }
+            CsrError::ColumnIndexOverflow { cols } => {
+                write!(f, "dimension {cols} exceeds the u32 index range")
+            }
         }
     }
 }
@@ -133,6 +182,7 @@ impl Csr {
     /// error naming the first offender. Duplicates remain legal (they
     /// are summed).
     pub fn try_from_coo(coo: &Coo) -> Result<Csr, CsrError> {
+        ensure_u32_indexable(coo.cols)?;
         for (k, &(i, j, v)) in coo.entries.iter().enumerate() {
             if i >= coo.rows || j >= coo.cols {
                 return Err(CsrError::EntryOutOfBounds {
@@ -222,6 +272,7 @@ impl Csr {
     /// in-bounds column indices per row; finite values. `O(nnz)` — run
     /// it once at ingestion, not per product.
     pub fn validate(&self) -> Result<(), CsrError> {
+        ensure_u32_indexable(self.cols)?;
         if self.indptr.len() != self.rows + 1 {
             return Err(CsrError::IndptrShape {
                 expected_len: self.rows + 1,
@@ -294,13 +345,14 @@ impl Csr {
     pub fn matvec_with(&self, x: &[f64], exec: &ExecPolicy) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
+        let cfg = KernelCfg::default();
         if exec.is_serial() {
-            self.spmm_rows(x, 1, 0..self.rows, &mut y, None);
+            self.spmm_rows(x, 1, 0..self.rows, &mut y, cfg, None);
             return y;
         }
         let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
         exec.for_chunks(&ranges, &mut y, 1, |_, rows, chunk| {
-            self.spmm_rows(x, 1, rows, chunk, None)
+            self.spmm_rows(x, 1, rows, chunk, cfg, None)
         });
         y
     }
@@ -341,6 +393,20 @@ impl Csr {
     /// performs zero heap allocations per product at any thread count
     /// (the serial path allocates nothing to begin with).
     pub fn spmm_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.spmm_into_ws_cfg(x, y, exec, ws, KernelCfg::default());
+    }
+
+    /// [`Self::spmm_into_ws`] with an explicit kernel configuration
+    /// (autotuner output). `cfg` moves lane and block boundaries only —
+    /// the output bits cannot change.
+    pub fn spmm_into_ws_cfg(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+        cfg: KernelCfg,
+    ) {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         let _span = crate::obs::span(&crate::obs::SPMM);
@@ -352,13 +418,13 @@ impl Csr {
         if exec.is_serial() {
             // Allocation-free serial path (the recursion's default): one
             // whole-matrix chunk, no partitioning.
-            self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data, cancel.as_ref());
+            self.spmm_rows(&x.data, d, 0..self.rows, &mut y.data, cfg, cancel.as_ref());
             return;
         }
         let mut ranges = std::mem::take(&mut ws.ranges);
         par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
-            self.spmm_rows(&x.data, d, rows, chunk, cancel.as_ref())
+            self.spmm_rows(&x.data, d, rows, chunk, cfg, cancel.as_ref())
         });
         ws.ranges = ranges;
     }
@@ -388,6 +454,23 @@ impl Csr {
         exec: &ExecPolicy,
         ws: &mut Workspace,
     ) {
+        self.spmm_axpby_into_ws_cfg(x, alpha, beta, z, y, exec, ws, KernelCfg::default());
+    }
+
+    /// [`Self::spmm_axpby_into_ws`] with an explicit kernel
+    /// configuration (autotuner output).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_axpby_into_ws_cfg(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+        cfg: KernelCfg,
+    ) {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
@@ -395,7 +478,7 @@ impl Csr {
         let d = x.cols;
         let cancel = ws.cancel.clone();
         if exec.is_serial() {
-            self.spmm_rows_fused(
+            self.blocked_rows_fused(
                 &x.data,
                 d,
                 0..self.rows,
@@ -403,6 +486,7 @@ impl Csr {
                 alpha,
                 beta,
                 &z.data,
+                cfg,
                 cancel.as_ref(),
             );
             return;
@@ -411,7 +495,7 @@ impl Csr {
         par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
             let zc = &z.data[rows.start * d..rows.end * d];
-            self.spmm_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc, cancel.as_ref());
+            self.blocked_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc, cfg, cancel.as_ref());
         });
         ws.ranges = ranges;
     }
@@ -432,17 +516,9 @@ impl Csr {
         assert_eq!(x.rows, self.cols, "spmm shape mismatch");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols));
         assert_eq!((z.rows, z.cols), (y.rows, y.cols));
-        self.blocked_rows_fused(
-            &x.data,
-            x.cols,
-            0..self.rows,
-            &mut y.data,
-            alpha,
-            beta,
-            &z.data,
-            max_tile.max(1),
-            None,
-        );
+        let cfg = KernelCfg { max_tile: max_tile.max(1), ..KernelCfg::default() };
+        let (rows, zd) = (0..self.rows, &z.data);
+        self.blocked_rows_fused(&x.data, x.cols, rows, &mut y.data, alpha, beta, zd, cfg, None);
     }
 
     /// The one SpMM kernel: output rows `rows` of `A·X` written into `y`
@@ -455,32 +531,19 @@ impl Csr {
         d: usize,
         rows: Range<usize>,
         y: &mut [f64],
+        cfg: KernelCfg,
         cancel: Option<&CancelToken>,
     ) {
-        self.spmm_rows_fused(x, d, rows, y, 1.0, 0.0, &[], cancel);
+        self.blocked_rows_fused(x, d, rows, y, 1.0, 0.0, &[], cfg, cancel);
     }
 
     /// Row-blocked, column-tiled fused kernel for output rows `rows`:
     /// `y = alpha·(A·x) + beta·z`, with `y` (and `z` when `beta != 0`)
     /// holding exactly those rows. Row blocks are bounded by
-    /// [`ROW_BLOCK_NNZ`] so the CSR segment the lanes re-sweep stays
-    /// cache-resident; block boundaries are cache blocking only and
-    /// cannot affect bits (no row's nonzeros are ever split).
-    #[allow(clippy::too_many_arguments)]
-    fn spmm_rows_fused(
-        &self,
-        x: &[f64],
-        d: usize,
-        rows: Range<usize>,
-        y: &mut [f64],
-        alpha: f64,
-        beta: f64,
-        z: &[f64],
-        cancel: Option<&CancelToken>,
-    ) {
-        self.blocked_rows_fused(x, d, rows, y, alpha, beta, z, usize::MAX, cancel);
-    }
-
+    /// `cfg.row_block_nnz` nonzeros (default [`ROW_BLOCK_NNZ`]) so the
+    /// CSR segment the lanes re-sweep stays cache-resident; block
+    /// boundaries are cache blocking only and cannot affect bits (no
+    /// row's nonzeros are ever split).
     #[allow(clippy::too_many_arguments)]
     fn blocked_rows_fused(
         &self,
@@ -491,13 +554,13 @@ impl Csr {
         alpha: f64,
         beta: f64,
         z: &[f64],
-        max_tile: usize,
+        cfg: KernelCfg,
         cancel: Option<&CancelToken>,
     ) {
         debug_assert!(beta == 0.0 || z.len() == y.len());
         let mut start = rows.start;
         while start < rows.end {
-            // Cancellation checkpoint: one poll per ~[`ROW_BLOCK_NNZ`]
+            // Cancellation checkpoint: one poll per ~`cfg.row_block_nnz`
             // nonzeros. A cancelled product returns with `y` partially
             // written — the caller that observed cancellation discards
             // it, so partial state never reaches a result.
@@ -506,7 +569,7 @@ impl Csr {
                     return;
                 }
             }
-            let budget = self.indptr[start] + ROW_BLOCK_NNZ;
+            let budget = self.indptr[start] + cfg.row_block_nnz;
             let mut end = start + 1;
             while end < rows.end && self.indptr[end + 1] <= budget {
                 end += 1;
@@ -514,14 +577,15 @@ impl Csr {
             let lo = (start - rows.start) * d;
             let hi = (end - rows.start) * d;
             let zb = if beta != 0.0 { &z[lo..hi] } else { &z[0..0] };
-            self.fused_block(x, d, start..end, &mut y[lo..hi], alpha, beta, zb, max_tile);
+            self.fused_block(x, d, start..end, &mut y[lo..hi], alpha, beta, zb, cfg.max_tile);
             start = end;
         }
     }
 
-    /// Sweep one row block: column lanes of width 8, then 4, then scalar
-    /// remainder. `max_tile` caps the lane width (tests prove the cap is
-    /// bitwise-invisible; production passes `usize::MAX`).
+    /// Sweep one row block through the column-lane cascade: 16 when the
+    /// autotuner raised the cap, then 8, 4, and a scalar remainder.
+    /// `max_tile` caps the lane width (tests prove the cap is
+    /// bitwise-invisible; the untuned default is [`DEFAULT_MAX_TILE`]).
     #[allow(clippy::too_many_arguments)]
     fn fused_block(
         &self,
@@ -535,8 +599,12 @@ impl Csr {
         max_tile: usize,
     ) {
         let mut c0 = 0;
+        while c0 + 16 <= d && max_tile >= 16 {
+            self.fused_lane::<16>(x, d, c0, rows.clone(), y, alpha, beta, z);
+            c0 += 16;
+        }
         while c0 + 8 <= d && max_tile >= 8 {
-            self.fused_lane::<8>(x, d, c0, rows.clone(), y, alpha, beta, z);
+            self.fused_lane8(x, d, c0, rows.clone(), y, alpha, beta, z);
             c0 += 8;
         }
         while c0 + 4 <= d && max_tile >= 4 {
@@ -547,6 +615,51 @@ impl Csr {
             self.fused_lane::<1>(x, d, c0, rows.clone(), y, alpha, beta, z);
             c0 += 1;
         }
+    }
+
+    /// The width-8 lane, with the explicit-SIMD fast path when the
+    /// `simd` cargo feature is on and the host supports it (AVX2 on
+    /// x86-64, NEON on aarch64). The intrinsics perform the identical
+    /// multiply-then-add per element in the identical order — no FMA —
+    /// so the fast path is bitwise-equal to the autovectorized one.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_lane8(
+        &self,
+        x: &[f64],
+        d: usize,
+        c0: usize,
+        rows: Range<usize>,
+        y: &mut [f64],
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        #[cfg(feature = "simd")]
+        if super::simd::lane8_fast() {
+            for (local, i) in rows.clone().enumerate() {
+                let (idx, val) = self.row(i);
+                // SAFETY: `lane8_fast` checked the CPU feature; every
+                // stored column index is in-bounds (`validate`) and
+                // `c0 + 8 <= d`, so each load reads inside `x`.
+                let acc: [f64; 8] = unsafe { super::simd::row_acc8(idx, val, x, d, c0) };
+                let ybase = local * d + c0;
+                let out: &mut [f64; 8] = (&mut y[ybase..ybase + 8]).try_into().unwrap();
+                if beta != 0.0 {
+                    let zr: &[f64; 8] = z[ybase..ybase + 8].try_into().unwrap();
+                    for c in 0..8 {
+                        out[c] = alpha * acc[c] + beta * zr[c];
+                    }
+                } else if alpha != 1.0 {
+                    for c in 0..8 {
+                        out[c] = alpha * acc[c];
+                    }
+                } else {
+                    *out = acc;
+                }
+            }
+            return;
+        }
+        self.fused_lane::<8>(x, d, c0, rows, y, alpha, beta, z);
     }
 
     /// One register-blocked lane: output columns `[c0, c0 + W)` of rows
@@ -1006,11 +1119,60 @@ mod tests {
             let z = Mat::randn(&mut rng, 70, d);
             let mut want = Mat::zeros(70, d);
             a.spmm_axpby_max_tile(&x, 1.3, -0.7, &z, &mut want, usize::MAX);
-            for cap in [1usize, 4, 8] {
+            for cap in [1usize, 4, 8, 16] {
                 let mut y = Mat::zeros(70, d);
                 a.spmm_axpby_max_tile(&x, 1.3, -0.7, &z, &mut y, cap);
                 assert_eq!(y.data, want.data, "tile cap {cap} at d={d}");
             }
+        }
+    }
+
+    #[test]
+    fn kernel_cfg_cannot_change_bits() {
+        // Any (max_tile, row_block_nnz) combination must reproduce the
+        // default kernel bit-for-bit — the autotuner's safety contract.
+        let mut rng = Rng::new(48);
+        let coo = random_coo(&mut rng, 90, 90, 500);
+        let a = Csr::from_coo(&coo);
+        let d = 21;
+        let x = Mat::randn(&mut rng, 90, d);
+        let z = Mat::randn(&mut rng, 90, d);
+        let mut want = Mat::zeros(90, d);
+        let mut ws = Workspace::new();
+        a.spmm_axpby_into_ws(&x, 1.1, -0.4, &z, &mut want, &ExecPolicy::serial(), &mut ws);
+        for max_tile in [1usize, 4, 8, 16] {
+            for row_block_nnz in [1usize, 64, 16 * 1024] {
+                let cfg = KernelCfg { max_tile, row_block_nnz };
+                for threads in [1usize, 3] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    let mut y = Mat::from_vec(90, d, vec![7.0; 90 * d]);
+                    a.spmm_axpby_into_ws_cfg(&x, 1.1, -0.4, &z, &mut y, &exec, &mut ws, cfg);
+                    assert_eq!(y.data, want.data, "cfg {cfg:?} at {threads} threads");
+                    let mut y2 = Mat::from_vec(90, d, vec![3.0; 90 * d]);
+                    a.spmm_into_ws_cfg(&x, &mut y2, &exec, &mut ws, cfg);
+                    assert_eq!(y2.data, a.spmm(&x).data, "plain cfg {cfg:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_u32_column_overflow() {
+        #[cfg(target_pointer_width = "64")]
+        {
+            let m = Csr {
+                rows: 0,
+                cols: u32::MAX as usize + 1,
+                indptr: vec![0],
+                indices: vec![],
+                values: vec![],
+            };
+            assert!(matches!(m.validate(), Err(CsrError::ColumnIndexOverflow { .. })));
+            let c = Coo { rows: 1, cols: u32::MAX as usize + 1, entries: vec![] };
+            assert!(matches!(
+                Csr::try_from_coo(&c),
+                Err(CsrError::ColumnIndexOverflow { .. })
+            ));
         }
     }
 

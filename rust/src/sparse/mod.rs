@@ -3,6 +3,10 @@
 //! * [`coo`] — coordinate-format builder (what generators and I/O produce).
 //! * [`csr`] — compressed sparse row with the multi-vector product
 //!   (`SpMM`) that dominates the algorithm's runtime.
+//! * [`sellcs`] — SELL-C-σ (sliced ELLPACK) storage, the alternate SpMM
+//!   backend for skewed degree distributions; bitwise-identical output.
+//! * [`tune`] — one-shot runtime kernel autotuner (lane width ×
+//!   row-block budget × format, measured on the actual matrix).
 //! * [`graph`] — graph-derived operators: degrees, normalized adjacency
 //!   `D^{-1/2} A D^{-1/2}`, random-walk matrix, Laplacians, and the
 //!   symmetric dilation `[[0, A^T], [A, 0]]` used to embed general
@@ -11,12 +15,226 @@
 //!   Barabási–Albert, k-NN point-cloud graphs) standing in for the SNAP
 //!   datasets (see DESIGN.md §3 Substitutions).
 //! * [`io`] — SNAP-style edge-list text I/O.
+//!
+//! [`SparseMat`] lifts the format choice behind one type implementing
+//! `embed::op::Operator`, so FastEmbed, Lanczos, filtered simultaneous
+//! iteration, and the coordinator shard workers are format-agnostic.
 
 pub mod coo;
 pub mod csr;
 pub mod gen;
 pub mod graph;
 pub mod io;
+pub mod sellcs;
+#[cfg(feature = "simd")]
+pub mod simd;
+pub mod tune;
 
 pub use coo::Coo;
-pub use csr::Csr;
+pub use csr::{Csr, CsrError, KernelCfg};
+pub use sellcs::SellCs;
+
+/// `--format auto` picks SELL-C-σ when the degree distribution's
+/// coefficient of variation (σ/μ) crosses this threshold: power-law
+/// graphs sit well above 1, uniform-degree SBM/k-NN graphs well below.
+pub const AUTO_DEGREE_CV: f64 = 0.75;
+
+/// Requested storage format (`--format csr|sell|auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FormatChoice {
+    Csr,
+    Sell,
+    Auto,
+}
+
+impl FormatChoice {
+    pub fn parse(s: &str) -> Result<FormatChoice, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "csr" => Ok(FormatChoice::Csr),
+            "sell" => Ok(FormatChoice::Sell),
+            "auto" => Ok(FormatChoice::Auto),
+            other => Err(format!("--format: expected csr|sell|auto, got '{other}'")),
+        }
+    }
+}
+
+/// Coefficient of variation (std/mean) of the row-degree distribution —
+/// the `auto` format signal. High variance means CSR's per-row lane
+/// overhead dominates on the short rows and SELL-C-σ wins.
+pub fn degree_cv(a: &Csr) -> f64 {
+    if a.rows == 0 {
+        return 0.0;
+    }
+    let n = a.rows as f64;
+    let mean = a.nnz() as f64 / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = (0..a.rows)
+        .map(|i| {
+            let dev = (a.indptr[i + 1] - a.indptr[i]) as f64 - mean;
+            dev * dev
+        })
+        .sum::<f64>()
+        / n;
+    var.sqrt() / mean
+}
+
+/// A sparse matrix behind a storage-format choice, carrying the kernel
+/// configuration the autotuner picked (defaults otherwise). Every
+/// backend produces bitwise-identical products, so callers can treat
+/// the choice as pure performance policy.
+#[derive(Clone, Debug)]
+pub enum SparseMat {
+    /// Row-ordered CSR — the ingestion format and uniform-degree default.
+    Csr { mat: Csr, cfg: KernelCfg },
+    /// SELL-C-σ — wins on skewed (power-law) degree distributions.
+    Sell { mat: SellCs, cfg: KernelCfg },
+}
+
+impl SparseMat {
+    /// Wrap a CSR matrix with default kernel configuration.
+    pub fn csr(mat: Csr) -> SparseMat {
+        SparseMat::Csr { mat, cfg: KernelCfg::default() }
+    }
+
+    /// Resolve a format choice: `Auto` measures [`degree_cv`] against
+    /// [`AUTO_DEGREE_CV`]. SELL packing failures (u32 overflow) cannot
+    /// occur for matrices that passed CSR ingestion, but are surfaced
+    /// typed rather than panicking.
+    pub fn build(mat: Csr, choice: FormatChoice, cfg: KernelCfg) -> Result<SparseMat, CsrError> {
+        let use_sell = match choice {
+            FormatChoice::Csr => false,
+            FormatChoice::Sell => true,
+            FormatChoice::Auto => degree_cv(&mat) >= AUTO_DEGREE_CV,
+        };
+        if use_sell {
+            Ok(SparseMat::Sell { mat: SellCs::from_csr_default(&mat)?, cfg })
+        } else {
+            Ok(SparseMat::Csr { mat, cfg })
+        }
+    }
+
+    pub fn format_name(&self) -> &'static str {
+        match self {
+            SparseMat::Csr { .. } => "csr",
+            SparseMat::Sell { .. } => "sell-c-sigma",
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            SparseMat::Csr { mat, .. } => mat.rows,
+            SparseMat::Sell { mat, .. } => mat.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SparseMat::Csr { mat, .. } => mat.cols,
+            SparseMat::Sell { mat, .. } => mat.cols,
+        }
+    }
+
+    /// True nonzero count (SELL padding excluded).
+    pub fn nnz(&self) -> usize {
+        match self {
+            SparseMat::Csr { mat, .. } => mat.nnz(),
+            SparseMat::Sell { mat, .. } => mat.nnz(),
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            SparseMat::Csr { mat, .. } => mat.mem_bytes(),
+            SparseMat::Sell { mat, .. } => mat.mem_bytes(),
+        }
+    }
+
+    pub fn cfg(&self) -> KernelCfg {
+        match self {
+            SparseMat::Csr { cfg, .. } | SparseMat::Sell { cfg, .. } => *cfg,
+        }
+    }
+
+    /// Y = A X with the backend's kernels and tuned configuration.
+    pub fn spmm_into_ws(
+        &self,
+        x: &crate::linalg::Mat,
+        y: &mut crate::linalg::Mat,
+        exec: &crate::par::ExecPolicy,
+        ws: &mut crate::par::Workspace,
+    ) {
+        match self {
+            SparseMat::Csr { mat, cfg } => mat.spmm_into_ws_cfg(x, y, exec, ws, *cfg),
+            SparseMat::Sell { mat, cfg } => mat.spmm_into_ws_cfg(x, y, exec, ws, *cfg),
+        }
+    }
+
+    /// Fused `y = alpha·(A·x) + beta·z` with the backend's kernels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_axpby_into_ws(
+        &self,
+        x: &crate::linalg::Mat,
+        alpha: f64,
+        beta: f64,
+        z: &crate::linalg::Mat,
+        y: &mut crate::linalg::Mat,
+        exec: &crate::par::ExecPolicy,
+        ws: &mut crate::par::Workspace,
+    ) {
+        match self {
+            SparseMat::Csr { mat, cfg } => {
+                mat.spmm_axpby_into_ws_cfg(x, alpha, beta, z, y, exec, ws, *cfg)
+            }
+            SparseMat::Sell { mat, cfg } => {
+                mat.spmm_axpby_into_ws_cfg(x, alpha, beta, z, y, exec, ws, *cfg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn auto_format_picks_sell_for_power_law_and_csr_for_uniform() {
+        let mut rng = Rng::new(905);
+        let pl = gen::barabasi_albert(&mut rng, 400, 3);
+        assert!(degree_cv(&pl.adj) >= AUTO_DEGREE_CV, "BA graph should be skewed");
+        let m = SparseMat::build(pl.adj, FormatChoice::Auto, KernelCfg::default()).unwrap();
+        assert_eq!(m.format_name(), "sell-c-sigma");
+
+        let uni = gen::sbm_by_degree(&mut rng, 300, 3, 8.0, 0.8);
+        assert!(degree_cv(&uni.adj) < AUTO_DEGREE_CV, "SBM graph should be uniform");
+        let m = SparseMat::build(uni.adj, FormatChoice::Auto, KernelCfg::default()).unwrap();
+        assert_eq!(m.format_name(), "csr");
+    }
+
+    #[test]
+    fn explicit_choices_are_honored() {
+        let mut rng = Rng::new(906);
+        let g = gen::erdos_renyi(&mut rng, 60, 200);
+        let csr = SparseMat::build(g.adj.clone(), FormatChoice::Csr, KernelCfg::default()).unwrap();
+        assert_eq!(csr.format_name(), "csr");
+        let sell =
+            SparseMat::build(g.adj.clone(), FormatChoice::Sell, KernelCfg::default()).unwrap();
+        assert_eq!(sell.format_name(), "sell-c-sigma");
+        assert_eq!(sell.nnz(), csr.nnz());
+        assert_eq!(sell.rows(), csr.rows());
+        assert!(FormatChoice::parse("SELL").is_ok());
+        assert!(FormatChoice::parse("ell").is_err());
+    }
+
+    #[test]
+    fn degree_cv_edge_cases() {
+        let empty = Csr::from_coo(&Coo::new(0, 0));
+        assert_eq!(degree_cv(&empty), 0.0);
+        let no_edges = Csr::from_coo(&Coo::new(5, 5));
+        assert_eq!(degree_cv(&no_edges), 0.0);
+        let eye = Csr::eye(8);
+        assert_eq!(degree_cv(&eye), 0.0);
+    }
+}

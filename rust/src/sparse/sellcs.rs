@@ -1,0 +1,810 @@
+//! SELL-C-σ sparse storage: sliced ELLPACK with σ-window row sorting.
+//!
+//! CSR's row-blocked lanes pay per-row overhead (accumulator init, lane
+//! write-back, loop control) once per row per lane; on skewed degree
+//! distributions — power-law graphs, the paper's DBLP/Amazon-style
+//! networks — most rows are short and that overhead dominates. SELL-C-σ
+//! amortizes it: rows are stably sorted by nonzero count inside
+//! σ-row windows, packed into slices of `C` rows padded to the slice's
+//! longest row, and stored column-major within the slice so the kernel
+//! sweeps `C` rows in lockstep with contiguous `(u32 index, f64 value)`
+//! loads.
+//!
+//! ## Bitwise contract
+//!
+//! Output is **bitwise-identical to the CSR kernels** at any thread
+//! count, tile cap, and slice height:
+//!
+//! - a row's nonzeros keep their original (column-sorted) order, so each
+//!   accumulator sees the identical float-op sequence;
+//! - padding slots store the explicit value `+0.0` with column 0, and
+//!   are appended *after* the row's real nonzeros, so each pad step adds
+//!   `0.0 * x[c] = ±0.0` to an accumulator that is never `-0.0` (it
+//!   starts at `+0.0`, and IEEE-754 round-to-nearest addition only
+//!   yields `-0.0` from `(-0.0) + (-0.0)`) — the accumulator bits are
+//!   unchanged. This argument needs finite `x`; [`super::Csr::validate`]
+//!   keeps non-finite values out of the matrix, and the recurrence's
+//!   blow-up guard discards shard outputs whose iterates go non-finite
+//!   before they reach a result;
+//! - the write-back is the same pinned three-case expression as CSR's
+//!   `fused_lane` (`beta != 0`, then `alpha != 1`, then plain store),
+//!   and — like the whole kernel stack — never uses FMA contraction.
+//!
+//! The σ-window sort only permutes *which slice slot computes which
+//! row*; results scatter back through the slot→row permutation, so the
+//! output layout (and every bit in it) matches CSR.
+//!
+//! Cancellation is polled at slice-block granularity (the same stored-
+//! entry budget CSR uses for row blocks); a cancelled product returns
+//! with the output partially written and the caller discards it.
+
+use std::ops::Range;
+
+use super::csr::{ensure_u32_indexable, Csr, CsrError, KernelCfg};
+use crate::linalg::Mat;
+use crate::par::{self, CancelToken, ExecPolicy, Workspace};
+
+/// Sentinel in `perm` marking a padding slot with no source row (only
+/// present in the final slice when `rows % chunk != 0`).
+pub const PAD_SLOT: u32 = u32::MAX;
+
+/// Default slice height C: matches the widest column lane, so a full
+/// slice's accumulators tile the registers evenly.
+pub const DEFAULT_CHUNK: usize = 8;
+
+/// Default sorting window σ: large enough to group like-degree rows,
+/// small enough that the slot→row permutation stays cache-local.
+pub const DEFAULT_SIGMA: usize = 256;
+
+/// SELL-C-σ matrix (`f64` values, u32 column indices).
+///
+/// Entry `r` of slice `s` at depth `k` lives at
+/// `slice_ptr[s] + k * chunk + r` — column-major within the slice, so a
+/// depth step loads `chunk` contiguous index/value pairs.
+#[derive(Clone, Debug)]
+pub struct SellCs {
+    pub rows: usize,
+    pub cols: usize,
+    /// Slice height C (rows per slice).
+    pub chunk: usize,
+    /// Sorting window σ (rows), rounded down to a multiple of `chunk`.
+    pub sigma: usize,
+    /// Slot → original row, length `n_slices * chunk`; [`PAD_SLOT`] for
+    /// slots past the last real row.
+    pub perm: Vec<u32>,
+    /// Slice offsets into `indices`/`values`, length `n_slices + 1`.
+    /// Counts stored entries *including padding*, so it doubles as the
+    /// weight prefix for nnz-balanced slice partitioning.
+    pub slice_ptr: Vec<usize>,
+    /// True nonzero count per slot (0 for pad slots), length
+    /// `n_slices * chunk`.
+    pub rlen: Vec<u32>,
+    /// Column indices, padded entries store 0.
+    pub indices: Vec<u32>,
+    /// Values, padded entries store `+0.0`.
+    pub values: Vec<f64>,
+    /// True nonzero count (excludes padding).
+    nnz: usize,
+}
+
+/// `*mut f64` allowed across the pool's thread boundary. Safety rests on
+/// the slice partition: each task writes only the output rows of its own
+/// slices, and `perm` maps every slot of every slice to a distinct row
+/// (it is a permutation), so concurrent tasks never touch the same
+/// element. Mirrors `par`'s private `SendPtr`, which stays private to
+/// keep arbitrary scatter out of the safe API.
+struct YPtr(*mut f64);
+unsafe impl Send for YPtr {}
+unsafe impl Sync for YPtr {}
+
+impl SellCs {
+    /// Pack a CSR matrix into SELL-C-σ with the default slice height and
+    /// sorting window.
+    pub fn from_csr_default(a: &Csr) -> Result<SellCs, CsrError> {
+        Self::from_csr(a, DEFAULT_CHUNK, DEFAULT_SIGMA)
+    }
+
+    /// Pack a CSR matrix into SELL-C-σ: stable-sort rows by descending
+    /// nonzero count within σ-row windows, cut the sorted order into
+    /// slices of `chunk` rows, and pad each slice to its longest row.
+    ///
+    /// `sigma` is rounded down to a multiple of `chunk` (minimum
+    /// `chunk`) so slices never straddle a window boundary. Rejects
+    /// dimensions beyond the u32 index range with the same typed error
+    /// as CSR ingestion (`perm` and `indices` are u32).
+    pub fn from_csr(a: &Csr, chunk: usize, sigma: usize) -> Result<SellCs, CsrError> {
+        ensure_u32_indexable(a.cols)?;
+        ensure_u32_indexable(a.rows)?;
+        let chunk = chunk.max(1);
+        let sigma = (sigma.max(chunk) / chunk) * chunk;
+        let n_slices = a.rows.div_ceil(chunk);
+        let slots = n_slices * chunk;
+
+        // Stable nnz-descending sort inside each σ window: equal-degree
+        // rows keep their relative order, so packing is deterministic.
+        let mut order: Vec<u32> = (0..a.rows as u32).collect();
+        for w in order.chunks_mut(sigma) {
+            w.sort_by_key(|&i| {
+                std::cmp::Reverse(a.indptr[i as usize + 1] - a.indptr[i as usize])
+            });
+        }
+
+        let mut perm = vec![PAD_SLOT; slots];
+        let mut rlen = vec![0u32; slots];
+        for (slot, &row) in order.iter().enumerate() {
+            perm[slot] = row;
+            rlen[slot] = (a.indptr[row as usize + 1] - a.indptr[row as usize]) as u32;
+        }
+
+        let mut slice_ptr = vec![0usize; n_slices + 1];
+        for s in 0..n_slices {
+            let len = (0..chunk).map(|r| rlen[s * chunk + r] as usize).max().unwrap_or(0);
+            slice_ptr[s + 1] = slice_ptr[s] + chunk * len;
+        }
+
+        let stored = slice_ptr[n_slices];
+        let mut indices = vec![0u32; stored];
+        let mut values = vec![0.0f64; stored];
+        for s in 0..n_slices {
+            let off = slice_ptr[s];
+            for r in 0..chunk {
+                let slot = s * chunk + r;
+                if perm[slot] == PAD_SLOT {
+                    continue;
+                }
+                let (idx, val) = a.row(perm[slot] as usize);
+                for (k, (&j, &v)) in idx.iter().zip(val).enumerate() {
+                    let e = off + k * chunk + r;
+                    indices[e] = j;
+                    values[e] = v;
+                }
+            }
+        }
+
+        Ok(SellCs {
+            rows: a.rows,
+            cols: a.cols,
+            chunk,
+            sigma,
+            perm,
+            slice_ptr,
+            rlen,
+            indices,
+            values,
+            nnz: a.nnz(),
+        })
+    }
+
+    /// True nonzero count (padding excluded).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stored entry count including padding.
+    pub fn stored(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of stored entries that are padding (0 for an empty
+    /// matrix). The σ sort exists to keep this small on skewed degrees.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.stored() == 0 {
+            return 0.0;
+        }
+        (self.stored() - self.nnz) as f64 / self.stored() as f64
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slice_ptr.len() - 1
+    }
+
+    /// Depth (entries per slot) of slice `s`.
+    pub fn slice_len(&self, s: usize) -> usize {
+        (self.slice_ptr[s + 1] - self.slice_ptr[s]) / self.chunk
+    }
+
+    /// Memory footprint in bytes (metrics/reporting).
+    pub fn mem_bytes(&self) -> usize {
+        self.slice_ptr.len() * 8
+            + self.perm.len() * 4
+            + self.rlen.len() * 4
+            + self.indices.len() * 4
+            + self.values.len() * 8
+    }
+
+    /// Unpack back to CSR. Exact round-trip: rows keep their original
+    /// (column-sorted) entry order, so `to_csr` of `from_csr(a, ..)`
+    /// reproduces `a`'s arrays bit-for-bit.
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0usize; self.rows + 1];
+        for (slot, &row) in self.perm.iter().enumerate() {
+            if row != PAD_SLOT {
+                indptr[row as usize + 1] = self.rlen[slot] as usize;
+            }
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz];
+        let mut values = vec![0.0f64; self.nnz];
+        for s in 0..self.n_slices() {
+            let off = self.slice_ptr[s];
+            for r in 0..self.chunk {
+                let slot = s * self.chunk + r;
+                let row = self.perm[slot];
+                if row == PAD_SLOT {
+                    continue;
+                }
+                let base = indptr[row as usize];
+                for k in 0..self.rlen[slot] as usize {
+                    let e = off + k * self.chunk + r;
+                    indices[base + k] = self.indices[e];
+                    values[base + k] = self.values[e];
+                }
+            }
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+
+    /// y = A x (single vector), serial wrapper.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_with(x, &ExecPolicy::serial())
+    }
+
+    /// y = A x with slice-partitioned threading. Bitwise-identical to
+    /// [`Csr::matvec`] at any thread count.
+    pub fn matvec_with(&self, x: &[f64], exec: &ExecPolicy) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        let cfg = KernelCfg::default();
+        if exec.is_serial() || self.n_slices() <= 1 {
+            // SAFETY: exclusive access to `y`, which has `rows` elements
+            // (d = 1); slices cover distinct rows via `perm`.
+            let all = 0..self.n_slices();
+            unsafe { self.slices_fused(x, 1, all, y.as_mut_ptr(), 1.0, 0.0, &[], cfg, None) };
+            return y;
+        }
+        let mut ranges = Vec::new();
+        par::weighted_ranges_into(&self.slice_ptr, exec.chunks(self.n_slices()), &mut ranges);
+        let yp = YPtr(y.as_mut_ptr());
+        exec.run_indexed(ranges.len(), |k| {
+            // SAFETY: tasks own disjoint slice ranges; `perm` is a
+            // permutation, so their output rows are disjoint too.
+            unsafe {
+                self.slices_fused(x, 1, ranges[k].clone(), yp.0, 1.0, 0.0, &[], cfg, None)
+            };
+        });
+        y
+    }
+
+    /// Y = A X into a preallocated output, partition scratch drawn from
+    /// `ws` — the allocation-free steady-state form, mirroring
+    /// [`Csr::spmm_into_ws`] (and bitwise-identical to it).
+    pub fn spmm_into_ws(&self, x: &Mat, y: &mut Mat, exec: &ExecPolicy, ws: &mut Workspace) {
+        self.spmm_into_ws_cfg(x, y, exec, ws, KernelCfg::default());
+    }
+
+    /// [`Self::spmm_into_ws`] with an explicit kernel configuration
+    /// (autotuner output). `cfg` moves lane and block boundaries only —
+    /// the output bits cannot change.
+    pub fn spmm_into_ws_cfg(
+        &self,
+        x: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+        cfg: KernelCfg,
+    ) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        self.fused_dispatch(x, 1.0, 0.0, &[], y, exec, ws, cfg);
+    }
+
+    /// Fused `y = alpha·(A·x) + beta·z` with slice-partitioned threading
+    /// and workspace-backed scratch, mirroring
+    /// [`Csr::spmm_axpby_into_ws`] (and bitwise-identical to it at any
+    /// thread count, tile cap, and slice height).
+    pub fn spmm_axpby_into_ws(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+    ) {
+        self.spmm_axpby_into_ws_cfg(x, alpha, beta, z, y, exec, ws, KernelCfg::default());
+    }
+
+    /// [`Self::spmm_axpby_into_ws`] with an explicit kernel
+    /// configuration (autotuner output).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_axpby_into_ws_cfg(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+        cfg: KernelCfg,
+    ) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols), "z must match the output shape");
+        self.fused_dispatch(x, alpha, beta, &z.data, y, exec, ws, cfg);
+    }
+
+    /// Test-only entry: serial fused product with the lane width capped
+    /// at `max_tile`, for asserting the cap is bitwise-invisible (the
+    /// SELL counterpart of [`Csr::spmm_axpby_max_tile`]).
+    #[doc(hidden)]
+    pub fn spmm_axpby_max_tile(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &Mat,
+        y: &mut Mat,
+        max_tile: usize,
+    ) {
+        assert_eq!(x.rows, self.cols, "spmm shape mismatch");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols));
+        assert_eq!((z.rows, z.cols), (y.rows, y.cols));
+        let cfg = KernelCfg { max_tile: max_tile.max(1), ..KernelCfg::default() };
+        // SAFETY: exclusive access to `y` with the full `rows * d` shape.
+        unsafe {
+            self.slices_fused(
+                &x.data,
+                x.cols,
+                0..self.n_slices(),
+                y.data.as_mut_ptr(),
+                alpha,
+                beta,
+                &z.data,
+                cfg,
+                None,
+            )
+        };
+    }
+
+    /// Shared serial/parallel dispatch for the fused product. `z` is
+    /// empty for the plain product (`beta == 0` never reads it).
+    #[allow(clippy::too_many_arguments)]
+    fn fused_dispatch(
+        &self,
+        x: &Mat,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+        y: &mut Mat,
+        exec: &ExecPolicy,
+        ws: &mut Workspace,
+        cfg: KernelCfg,
+    ) {
+        let _span = crate::obs::span(&crate::obs::SPMM);
+        let d = x.cols;
+        let cancel = ws.cancel.clone();
+        if exec.is_serial() || self.n_slices() <= 1 {
+            // SAFETY: exclusive `&mut y` covers all written rows.
+            unsafe {
+                self.slices_fused(
+                    &x.data,
+                    d,
+                    0..self.n_slices(),
+                    y.data.as_mut_ptr(),
+                    alpha,
+                    beta,
+                    z,
+                    cfg,
+                    cancel.as_ref(),
+                )
+            };
+            return;
+        }
+        let mut ranges = std::mem::take(&mut ws.slice_ranges);
+        par::weighted_ranges_into(&self.slice_ptr, exec.chunks(self.n_slices()), &mut ranges);
+        let yp = YPtr(y.data.as_mut_ptr());
+        let xs = &x.data;
+        exec.run_indexed(ranges.len(), |k| {
+            // SAFETY: tasks own disjoint slice ranges, and `perm` maps
+            // every slot to a distinct output row, so no element of `y`
+            // is written by two tasks. `y` outlives the region (we hold
+            // `&mut y` across `run_indexed`).
+            let r = ranges[k].clone();
+            unsafe { self.slices_fused(xs, d, r, yp.0, alpha, beta, z, cfg, cancel.as_ref()) };
+        });
+        ws.slice_ranges = ranges;
+    }
+
+    /// Process slices `slices`, polling cancellation once per
+    /// `cfg.row_block_nnz` stored entries (the CSR row-block budget). A
+    /// cancelled call returns immediately; the caller that observed
+    /// cancellation discards the partially-written output.
+    ///
+    /// # Safety
+    ///
+    /// `y` must be valid for writes of `rows * d` elements, and the
+    /// caller must guarantee no concurrent access to the output rows of
+    /// `slices` (disjoint slice ranges from one partition are safe:
+    /// `perm` is a permutation).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn slices_fused(
+        &self,
+        x: &[f64],
+        d: usize,
+        slices: Range<usize>,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+        cfg: KernelCfg,
+        cancel: Option<&CancelToken>,
+    ) {
+        debug_assert!(beta == 0.0 || z.len() >= self.rows * d);
+        let mut s = slices.start;
+        while s < slices.end {
+            if let Some(c) = cancel {
+                if c.is_cancelled() {
+                    return;
+                }
+            }
+            let budget = self.slice_ptr[s] + cfg.row_block_nnz;
+            let mut e = s + 1;
+            while e < slices.end && self.slice_ptr[e + 1] <= budget {
+                e += 1;
+            }
+            for si in s..e {
+                unsafe { self.slice_fused(x, d, si, y, alpha, beta, z, cfg.max_tile) };
+            }
+            s = e;
+        }
+    }
+
+    /// Sweep one slice: the same column-lane cascade as CSR's
+    /// `fused_block` (16 when the autotuner raised the cap, then 8, 4,
+    /// scalar), with each lane processing the slice's rows in groups of
+    /// four.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn slice_fused(
+        &self,
+        x: &[f64],
+        d: usize,
+        s: usize,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+        max_tile: usize,
+    ) {
+        let mut c0 = 0;
+        while c0 + 16 <= d && max_tile >= 16 {
+            unsafe { self.slice_lane::<16>(x, d, c0, s, y, alpha, beta, z) };
+            c0 += 16;
+        }
+        while c0 + 8 <= d && max_tile >= 8 {
+            unsafe { self.slice_lane8(x, d, c0, s, y, alpha, beta, z) };
+            c0 += 8;
+        }
+        while c0 + 4 <= d && max_tile >= 4 {
+            unsafe { self.slice_lane::<4>(x, d, c0, s, y, alpha, beta, z) };
+            c0 += 4;
+        }
+        while c0 < d {
+            unsafe { self.slice_lane::<1>(x, d, c0, s, y, alpha, beta, z) };
+            c0 += 1;
+        }
+    }
+
+    /// One lane over one slice: slots in groups of four (scalar
+    /// remainder for slice heights not divisible by four).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn slice_lane<const W: usize>(
+        &self,
+        x: &[f64],
+        d: usize,
+        c0: usize,
+        s: usize,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        let chunk = self.chunk;
+        let off = self.slice_ptr[s];
+        let len = self.slice_len(s);
+        let slot0 = s * chunk;
+        let mut r = 0;
+        while r + 4 <= chunk {
+            unsafe { self.group_lane::<W, 4>(x, d, c0, off, len, slot0 + r, r, y, alpha, beta, z) };
+            r += 4;
+        }
+        while r < chunk {
+            unsafe { self.group_lane::<W, 1>(x, d, c0, off, len, slot0 + r, r, y, alpha, beta, z) };
+            r += 1;
+        }
+    }
+
+    /// The width-8 lane, with the explicit-SIMD fast path when the
+    /// `simd` feature is on and the host supports it (scalar fallback
+    /// otherwise — same float ops in the same order either way).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn slice_lane8(
+        &self,
+        x: &[f64],
+        d: usize,
+        c0: usize,
+        s: usize,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        let chunk = self.chunk;
+        let off = self.slice_ptr[s];
+        let len = self.slice_len(s);
+        let slot0 = s * chunk;
+        let mut r = 0;
+        #[cfg(feature = "simd")]
+        if super::simd::lane8_fast() {
+            while r + 4 <= chunk {
+                let mut acc = [[0.0f64; 8]; 4];
+                // SAFETY: `lane8_fast` checked the required CPU feature;
+                // entry/row bounds hold by the packing invariants.
+                unsafe {
+                    super::simd::sell_acc8x4(
+                        &self.values,
+                        &self.indices,
+                        off + r,
+                        chunk,
+                        len,
+                        x,
+                        d,
+                        c0,
+                        &mut acc,
+                    );
+                    self.write_group::<8, 4>(&acc, slot0 + r, d, c0, y, alpha, beta, z);
+                }
+                r += 4;
+            }
+        }
+        while r + 4 <= chunk {
+            unsafe { self.group_lane::<8, 4>(x, d, c0, off, len, slot0 + r, r, y, alpha, beta, z) };
+            r += 4;
+        }
+        while r < chunk {
+            unsafe { self.group_lane::<8, 1>(x, d, c0, off, len, slot0 + r, r, y, alpha, beta, z) };
+            r += 1;
+        }
+    }
+
+    /// Accumulate and write one group of `G` slots over lane columns
+    /// `[c0, c0 + W)`. The k-loop walks each slot's entries in original
+    /// column order; pad entries (`+0.0`, column 0) come after the real
+    /// ones and cannot change the accumulator bits (module docs).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn group_lane<const W: usize, const G: usize>(
+        &self,
+        x: &[f64],
+        d: usize,
+        c0: usize,
+        off: usize,
+        len: usize,
+        slot0: usize,
+        r0: usize,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        let chunk = self.chunk;
+        let mut acc = [[0.0f64; W]; G];
+        for k in 0..len {
+            let e = off + k * chunk + r0;
+            let ev = &self.values[e..e + G];
+            let ei = &self.indices[e..e + G];
+            for g in 0..G {
+                let aij = ev[g];
+                let base = ei[g] as usize * d + c0;
+                let xr: &[f64; W] = x[base..base + W].try_into().unwrap();
+                for c in 0..W {
+                    acc[g][c] += aij * xr[c];
+                }
+            }
+        }
+        unsafe { self.write_group::<W, G>(&acc, slot0, d, c0, y, alpha, beta, z) };
+    }
+
+    /// Scatter one group's accumulators to their original rows with the
+    /// pinned CSR write-back expression. Pad slots are skipped.
+    ///
+    /// # Safety
+    ///
+    /// `y` valid for `rows * d` writes; exclusive access to the group's
+    /// output rows.
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    unsafe fn write_group<const W: usize, const G: usize>(
+        &self,
+        acc: &[[f64; W]; G],
+        slot0: usize,
+        d: usize,
+        c0: usize,
+        y: *mut f64,
+        alpha: f64,
+        beta: f64,
+        z: &[f64],
+    ) {
+        for g in 0..G {
+            let row = self.perm[slot0 + g];
+            if row == PAD_SLOT {
+                continue;
+            }
+            let ybase = row as usize * d + c0;
+            if beta != 0.0 {
+                let zr: &[f64; W] = z[ybase..ybase + W].try_into().unwrap();
+                for c in 0..W {
+                    unsafe { *y.add(ybase + c) = alpha * acc[g][c] + beta * zr[c] };
+                }
+            } else if alpha != 1.0 {
+                for c in 0..W {
+                    unsafe { *y.add(ybase + c) = alpha * acc[g][c] };
+                }
+            } else {
+                for c in 0..W {
+                    unsafe { *y.add(ybase + c) = acc[g][c] };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> Csr {
+        let mut c = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            c.push(rng.below(rows), rng.below(cols), rng.normal());
+        }
+        Csr::from_coo(&c)
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let mut rng = Rng::new(901);
+        let shapes = [(1usize, 1usize, 1usize), (7, 5, 10), (33, 40, 150), (64, 64, 0)];
+        for &(rows, cols, nnz) in &shapes {
+            let a = random_csr(&mut rng, rows, cols, nnz);
+            for &(chunk, sigma) in &[(4usize, 16usize), (8, 256), (32, 32), (3, 7)] {
+                let s = SellCs::from_csr(&a, chunk, sigma).unwrap();
+                let back = s.to_csr();
+                assert_eq!(back.indptr, a.indptr, "C={chunk} σ={sigma}");
+                assert_eq!(back.indices, a.indices, "C={chunk} σ={sigma}");
+                assert_eq!(back.values, a.values, "C={chunk} σ={sigma}");
+                assert_eq!(s.nnz(), a.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_windows_sort_and_perm_is_a_permutation() {
+        let mut rng = Rng::new(902);
+        let a = random_csr(&mut rng, 100, 60, 500);
+        let s = SellCs::from_csr(&a, 4, 16).unwrap();
+        // perm covers every row exactly once (plus pad sentinels).
+        let mut seen = vec![false; a.rows];
+        for &p in &s.perm {
+            if p != PAD_SLOT {
+                assert!(!seen[p as usize], "row {p} packed twice");
+                seen[p as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some row never packed");
+        // Inside each σ window, slot lengths are non-increasing.
+        for w0 in (0..s.perm.len()).step_by(s.sigma) {
+            let w1 = (w0 + s.sigma).min(s.perm.len());
+            for t in w0 + 1..w1 {
+                assert!(s.rlen[t] <= s.rlen[t - 1], "window not sorted at slot {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_entries_are_exact_zero_and_counted() {
+        let mut rng = Rng::new(903);
+        // Skewed: a few heavy rows force padding in their slices.
+        let mut c = Coo::new(40, 40);
+        for j in 0..35 {
+            c.push(0, j, rng.normal());
+            c.push(17, j, rng.normal());
+        }
+        for i in 1..40 {
+            c.push(i, rng.below(40), rng.normal());
+        }
+        let a = Csr::from_coo(&c);
+        let s = SellCs::from_csr(&a, 8, 8).unwrap();
+        assert_eq!(s.stored() - s.nnz(), {
+            // Recompute padding directly from slot lengths.
+            let mut pad = 0usize;
+            for sl in 0..s.n_slices() {
+                for r in 0..s.chunk {
+                    pad += s.slice_len(sl) - s.rlen[sl * s.chunk + r] as usize;
+                }
+            }
+            pad
+        });
+        // Every padded entry stores exactly +0.0 at column 0.
+        for sl in 0..s.n_slices() {
+            let off = s.slice_ptr[sl];
+            for r in 0..s.chunk {
+                let slot = sl * s.chunk + r;
+                for k in s.rlen[slot] as usize..s.slice_len(sl) {
+                    let e = off + k * s.chunk + r;
+                    assert_eq!(s.values[e].to_bits(), 0.0f64.to_bits());
+                    assert_eq!(s.indices[e], 0);
+                }
+            }
+        }
+        assert!(s.padding_ratio() > 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_csr_bitwise() {
+        let mut rng = Rng::new(904);
+        for trial in 0..8 {
+            let rows = 1 + rng.below(70);
+            let cols = 1 + rng.below(70);
+            let a = random_csr(&mut rng, rows, cols, rows * 3);
+            let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+            let want = a.matvec(&x);
+            for &chunk in &[4usize, 8, 32] {
+                let s = SellCs::from_csr(&a, chunk, 64).unwrap();
+                assert_eq!(s.matvec(&x), want, "trial {trial} C={chunk}");
+                for threads in [2usize, 4] {
+                    let exec = ExecPolicy::with_threads(threads);
+                    let got = s.matvec_with(&x, &exec);
+                    assert_eq!(got, want, "trial {trial} C={chunk} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrices_and_empty_rows() {
+        let a = Csr::from_coo(&Coo::new(0, 0));
+        let s = SellCs::from_csr(&a, 8, 256).unwrap();
+        assert_eq!(s.n_slices(), 0);
+        assert_eq!(s.matvec(&[]), Vec::<f64>::new());
+
+        let a = Csr::from_coo(&Coo::new(5, 3)); // all rows empty
+        let s = SellCs::from_csr(&a, 4, 4).unwrap();
+        assert_eq!(s.stored(), 0);
+        assert_eq!(s.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 5]);
+        let back = s.to_csr();
+        assert_eq!(back.indptr, a.indptr);
+    }
+
+    #[test]
+    fn rejects_dimensions_beyond_u32() {
+        #[cfg(target_pointer_width = "64")]
+        {
+            let a = Csr {
+                rows: 0,
+                cols: u32::MAX as usize + 1,
+                indptr: vec![0],
+                indices: vec![],
+                values: vec![],
+            };
+            assert!(matches!(
+                SellCs::from_csr(&a, 8, 256),
+                Err(CsrError::ColumnIndexOverflow { .. })
+            ));
+        }
+    }
+}

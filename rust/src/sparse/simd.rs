@@ -1,0 +1,229 @@
+//! Explicit SIMD inner loops for the width-8 column lane (opt-in via
+//! the `simd` cargo feature).
+//!
+//! The const-generic lanes in `csr`/`sellcs` autovectorize well, but
+//! leave scheduling to the compiler; these helpers pin the hot
+//! accumulate loop to AVX2 (`x86_64`, runtime-detected with
+//! `is_x86_feature_detected!`) or NEON (`aarch64`, a baseline feature)
+//! vector ops. On any other architecture — or when the CPU lacks AVX2 —
+//! [`lane8_fast`] returns `false` and callers take the autovectorized
+//! path.
+//!
+//! ## Bitwise contract
+//!
+//! Each helper performs, per output element, the exact float-op
+//! sequence of the scalar kernel: `acc[c] += aij * x[j*d + c0 + c]`,
+//! one multiply then one add, in ascending `k` order. **FMA is
+//! explicitly excluded**: a fused multiply-add skips the intermediate
+//! rounding and changes output bits, which would break the
+//! backend-interchangeability contract (SELL ≡ CSR ≡ serial reference).
+//! We only use `mul` + `add` intrinsics, and Rust/LLVM never contracts
+//! separate mul/add into FMA without explicit fast-math, so the fast
+//! path is bitwise-equal to the fallback.
+
+/// Whether the explicit width-8 helpers may run on this host.
+#[inline]
+pub fn lane8_fast() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true // NEON is a baseline feature of aarch64.
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Accumulate one CSR row over lane columns `[c0, c0 + 8)`:
+/// `acc[c] = Σ_k val[k] · x[idx[k]·d + c0 + c]`, ascending `k`.
+///
+/// # Safety
+///
+/// [`lane8_fast`] must have returned `true`, every `idx[k]` must satisfy
+/// `idx[k] as usize * d + c0 + 8 <= x.len()`, and `idx`/`val` must have
+/// equal lengths.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn row_acc8(idx: &[u32], val: &[f64], x: &[f64], d: usize, c0: usize) -> [f64; 8] {
+    use std::arch::x86_64::*;
+    let mut a0 = _mm256_setzero_pd();
+    let mut a1 = _mm256_setzero_pd();
+    let xp = x.as_ptr();
+    for (&j, &aij) in idx.iter().zip(val) {
+        let p = unsafe { xp.add(j as usize * d + c0) };
+        let va = _mm256_set1_pd(aij);
+        a0 = _mm256_add_pd(a0, _mm256_mul_pd(va, unsafe { _mm256_loadu_pd(p) }));
+        a1 = _mm256_add_pd(a1, _mm256_mul_pd(va, unsafe { _mm256_loadu_pd(p.add(4)) }));
+    }
+    let mut out = [0.0f64; 8];
+    unsafe {
+        _mm256_storeu_pd(out.as_mut_ptr(), a0);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), a1);
+    }
+    out
+}
+
+/// NEON version of [`row_acc8`]; same contract, four 2-wide registers.
+///
+/// # Safety
+///
+/// Same bounds contract as the AVX2 version.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+pub unsafe fn row_acc8(idx: &[u32], val: &[f64], x: &[f64], d: usize, c0: usize) -> [f64; 8] {
+    use std::arch::aarch64::*;
+    let mut a = unsafe { [vdupq_n_f64(0.0); 4] };
+    let xp = x.as_ptr();
+    for (&j, &aij) in idx.iter().zip(val) {
+        let p = unsafe { xp.add(j as usize * d + c0) };
+        let va = unsafe { vdupq_n_f64(aij) };
+        for (q, acc) in a.iter_mut().enumerate() {
+            *acc = unsafe { vaddq_f64(*acc, vmulq_f64(va, vld1q_f64(p.add(2 * q)))) };
+        }
+    }
+    let mut out = [0.0f64; 8];
+    for (q, acc) in a.iter().enumerate() {
+        unsafe { vst1q_f64(out.as_mut_ptr().add(2 * q), *acc) };
+    }
+    out
+}
+
+/// Portable stub so the crate still compiles with `--features simd` on
+/// other architectures; never called ([`lane8_fast`] is `false`).
+///
+/// # Safety
+///
+/// Same bounds contract as the AVX2 version.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub unsafe fn row_acc8(idx: &[u32], val: &[f64], x: &[f64], d: usize, c0: usize) -> [f64; 8] {
+    let mut acc = [0.0f64; 8];
+    for (&j, &aij) in idx.iter().zip(val) {
+        let base = j as usize * d + c0;
+        for (c, a) in acc.iter_mut().enumerate() {
+            *a += aij * x[base + c];
+        }
+    }
+    acc
+}
+
+/// Accumulate a SELL-C-σ group of four slots over lane columns
+/// `[c0, c0 + 8)`. Entry `g` of depth `k` lives at
+/// `base + k * stride + g`; the `k` loop is ascending, so each slot sees
+/// its entries in original column order — identical to the scalar
+/// `group_lane`.
+///
+/// # Safety
+///
+/// [`lane8_fast`] must have returned `true`;
+/// `base + (len-1)*stride + 4 <= values.len()` (equal `indices` length)
+/// and every stored index must satisfy `j·d + c0 + 8 <= x.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn sell_acc8x4(
+    values: &[f64],
+    indices: &[u32],
+    base: usize,
+    stride: usize,
+    len: usize,
+    x: &[f64],
+    d: usize,
+    c0: usize,
+    acc: &mut [[f64; 8]; 4],
+) {
+    use std::arch::x86_64::*;
+    let mut a = [[_mm256_setzero_pd(); 2]; 4];
+    let xp = x.as_ptr();
+    for k in 0..len {
+        let e = base + k * stride;
+        for (g, ag) in a.iter_mut().enumerate() {
+            let aij = unsafe { *values.get_unchecked(e + g) };
+            let j = unsafe { *indices.get_unchecked(e + g) } as usize;
+            let p = unsafe { xp.add(j * d + c0) };
+            let va = _mm256_set1_pd(aij);
+            ag[0] = _mm256_add_pd(ag[0], _mm256_mul_pd(va, unsafe { _mm256_loadu_pd(p) }));
+            ag[1] = _mm256_add_pd(ag[1], _mm256_mul_pd(va, unsafe { _mm256_loadu_pd(p.add(4)) }));
+        }
+    }
+    for (g, ag) in a.iter().enumerate() {
+        unsafe {
+            _mm256_storeu_pd(acc[g].as_mut_ptr(), ag[0]);
+            _mm256_storeu_pd(acc[g].as_mut_ptr().add(4), ag[1]);
+        }
+    }
+}
+
+/// NEON version of [`sell_acc8x4`]; same contract.
+///
+/// # Safety
+///
+/// Same bounds contract as the AVX2 version.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn sell_acc8x4(
+    values: &[f64],
+    indices: &[u32],
+    base: usize,
+    stride: usize,
+    len: usize,
+    x: &[f64],
+    d: usize,
+    c0: usize,
+    acc: &mut [[f64; 8]; 4],
+) {
+    use std::arch::aarch64::*;
+    let mut a = unsafe { [[vdupq_n_f64(0.0); 4]; 4] };
+    let xp = x.as_ptr();
+    for k in 0..len {
+        let e = base + k * stride;
+        for (g, ag) in a.iter_mut().enumerate() {
+            let aij = unsafe { *values.get_unchecked(e + g) };
+            let j = unsafe { *indices.get_unchecked(e + g) } as usize;
+            let p = unsafe { xp.add(j * d + c0) };
+            let va = unsafe { vdupq_n_f64(aij) };
+            for (q, aq) in ag.iter_mut().enumerate() {
+                *aq = unsafe { vaddq_f64(*aq, vmulq_f64(va, vld1q_f64(p.add(2 * q)))) };
+            }
+        }
+    }
+    for (g, ag) in a.iter().enumerate() {
+        for (q, aq) in ag.iter().enumerate() {
+            unsafe { vst1q_f64(acc[g].as_mut_ptr().add(2 * q), *aq) };
+        }
+    }
+}
+
+/// Portable stub (never called; see [`row_acc8`]'s stub).
+///
+/// # Safety
+///
+/// Same bounds contract as the AVX2 version.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn sell_acc8x4(
+    values: &[f64],
+    indices: &[u32],
+    base: usize,
+    stride: usize,
+    len: usize,
+    x: &[f64],
+    d: usize,
+    c0: usize,
+    acc: &mut [[f64; 8]; 4],
+) {
+    for k in 0..len {
+        let e = base + k * stride;
+        for g in 0..4 {
+            let aij = values[e + g];
+            let xb = indices[e + g] as usize * d + c0;
+            for c in 0..8 {
+                acc[g][c] += aij * x[xb + c];
+            }
+        }
+    }
+}

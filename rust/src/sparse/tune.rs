@@ -1,0 +1,176 @@
+//! One-shot runtime kernel autotuner.
+//!
+//! `--tune` micro-benchmarks the fused SpMM on the *actual* matrix at
+//! job start: lane-width cap {16 where profitable, 8, 4, 1} ×
+//! row/slice-block nonzero budget {16 Ki, 32 Ki, 64 Ki} × storage
+//! format {CSR, SELL-C-σ}, then runs the job with the fastest point.
+//! Results are cached per `(rows, nnz, d)` shape for the life of the
+//! process, so repeated jobs on the same matrix pay the sweep once;
+//! tuning time is reported through the `obs` "autotune" stage and in
+//! [`TunePoint::tune_ms`].
+//!
+//! Tuning is pure performance policy: every candidate produces
+//! bitwise-identical output (asserted in `par_determinism`), so a wrong
+//! pick can only cost time, never correctness.
+
+use std::sync::Mutex;
+
+use super::csr::{Csr, KernelCfg};
+use super::sellcs::SellCs;
+use crate::linalg::Mat;
+use crate::par::{ExecPolicy, Workspace};
+use crate::util::rng::Rng;
+use crate::util::timer;
+
+/// Storage format the sweep found fastest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunedFormat {
+    Csr,
+    Sell,
+}
+
+/// Autotune result: the winning format and kernel configuration, plus
+/// the measurements behind the choice.
+#[derive(Clone, Copy, Debug)]
+pub struct TunePoint {
+    pub format: TunedFormat,
+    pub cfg: KernelCfg,
+    /// Best CSR candidate's throughput (GFLOP/s, 2·nnz·d per product).
+    pub csr_gflops: f64,
+    /// Best SELL candidate's throughput (0 when SELL was not swept).
+    pub sell_gflops: f64,
+    /// Wall-clock cost of the sweep (0 on a cache hit).
+    pub tune_ms: f64,
+    /// Whether this point came from the in-process shape cache.
+    pub cached: bool,
+}
+
+/// Per-process tune cache keyed by `(rows, nnz, d)`. A const-init
+/// assoc-list `Mutex<Vec<..>>` keeps the crate dependency-free; tune
+/// sweeps are rare, so linear scans are irrelevant.
+static CACHE: Mutex<Vec<((usize, usize, usize), TunePoint)>> = Mutex::new(Vec::new());
+
+/// Row/slice-block nonzero budgets the sweep tries.
+const ROW_BLOCKS: [usize; 3] = [16 * 1024, 32 * 1024, 64 * 1024];
+
+/// Measure lane caps × block budgets × formats on `a` for RHS width `d`
+/// and return the fastest point. Serial kernels are timed — the knobs
+/// shape per-core work, and threading splits the same loops.
+pub fn tune(a: &Csr, d: usize) -> TunePoint {
+    let d = d.max(1);
+    let key = (a.rows, a.nnz(), d);
+    if let Some((_, hit)) = CACHE.lock().unwrap().iter().find(|(k, _)| *k == key) {
+        let mut p = *hit;
+        p.cached = true;
+        p.tune_ms = 0.0;
+        return p;
+    }
+    let point = sweep(a, d);
+    CACHE.lock().unwrap().push((key, point));
+    point
+}
+
+fn sweep(a: &Csr, d: usize) -> TunePoint {
+    let default = TunePoint {
+        format: TunedFormat::Csr,
+        cfg: KernelCfg::default(),
+        csr_gflops: 0.0,
+        sell_gflops: 0.0,
+        tune_ms: 0.0,
+        cached: false,
+    };
+    if a.rows == 0 || a.nnz() == 0 {
+        return default;
+    }
+    let _span = crate::obs::span(&crate::obs::AUTOTUNE);
+    let t = timer::Timer::start();
+
+    let mut rng = Rng::new(0x5e11_c516);
+    let x = Mat::randn(&mut rng, a.cols, d);
+    let mut y = Mat::zeros(a.rows, d);
+    let z = Mat::zeros(a.rows, d);
+    let exec = ExecPolicy::serial();
+    let mut ws = Workspace::new();
+    let flops = 2.0 * a.nnz() as f64 * d as f64;
+    // Keep the sweep cheap on huge matrices: one timed reps after the
+    // harness warm-up, three on small ones where noise matters more.
+    let reps = if flops > 4e8 { 1 } else { 3 };
+    let mut tiles = vec![8usize, 4, 1];
+    if d >= 16 {
+        tiles.insert(0, 16);
+    }
+
+    let mut best_csr: (f64, KernelCfg) = (f64::INFINITY, KernelCfg::default());
+    for &max_tile in &tiles {
+        for &row_block_nnz in &ROW_BLOCKS {
+            let cfg = KernelCfg { max_tile, row_block_nnz };
+            let s = timer::bench(reps, || {
+                a.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &exec, &mut ws, cfg)
+            });
+            if s.mean_secs < best_csr.0 {
+                best_csr = (s.mean_secs, cfg);
+            }
+        }
+    }
+
+    // SELL sweep reuses the winning block budget: the budget bounds the
+    // same cache-residency trade-off in both layouts.
+    let mut best_sell: (f64, KernelCfg) = (f64::INFINITY, best_csr.1);
+    if let Ok(sell) = SellCs::from_csr_default(a) {
+        for &max_tile in &tiles {
+            let cfg = KernelCfg { max_tile, row_block_nnz: best_csr.1.row_block_nnz };
+            let s = timer::bench(reps, || {
+                sell.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &exec, &mut ws, cfg)
+            });
+            if s.mean_secs < best_sell.0 {
+                best_sell = (s.mean_secs, cfg);
+            }
+        }
+    }
+
+    let (format, cfg) = if best_sell.0 < best_csr.0 {
+        (TunedFormat::Sell, best_sell.1)
+    } else {
+        (TunedFormat::Csr, best_csr.1)
+    };
+    TunePoint {
+        format,
+        cfg,
+        csr_gflops: flops / best_csr.0 / 1e9,
+        sell_gflops: if best_sell.0.is_finite() { flops / best_sell.0 / 1e9 } else { 0.0 },
+        tune_ms: t.elapsed_secs() * 1e3,
+        cached: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn tune_returns_valid_point_and_caches_by_shape() {
+        let mut rng = Rng::new(907);
+        let g = gen::barabasi_albert(&mut rng, 300, 3);
+        let na = crate::sparse::graph::normalized_adjacency(&g.adj);
+        let p = tune(&na, 8);
+        assert!(p.cfg.max_tile >= 1 && p.cfg.row_block_nnz >= ROW_BLOCKS[0]);
+        assert!(p.csr_gflops > 0.0 && p.sell_gflops > 0.0);
+        assert!(!p.cached && p.tune_ms >= 0.0);
+        let p2 = tune(&na, 8);
+        assert!(p2.cached, "second call with the same shape must hit the cache");
+        assert_eq!(p2.format, p.format);
+        assert_eq!(p2.cfg, p.cfg);
+        // Different d is a different shape: fresh sweep.
+        let p3 = tune(&na, 16);
+        assert!(!p3.cached);
+    }
+
+    #[test]
+    fn tune_handles_degenerate_matrices() {
+        let empty = Csr::from_coo(&crate::sparse::Coo::new(0, 0));
+        let p = tune(&empty, 4);
+        assert_eq!(p.format, TunedFormat::Csr);
+        assert_eq!(p.cfg, KernelCfg::default());
+    }
+}

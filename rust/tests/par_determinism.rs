@@ -1,6 +1,7 @@
 //! Cross-layer determinism of the parallel execution layer
 //! (`cse::par`): every hot path it touches — SpMM (including the
-//! column-tiled fused axpby kernel, at any tile width), matvec,
+//! column-tiled fused axpby kernel, at any tile width, in both the CSR
+//! and SELL-C-σ storage formats), matvec,
 //! transpose, the FastEmbed recursion, the coordinator pipeline, the
 //! eigensolvers
 //! (now including the parallel MGS / Lanczos reorthogonalization),
@@ -24,10 +25,10 @@ use cse::funcs::SpectralFn;
 use cse::index::{SimHashIndex, SimHashParams};
 use cse::linalg::qr::{mgs_orthonormalize, mgs_orthonormalize_with};
 use cse::linalg::Mat;
-use cse::par::{ExecPolicy, Workspace};
+use cse::par::{CancelToken, ExecPolicy, Workspace};
 use cse::poly::legendre;
 use cse::sparse::coo::Coo;
-use cse::sparse::{gen, graph, Csr};
+use cse::sparse::{gen, graph, Csr, KernelCfg, SellCs};
 use cse::util::rng::Rng;
 
 const THREADS: [usize; 3] = [1, 2, 4];
@@ -317,6 +318,99 @@ fn workspace_reuse_is_bitwise_invisible() {
             assert_eq!(mvr, mv);
             ws.give_mat(e);
         }
+    }
+}
+
+/// The SELL-C-σ backend's determinism contract: bitwise-identical to
+/// CSR at every thread count × tile cap × slice height, on a matrix
+/// deliberately containing empty rows and high-degree hub rows (the
+/// shapes where padding and the σ-window sort actually engage).
+#[test]
+fn sell_matches_csr_bitwise_across_threads_tiles_and_slice_heights() {
+    let mut rng = Rng::new(53);
+    let (rows, cols) = (600usize, 500usize);
+    let mut coo = Coo::new(rows, cols);
+    for i in 0..rows {
+        if i % 7 == 0 {
+            continue; // empty row
+        }
+        for _ in 0..1 + rng.below(6) {
+            coo.push(i, rng.below(cols), rng.normal());
+        }
+    }
+    for &hub in &[0usize, 299, 598] {
+        for _ in 0..200 {
+            coo.push(hub, rng.below(cols), rng.normal());
+        }
+    }
+    let a = Csr::from_coo(&coo);
+    let (alpha, beta) = (1.75, -0.4);
+    for &d in &[3usize, 8, 24] {
+        let x = Mat::randn(&mut rng, cols, d);
+        let z = Mat::randn(&mut rng, rows, d);
+        // Unfused CSR reference.
+        let mut want = a.spmm(&x);
+        for (yv, zv) in want.data.iter_mut().zip(&z.data) {
+            *yv = alpha * *yv + beta * zv;
+        }
+        let mut ws = Workspace::new();
+        for &chunk in &[4usize, 8, 32] {
+            let s = SellCs::from_csr(&a, chunk, 64).unwrap();
+            for threads in THREADS {
+                let exec = ExecPolicy::with_threads(threads);
+                let mut y = Mat::zeros(rows, d);
+                s.spmm_axpby_into_ws(&x, alpha, beta, &z, &mut y, &exec, &mut ws);
+                assert_eq!(y.data, want.data, "sell C={chunk} d={d} @ {threads} threads");
+            }
+            for max_tile in [1usize, 4, 8] {
+                let mut y = Mat::zeros(rows, d);
+                s.spmm_axpby_max_tile(&x, alpha, beta, &z, &mut y, max_tile);
+                assert_eq!(y.data, want.data, "sell C={chunk} d={d} max_tile={max_tile}");
+            }
+            // Autotuner-reachable configurations move block boundaries
+            // only: a 16-lane cap and a tiny slice-block budget change
+            // nothing either.
+            for cfg in [
+                KernelCfg { max_tile: 16, row_block_nnz: 16 * 1024 },
+                KernelCfg { max_tile: 8, row_block_nnz: 1 },
+            ] {
+                let exec = ExecPolicy::with_threads(4);
+                let mut y = Mat::zeros(rows, d);
+                s.spmm_axpby_into_ws_cfg(&x, alpha, beta, &z, &mut y, &exec, &mut ws, cfg);
+                assert_eq!(y.data, want.data, "sell C={chunk} d={d} cfg={cfg:?}");
+            }
+        }
+    }
+}
+
+/// A cancelled workspace token must stop the SELL kernel at a slice
+/// block boundary without writing: with the token tripped before the
+/// call, a prefilled output comes back untouched (same contract as the
+/// CSR row-block path).
+#[test]
+fn sell_cancel_leaves_prefilled_output_untouched() {
+    let mut rng = Rng::new(54);
+    let a = random_csr(&mut rng, 400, 400, 2400);
+    let s = SellCs::from_csr_default(&a).unwrap();
+    let x = Mat::randn(&mut rng, 400, 8);
+    for threads in THREADS {
+        let exec = ExecPolicy::with_threads(threads);
+        let mut ws = Workspace::new();
+        let token = CancelToken::new();
+        token.cancel();
+        ws.cancel = Some(token);
+        let mut y = Mat::zeros(400, 8);
+        y.data.fill(7.0);
+        s.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert!(
+            y.data.iter().all(|&v| v == 7.0),
+            "cancelled product wrote output @ {threads} threads"
+        );
+        // Clearing the token resumes normal (bitwise-correct) service
+        // through the same workspace.
+        ws.cancel = None;
+        s.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, a.spmm(&x).data, "post-cancel product @ {threads} threads");
     }
 }
 
