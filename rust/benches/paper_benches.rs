@@ -90,6 +90,10 @@ fn main() {
         eprintln!("no experiment matches {args:?}; available: {all:?}");
         std::process::exit(2);
     }
+    // Pool workers pin to node-local core sets at spawn when the build
+    // supports it (`--features affinity` on Linux); recorded as the
+    // `pin` flag in the bench JSON entries. Bitwise-invisible.
+    cse::par::affinity::set_pinning(cse::par::affinity::can_pin());
     std::fs::create_dir_all("bench_out").ok();
     for name in selected {
         println!("\n=============================================================");
@@ -704,6 +708,13 @@ fn serving() {
     entry.insert("workers".to_string(), Json::Num(workers as f64));
     entry.insert("results".to_string(), Json::Arr(json_rows));
     entry.insert("stages".to_string(), stage_delta_json(&stage_base));
+    let topo = cse::par::topo::detect();
+    let mut topology = std::collections::BTreeMap::new();
+    topology.insert("nodes".to_string(), Json::Num(topo.num_nodes() as f64));
+    topology.insert("physical_cores".to_string(), Json::Num(topo.physical_cores() as f64));
+    topology.insert("smt".to_string(), Json::Bool(topo.smt()));
+    entry.insert("topology".to_string(), Json::Obj(topology));
+    entry.insert("pin".to_string(), Json::Bool(cse::par::affinity::pinning_enabled()));
     cse::obs::set_stats(false);
     // Preserve prior runs as a trajectory; a legacy single-run file (and
     // old entries still carrying `mean_us`) contribute as-is.
@@ -1056,6 +1067,47 @@ fn kernels() {
         tp.cfg.max_tile, tp.cfg.row_block_nnz, tp.csr_gflops, tp.sell_gflops, tp.tune_ms
     );
 
+    // NUMA measurement set: d=128 SpMM through first-touch-placed arrays
+    // vs the freshly-built baseline, same threaded policy, both formats.
+    // Placement is a verbatim repack, so every output is asserted bitwise
+    // against the scalar reference. On single-node hosts the repack lands
+    // on the same node and the CI gate only requires parity
+    // (numa_speedup >= 0.98); on multi-node hosts it should win.
+    let topo = cse::par::topo::detect();
+    let exec_numa = ExecPolicy::with_threads(4.min(topo.physical_cores().max(1)));
+    let mut y_numa = Mat::zeros(n, d_wide);
+    let csr_numa_base = cse::util::timer::bench(reps, || {
+        na.spmm_into_ws(&xw, &mut y_numa, &exec_numa, &mut ws)
+    });
+    assert_eq!(y_numa.data, yw_ref.data, "threaded CSR baseline must match reference bitwise");
+    let mut na_placed = na.clone();
+    na_placed.place(&exec_numa);
+    let csr_numa_placed = cse::util::timer::bench(reps, || {
+        na_placed.spmm_into_ws(&xw, &mut y_numa, &exec_numa, &mut ws)
+    });
+    assert_eq!(y_numa.data, yw_ref.data, "placed CSR must be bitwise-identical");
+    let mut sell_placed = sell.clone();
+    sell_placed.place(&exec_numa);
+    let sell_numa_base = cse::util::timer::bench(reps, || {
+        sell.spmm_into_ws(&xw, &mut y_numa, &exec_numa, &mut ws)
+    });
+    assert_eq!(y_numa.data, yw_ref.data, "threaded SELL baseline must match reference bitwise");
+    let sell_numa_placed = cse::util::timer::bench(reps, || {
+        sell_placed.spmm_into_ws(&xw, &mut y_numa, &exec_numa, &mut ws)
+    });
+    assert_eq!(y_numa.data, yw_ref.data, "placed SELL must be bitwise-identical");
+    let numa_speedup_csr = csr_numa_base.mean_secs / csr_numa_placed.mean_secs;
+    let numa_speedup_sell = sell_numa_base.mean_secs / sell_numa_placed.mean_secs;
+    let numa_speedup = numa_speedup_csr.min(numa_speedup_sell);
+    println!(
+        "\nNUMA placement @ d={d_wide} ({} node(s), {} physical cores, pinned={}): \
+         csr {numa_speedup_csr:.2}x, sell {numa_speedup_sell:.2}x \
+         (single-node gate: >= 0.98x)",
+        topo.num_nodes(),
+        topo.physical_cores(),
+        cse::par::affinity::pinning_enabled()
+    );
+
     // Fused-step accounting: wrap the operator and count which entry
     // point the three-term recurrence drives. Every interior step must
     // arrive through the fused axpby entry — one output pass, where the
@@ -1229,6 +1281,19 @@ fn kernels() {
             Json::Num(format_speedup_sell_vs_csr_powerlaw),
         ),
         ("sell_padding_ratio_powerlaw", Json::Num(sell_pl.padding_ratio())),
+        ("numa_speedup", Json::Num(numa_speedup)),
+        ("numa_speedup_csr", Json::Num(numa_speedup_csr)),
+        ("numa_speedup_sell", Json::Num(numa_speedup_sell)),
+        ("numa_place", Json::Bool(true)),
+        ("pin", Json::Bool(cse::par::affinity::pinning_enabled())),
+        (
+            "topology",
+            obj(vec![
+                ("nodes", Json::Num(topo.num_nodes() as f64)),
+                ("physical_cores", Json::Num(topo.physical_cores() as f64)),
+                ("smt", Json::Bool(topo.smt())),
+            ]),
+        ),
         (
             "autotune",
             obj(vec![

@@ -85,6 +85,15 @@ pub struct EmbedJob {
     /// returns [`JobError::DeadlineExceeded`] with partial-progress
     /// stats instead of hanging.
     pub deadline_ms: Option<u64>,
+    /// Base delay in milliseconds for jittered exponential backoff
+    /// between shard retry attempts (`0` — the default — retries
+    /// immediately, the pre-backoff behaviour). Attempt `k` sleeps a
+    /// duration in `[c/2, c]` where `c = base · 2^min(k−1, 6)`,
+    /// jittered by a splitmix64 hash of `(shard, attempt)` — a pure
+    /// function, so runs under `--fault-spec` seeds stay exactly
+    /// reproducible. Backoff delays scheduling only; the retried
+    /// shard's bits are unchanged.
+    pub retry_backoff_ms: u64,
 }
 
 impl EmbedJob {
@@ -97,6 +106,7 @@ impl EmbedJob {
             auto_threads: false,
             max_retries: DEFAULT_MAX_RETRIES,
             deadline_ms: None,
+            retry_backoff_ms: 0,
         }
     }
 }
@@ -188,8 +198,12 @@ impl Coordinator {
         // Resolve the two parallelism axes: explicit knobs always pass
         // through; `workers == 0` auto-composes the worker count, and
         // `job.auto_threads` opts the kernel thread count into the same
-        // core-budget split (`workers × threads ≤ cores`).
-        let cores = std::thread::available_parallelism().map_or(1, |c| c.get());
+        // core-budget split (`workers × threads ≤ cores`). The budget
+        // counts *physical* cores (SMT sibling groups share execution
+        // ports, so hyperthreads are not full cores for these
+        // bandwidth-bound kernels); single-node fallback detection
+        // degrades to `available_parallelism()`.
+        let cores = crate::par::topo::detect().physical_cores();
         let width = if job.shard_width == 0 {
             let workers_hint = if self.workers == 0 { cores } else { self.workers };
             par::adaptive_shard_width(n, d, workers_hint)
@@ -286,6 +300,7 @@ impl Coordinator {
                             exec,
                             &mut ws,
                             job.max_retries,
+                            job.retry_backoff_ms,
                             &cancel,
                             &metrics,
                         ) {
@@ -398,6 +413,7 @@ fn run_shard(
     exec: &ExecPolicy,
     ws: &mut Workspace,
     max_retries: usize,
+    retry_backoff_ms: u64,
     cancel: &CancelToken,
     metrics: &Metrics,
 ) -> ShardOutcome {
@@ -429,9 +445,38 @@ fn run_shard(
                 attempt += 1;
                 metrics.shard_retry();
                 crate::obs::failstats::SHARD_RETRIES.fetch_add(1, Ordering::Relaxed);
+                // Jittered backoff before re-executing: spreads retry
+                // storms out in time (transient resource pressure) and
+                // de-synchronizes shards that failed together. The
+                // delay is a pure function of (shard, attempt), so
+                // fault-injected runs remain exactly reproducible.
+                let delay = backoff_delay_ms(retry_backoff_ms, idx, attempt);
+                if delay > 0 && !cancel.is_cancelled() {
+                    std::thread::sleep(Duration::from_millis(delay));
+                }
             }
         }
     }
+}
+
+/// Backoff delay before retry `attempt` (1-based) of shard `shard_idx`:
+/// exponential ceiling `base · 2^min(attempt−1, 6)` (capped so a deep
+/// retry chain can't sleep unboundedly), jittered into `[c/2, c]` by a
+/// splitmix64 hash of `(shard_idx, attempt)`. Pure and deterministic —
+/// identical inputs always produce the identical delay — so
+/// fault-injected runs (`--fault-spec` seeds) reproduce exactly.
+/// Returns 0 when `base_ms == 0` (backoff disabled).
+fn backoff_delay_ms(base_ms: u64, shard_idx: usize, attempt: usize) -> u64 {
+    if base_ms == 0 {
+        return 0;
+    }
+    let exp = attempt.saturating_sub(1).min(6) as u32;
+    let ceiling = base_ms.saturating_mul(1u64 << exp);
+    let mut state = (shard_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt as u64;
+    let h = crate::util::rng::splitmix64(&mut state);
+    // Top 53 bits → uniform in [0, 1), mapped to [c/2, c].
+    let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+    ((ceiling as f64 * (0.5 + 0.5 * unit)).round() as u64).max(1)
 }
 
 /// One isolated execution attempt: panics inside the recurrence (or
@@ -515,7 +560,43 @@ mod tests {
             auto_threads: false,
             max_retries: DEFAULT_MAX_RETRIES,
             deadline_ms: None,
+            retry_backoff_ms: 0,
         }
+    }
+
+    #[test]
+    fn backoff_delay_is_deterministic_and_bounded() {
+        assert_eq!(backoff_delay_ms(0, 3, 1), 0, "base 0 disables backoff");
+        for idx in 0..5usize {
+            for attempt in 1..=10usize {
+                let a = backoff_delay_ms(20, idx, attempt);
+                let b = backoff_delay_ms(20, idx, attempt);
+                assert_eq!(a, b, "must be a pure function of (shard, attempt)");
+                let ceiling = 20u64 << attempt.saturating_sub(1).min(6) as u32;
+                assert!(
+                    a >= ceiling / 2 && a <= ceiling,
+                    "delay {a} outside [{}, {ceiling}] at attempt {attempt}",
+                    ceiling / 2
+                );
+            }
+        }
+        // The jitter must actually spread simultaneous failures apart.
+        let delays: Vec<u64> = (0..16).map(|i| backoff_delay_ms(100, i, 3)).collect();
+        let first = delays[0];
+        assert!(delays.iter().any(|&d| d != first), "jitter never varies across shards");
+    }
+
+    #[test]
+    fn backoff_does_not_change_result_bits() {
+        let mut rng = Rng::new(218);
+        let g = gen::erdos_renyi(&mut rng, 60, 180);
+        let na = graph::normalized_adjacency(&g.adj);
+        let base = Coordinator::new(2).run(&na, &job(12, 16, 1, 4)).unwrap();
+        let mut jb = job(12, 16, 1, 4);
+        jb.retry_backoff_ms = 5;
+        let with_backoff = Coordinator::new(2).run(&na, &jb).unwrap();
+        assert_eq!(base.e.data, with_backoff.e.data);
+        assert_eq!(with_backoff.retries, 0, "backoff alone must not cause retries");
     }
 
     #[test]

@@ -69,6 +69,7 @@ pub fn lanczos(
     let mut y_buf = Mat::zeros(n, 1);
     let mut w = vec![0.0; n];
     let mut dots = vec![0.0; m];
+    let mut reorth = ReorthScratch::default();
 
     for j in 0..m {
         // w = S v_j − beta_{j−1} v_{j−1}, fused into one output pass.
@@ -95,7 +96,7 @@ pub fn lanczos(
         basis.push(v.clone());
         // Full reorthogonalization (twice) against all previous vectors.
         for _ in 0..2 {
-            reorthogonalize(&mut w, &basis, &mut dots, exec);
+            reorthogonalize(&mut w, &basis, &mut dots, exec, &mut reorth);
         }
         let b = norm(&w);
         if j + 1 == m {
@@ -107,7 +108,7 @@ pub fn lanczos(
             for x in w.iter_mut() {
                 *x = rng.normal();
             }
-            reorthogonalize(&mut w, &basis, &mut dots, exec);
+            reorthogonalize(&mut w, &basis, &mut dots, exec, &mut reorth);
             normalize(&mut w);
             beta.push(0.0);
             std::mem::swap(&mut v, &mut w);
@@ -147,6 +148,19 @@ pub fn lanczos(
     PartialEig { values: theta[..k].to_vec(), vectors, matvecs }
 }
 
+/// Sticky partition scratch for [`reorthogonalize`], reused across
+/// Lanczos steps: the update-stage partition (over the fixed vector
+/// length) is computed once per run, and the dots-stage partition only
+/// when the growing basis changes its chunk count. Pure reuse of a
+/// pure computation — bitwise-invisible.
+#[derive(Default)]
+struct ReorthScratch {
+    dots: Vec<std::ops::Range<usize>>,
+    dots_key: par::StickyKey,
+    update: Vec<std::ops::Range<usize>>,
+    update_key: par::StickyKey,
+}
+
 /// One classical Gram–Schmidt pass of `w` against `basis`, parallel and
 /// deterministic: the basis dots fan out across the pool (each dot is a
 /// serial full-length sum, so its bits don't depend on scheduling), then
@@ -154,7 +168,13 @@ pub fn lanczos(
 /// Called twice per Lanczos step ("twice is enough"), this matches full
 /// reorthogonalization to machine precision while parallelizing the
 /// O(n·m) stage that used to be serial.
-fn reorthogonalize(w: &mut [f64], basis: &[Vec<f64>], dots: &mut [f64], exec: &ExecPolicy) {
+fn reorthogonalize(
+    w: &mut [f64],
+    basis: &[Vec<f64>],
+    dots: &mut [f64],
+    exec: &ExecPolicy,
+    scratch: &mut ReorthScratch,
+) {
     let nb = basis.len();
     if nb == 0 {
         return;
@@ -163,16 +183,22 @@ fn reorthogonalize(w: &mut [f64], basis: &[Vec<f64>], dots: &mut [f64], exec: &E
     let dots = &mut dots[..nb];
     {
         let w = &*w;
-        let ranges = par::even_ranges(nb, exec.chunks(nb));
-        exec.for_chunks(&ranges, dots, 1, |_, ks, out| {
+        par::even_ranges_sticky(nb, exec.chunks(nb), &mut scratch.dots, &mut scratch.dots_key);
+        exec.for_chunks(&scratch.dots, dots, 1, |_, ks, out| {
             for (slot, k) in out.iter_mut().zip(ks) {
                 *slot = basis[k].iter().zip(w).map(|(a, b)| a * b).sum();
             }
         });
     }
     let dots = &*dots;
-    let ranges = par::even_ranges(w.len(), exec.chunks(w.len()));
-    exec.for_chunks(&ranges, w, 1, |_, is, out| {
+    par::even_ranges_sticky(
+        w.len(),
+        exec.chunks(w.len()),
+        &mut scratch.update,
+        &mut scratch.update_key,
+    );
+    let ranges = &scratch.update;
+    exec.for_chunks(ranges, w, 1, |_, is, out| {
         for (slot, i) in out.iter_mut().zip(is) {
             let mut acc = *slot;
             for (d, u) in dots.iter().zip(basis) {

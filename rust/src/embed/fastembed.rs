@@ -184,6 +184,9 @@ pub fn apply_series(
 /// on `exec`'s persistent pool, so the scale-and-subtract recombination
 /// no longer re-reads the output block; only the coefficient axpy into
 /// the accumulator remains a separate (serial, memory-bound) sweep.
+/// The kernels' row/slice partition lists are sticky in `ws` (keyed on
+/// the operator's prefix array and thread count), so steady-state
+/// iterations skip the partition scan entirely.
 pub fn apply_series_ws(
     op: &(impl Operator + ?Sized),
     series: &Series,

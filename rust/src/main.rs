@@ -205,6 +205,65 @@ const THREADS_OPT: Opt = Opt {
     default: Some("0"),
 };
 
+/// Memory-locality knobs shared by the iterating subcommands. Both are
+/// pure performance policy: neither can change a single output bit.
+const LOCALITY_OPTS: &[Opt] = &[
+    Opt {
+        name: "numa",
+        help: "NUMA first-touch placement of the operator arrays: auto (place when \
+               more than one node is detected) | off",
+        default: Some("auto"),
+    },
+    Opt {
+        name: "pin",
+        help: "pin pool workers to node-local core sets (flag; needs a build with \
+               the `affinity` feature on Linux, no-op otherwise)",
+        default: None,
+    },
+];
+
+/// Apply `--pin`: a runtime opt-in the lazily-spawned pool workers see
+/// at spawn time, so this must run before the first parallel region.
+fn locality_setup(a: &Args) {
+    if a.flag("pin") {
+        cse::par::affinity::set_pinning(true);
+        if cse::par::affinity::can_pin() {
+            let topo = cse::par::topo::detect();
+            eprintln!(
+                "pinning pool workers round-robin across {} NUMA node(s)",
+                topo.num_nodes()
+            );
+        } else {
+            eprintln!(
+                "--pin requested but this build cannot pin (needs the `affinity` \
+                 cargo feature on Linux x86_64/aarch64); continuing unpinned"
+            );
+        }
+    }
+}
+
+/// Apply `--numa auto|off` to the built operator: first-touch placement
+/// of its index/value arrays when more than one node is detected
+/// (single-node hosts skip it — nothing to place).
+fn apply_numa(a: &Args, op: &mut SparseMat) -> Result<(), String> {
+    match a.get_or("numa", "auto") {
+        "off" => Ok(()),
+        "auto" => {
+            let topo = cse::par::topo::detect();
+            if topo.num_nodes() > 1 {
+                let exec = ExecPolicy::with_threads(topo.physical_cores());
+                op.place(&exec);
+                eprintln!(
+                    "numa: first-touch placed operator arrays across {} nodes",
+                    topo.num_nodes()
+                );
+            }
+            Ok(())
+        }
+        other => Err(format!("--numa: expected auto|off, got '{other}'")),
+    }
+}
+
 /// Robustness knobs shared by the coordinator-driven subcommands.
 const FAULT_OPTS: &[Opt] = &[
     Opt {
@@ -221,6 +280,13 @@ const FAULT_OPTS: &[Opt] = &[
     Opt {
         name: "deadline-ms",
         help: "embedding-job deadline in milliseconds (0 = no deadline)",
+        default: Some("0"),
+    },
+    Opt {
+        name: "retry-backoff-ms",
+        help: "base delay for jittered exponential backoff between shard retries \
+               (0 = retry immediately); the jitter is a pure hash of (shard, attempt), \
+               so retry timing is deterministic under --fault-spec seeds",
         default: Some("0"),
     },
 ];
@@ -247,6 +313,7 @@ fn job_robustness(a: &Args, job: &mut EmbedJob) -> Result<(), String> {
         0 => None,
         ms => Some(ms),
     };
+    job.retry_backoff_ms = a.u64("retry-backoff-ms", 0)?;
     Ok(())
 }
 
@@ -336,7 +403,7 @@ fn cmd_gen_graph(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats", "tune"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune", "pin"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -359,6 +426,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
             Opt { name: "out", help: "embedding TSV output", default: Some("embedding.tsv") },
         ]);
         opts.extend_from_slice(FORMAT_OPTS);
+        opts.extend_from_slice(LOCALITY_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse embed", "Compressive spectral embedding of a graph", &opts));
@@ -366,10 +434,12 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
     }
     let trace = obs_setup(&a);
     fault_setup(&a)?;
+    locality_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let n = na.rows;
-    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
+    let mut op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
+    apply_numa(&a, &mut op)?;
     let workers = a.usize("workers", 0)?;
     let mut params = embed_params(&a)?;
     let (exec, auto_threads) = coord_exec(&a)?;
@@ -406,7 +476,7 @@ fn cmd_embed(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats", "tune"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune", "pin"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -415,15 +485,18 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
             THREADS_OPT,
         ]);
         opts.extend_from_slice(FORMAT_OPTS);
+        opts.extend_from_slice(LOCALITY_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse eig", "Partial eigendecomposition baselines", &opts));
         return Ok(());
     }
     let trace = obs_setup(&a);
+    locality_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let k = a.usize("eig-k", 50)?;
-    let op = build_operator(&a, na, k)?;
+    let mut op = build_operator(&a, na, k)?;
+    apply_numa(&a, &mut op)?;
     let exec = exec_from(&a)?;
     let mut rng = Rng::new(a.u64("seed", 0)?);
     let t = Timer::start();
@@ -449,7 +522,7 @@ fn cmd_eig(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats", "tune"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune", "pin"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -466,6 +539,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
             THREADS_OPT,
         ]);
         opts.extend_from_slice(FORMAT_OPTS);
+        opts.extend_from_slice(LOCALITY_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse cluster", "Embed + K-means + modularity", &opts));
@@ -473,10 +547,12 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
     }
     let trace = obs_setup(&a);
     fault_setup(&a)?;
+    locality_setup(&a);
     let (adj, labels) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let n = na.rows;
-    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 80)?, n))?;
+    let mut op = build_operator(&a, na, tune_d_hint(a.usize("d", 80)?, n))?;
+    apply_numa(&a, &mut op)?;
     let workers = a.usize("workers", 0)?;
     let mut params = Params { d: a.usize("d", 80)?, ..embed_params(&a)? };
     let (exec, auto_threads) = coord_exec(&a)?;
@@ -512,7 +588,7 @@ fn cmd_cluster(argv: Vec<String>) -> Result<(), String> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
-    let a = Args::parse(argv, &["help", "stats", "tune"])?;
+    let a = Args::parse(argv, &["help", "stats", "tune", "pin"])?;
     if a.flag("help") {
         let mut opts = COMMON_OPTS.to_vec();
         opts.extend_from_slice(&[
@@ -540,6 +616,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
             THREADS_OPT,
         ]);
         opts.extend_from_slice(FORMAT_OPTS);
+        opts.extend_from_slice(LOCALITY_OPTS);
         opts.extend_from_slice(FAULT_OPTS);
         opts.extend_from_slice(OBS_OPTS);
         println!("{}", usage("cse serve", "Similarity-query service demo", &opts));
@@ -547,10 +624,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), String> {
     }
     let trace = obs_setup(&a);
     fault_setup(&a)?;
+    locality_setup(&a);
     let (adj, _) = load_or_gen(&a)?;
     let na = graph::normalized_adjacency(&adj);
     let n = na.rows;
-    let op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
+    let mut op = build_operator(&a, na, tune_d_hint(a.usize("d", 0)?, n))?;
+    apply_numa(&a, &mut op)?;
     let workers = a.usize("workers", 2)?;
     // Query-phase worker pool: `0` auto-sizes to the core count (the
     // coordinator separately auto-composes its own shard split).

@@ -123,6 +123,9 @@ declare_stages! {
     /// One runtime kernel-autotune sweep (`sparse::tune`, cache misses
     /// only — cache hits never enter the tuner).
     AUTOTUNE => "autotune",
+    /// One NUMA first-touch repack of a sparse operator's arrays
+    /// (`Csr::place` / `SellCs::place`).
+    NUMA_PLACE => "numa_place",
     /// One polynomial three-term-recursion pass (`apply_series_ws`).
     APPLY_SERIES => "apply_series",
     /// One CGS2/MGS orthonormalization (`mgs_orthonormalize_ws`).
@@ -325,6 +328,19 @@ pub struct FailStats {
     pub faults_injected: u64,
 }
 
+/// Host-topology snapshot (from [`crate::par::topo::detect`]). `pinned`
+/// reflects the `--pin` runtime switch, not whether the build can
+/// actually pin — a pinned report from a non-`affinity` build means the
+/// flag was requested and silently downgraded to a no-op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TopoStats {
+    pub nodes: usize,
+    pub physical_cores: usize,
+    pub logical_cpus: usize,
+    pub smt: bool,
+    pub pinned: bool,
+}
+
 /// `Snapshot`-style point-in-time report over every declared stage and
 /// the pool counters — printed at job end under `--stats`, exported into
 /// the bench JSON breakdowns.
@@ -334,6 +350,7 @@ pub struct ObsReport {
     pub stages: Vec<StageStats>,
     pub pool: PoolStats,
     pub failures: FailStats,
+    pub topology: TopoStats,
 }
 
 impl ObsReport {
@@ -357,7 +374,15 @@ impl ObsReport {
                 })
             })
             .collect();
-        ObsReport { stages, pool: poolstats::capture(), failures: failstats::capture() }
+        let t = crate::par::topo::detect();
+        let topology = TopoStats {
+            nodes: t.num_nodes(),
+            physical_cores: t.physical_cores(),
+            logical_cpus: t.logical_cpus(),
+            smt: t.smt(),
+            pinned: crate::par::affinity::pinning_enabled(),
+        };
+        ObsReport { stages, pool: poolstats::capture(), failures: failstats::capture(), topology }
     }
 
     /// Human-readable table (percentiles are exact on the log-bucket
@@ -417,6 +442,14 @@ impl ObsReport {
             fs.queries_shed,
             fs.faults_injected
         );
+        // Same grep-friendly k=v form; the obs-smoke CI job asserts on
+        // the `topology: nodes=` prefix.
+        let t = &self.topology;
+        let _ = writeln!(
+            out,
+            "  topology: nodes={} physical_cores={} logical_cpus={} smt={} pinned={}",
+            t.nodes, t.physical_cores, t.logical_cpus, t.smt, t.pinned
+        );
         out
     }
 
@@ -458,10 +491,18 @@ impl ObsReport {
         failures.insert("fallback_exact".to_string(), Json::Num(fs.fallback_exact as f64));
         failures.insert("queries_shed".to_string(), Json::Num(fs.queries_shed as f64));
         failures.insert("faults_injected".to_string(), Json::Num(fs.faults_injected as f64));
+        let t = &self.topology;
+        let mut topology = BTreeMap::new();
+        topology.insert("nodes".to_string(), Json::Num(t.nodes as f64));
+        topology.insert("physical_cores".to_string(), Json::Num(t.physical_cores as f64));
+        topology.insert("logical_cpus".to_string(), Json::Num(t.logical_cpus as f64));
+        topology.insert("smt".to_string(), Json::Bool(t.smt));
+        topology.insert("pinned".to_string(), Json::Bool(t.pinned));
         let mut top = BTreeMap::new();
         top.insert("stages".to_string(), Json::Obj(stages));
         top.insert("pool".to_string(), Json::Obj(pool));
         top.insert("failures".to_string(), Json::Obj(failures));
+        top.insert("topology".to_string(), Json::Obj(topology));
         Json::Obj(top)
     }
 }
@@ -534,9 +575,13 @@ mod tests {
         assert!(s.count >= 2);
         assert!(s.p50_us <= s.p99_us && s.p99_us <= s.max_us + 1e-9);
         assert!(rep.render().contains("spmm"));
+        assert!(rep.render().contains("topology: nodes="), "topology line present");
+        assert!(rep.topology.logical_cpus >= rep.topology.physical_cores);
+        assert!(rep.topology.physical_cores >= 1 && rep.topology.nodes >= 1);
         let j = Json::parse(&rep.to_json().to_string()).expect("report JSON parses");
         assert!(j.get("stages").unwrap().get("spmm").is_some());
         assert!(j.get("pool").is_some());
+        assert!(j.get("topology").unwrap().get("nodes").is_some());
     }
 
     #[test]
@@ -546,6 +591,6 @@ mod tests {
         let n = names.len();
         names.dedup();
         assert_eq!(names.len(), n, "duplicate stage names");
-        assert_eq!(n, 16);
+        assert_eq!(n, 17);
     }
 }

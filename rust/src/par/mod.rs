@@ -35,8 +35,13 @@
 //! costs one lock + wake instead of `threads − 1` thread spawns. The
 //! policy carries the thread count plus the partitioning strategy (the
 //! [`ExecPolicy::oversplit`] load-balance factor behind
-//! [`ExecPolicy::chunks`]); core affinity is deliberately absent — std
-//! exposes no portable affinity API and the crate links nothing else.
+//! [`ExecPolicy::chunks`]). Memory locality lives here too: [`topo`]
+//! detects the host's CPU/NUMA layout from sysfs (zero deps,
+//! single-node fallback), and [`affinity`] optionally pins each pool
+//! worker to a node-local core set through a raw `sched_setaffinity`
+//! shim behind the off-by-default `affinity` feature — std still has no
+//! portable affinity API and the crate links no libc, so the default
+//! build compiles the same call sites against a no-op pinner.
 //! With `threads == 1` every primitive degenerates to a plain serial
 //! loop with zero synchronization, spawn, or allocation overhead (the
 //! CSR kernels skip partitioning entirely on their serial path), which
@@ -46,11 +51,14 @@
 
 use std::ops::Range;
 
+pub mod affinity;
 mod cancel;
 mod pool;
+pub mod topo;
 mod workspace;
 
 pub use cancel::CancelToken;
+pub use topo::Topology;
 pub use workspace::Workspace;
 
 /// Execution policy for a parallel region: how many OS threads to use
@@ -348,6 +356,55 @@ pub fn weighted_ranges_into(prefix: &[usize], parts: usize, out: &mut Vec<Range<
     }
 }
 
+/// Identity key of a cached (sticky) partition: what the ranges in a
+/// scratch buffer were computed from. `None` = scratch holds no valid
+/// partition. See [`weighted_ranges_sticky`] / [`even_ranges_sticky`].
+pub type StickyKey = Option<(usize, usize, usize)>;
+
+/// Sticky form of [`weighted_ranges_into`]: recompute the partition only
+/// when `(prefix identity, prefix length, parts)` differs from what
+/// `key` records, otherwise keep the cached ranges untouched.
+///
+/// Reuse is **bitwise-invisible**: the partitioner is a pure function of
+/// `(prefix, parts)`, so a recompute would reproduce the identical
+/// ranges — skipping it cannot move a chunk boundary, it only keeps the
+/// partition stable across regions so each pool worker tends to stream
+/// the same rows (and, after a first-touch `place`, the same pages)
+/// every iteration. The prefix is identified by pointer + length, which
+/// is sound because a stale match can only happen for an allocation of
+/// the same shape — yielding a valid (ascending, contiguous, covering)
+/// partition of the same index space either way.
+pub fn weighted_ranges_sticky(
+    prefix: &[usize],
+    parts: usize,
+    out: &mut Vec<Range<usize>>,
+    key: &mut StickyKey,
+) {
+    let k = (prefix.as_ptr() as usize, prefix.len(), parts);
+    if *key == Some(k) && !out.is_empty() {
+        return;
+    }
+    weighted_ranges_into(prefix, parts, out);
+    *key = Some(k);
+}
+
+/// Sticky form of [`even_ranges_into`] (same contract as
+/// [`weighted_ranges_sticky`]; keyed by `(items, parts)` — the
+/// partition is a pure function of exactly those two numbers).
+pub fn even_ranges_sticky(
+    items: usize,
+    parts: usize,
+    out: &mut Vec<Range<usize>>,
+    key: &mut StickyKey,
+) {
+    let k = (usize::MAX, items, parts);
+    if *key == Some(k) && !out.is_empty() {
+        return;
+    }
+    even_ranges_into(items, parts, out);
+    *key = Some(k);
+}
+
 /// Thread-count-INDEPENDENT chunk count: `items` split into chunks of
 /// ≈ `per_chunk` rows. Use for parallel regions that fold a
 /// floating-point reduction over per-chunk results — the chunk structure
@@ -478,6 +535,43 @@ mod tests {
         let rs = weighted_ranges(&prefix, 2);
         // Half the total weight (15) is reached inside row 4.
         assert!(rs[0].end <= 5, "first range {rs:?} should stop near the heavy rows");
+    }
+
+    #[test]
+    fn sticky_partitions_reuse_until_key_changes() {
+        let prefix: Vec<usize> = (0..=40).map(|i| i * i).collect();
+        let mut buf = Vec::new();
+        let mut key = None;
+        weighted_ranges_sticky(&prefix, 4, &mut buf, &mut key);
+        assert_eq!(buf, weighted_ranges(&prefix, 4));
+        let ptr = buf.as_ptr();
+        // Same (prefix, parts): the cached partition must be kept as-is.
+        weighted_ranges_sticky(&prefix, 4, &mut buf, &mut key);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(buf, weighted_ranges(&prefix, 4));
+        // Different parts: recompute.
+        weighted_ranges_sticky(&prefix, 7, &mut buf, &mut key);
+        assert_eq!(buf, weighted_ranges(&prefix, 7));
+        // Different prefix (fresh allocation): recompute.
+        let prefix2: Vec<usize> = (0..=25).map(|i| i * 3).collect();
+        weighted_ranges_sticky(&prefix2, 7, &mut buf, &mut key);
+        assert_eq!(buf, weighted_ranges(&prefix2, 7));
+
+        // Even variant: keyed purely by (items, parts).
+        let mut ekey = None;
+        even_ranges_sticky(100, 8, &mut buf, &mut ekey);
+        assert_eq!(buf, even_ranges(100, 8));
+        let ptr = buf.as_ptr();
+        even_ranges_sticky(100, 8, &mut buf, &mut ekey);
+        assert_eq!(buf.as_ptr(), ptr);
+        even_ranges_sticky(64, 8, &mut buf, &mut ekey);
+        assert_eq!(buf, even_ranges(64, 8));
+        // Zero-item partitions are never cached (the empty buffer is
+        // indistinguishable from "no partition yet").
+        even_ranges_sticky(0, 8, &mut buf, &mut ekey);
+        assert!(buf.is_empty());
+        even_ranges_sticky(0, 8, &mut buf, &mut ekey);
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -129,6 +129,10 @@ fn spawn_worker(p: &'static Pool, id: usize) {
 
 fn worker_loop(p: &'static Pool, id: usize) {
     IN_POOL.with(|f| f.set(true));
+    // Optional node-local core pinning (off-by-default `affinity`
+    // feature + runtime `--pin`): moves this thread, never a chunk
+    // boundary, so it cannot affect any output bit.
+    super::affinity::pin_worker(id);
     let mut seen = 0u64;
     loop {
         // Decide participation under the state lock; dereference the job

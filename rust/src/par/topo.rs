@@ -1,0 +1,296 @@
+//! CPU / NUMA topology detection from `/sys/devices/system/{cpu,node}`.
+//!
+//! Zero-dependency: the kernel's sysfs cpulist files ("0-3,8-11") are
+//! parsed directly. On non-Linux hosts, in containers that mask sysfs,
+//! or on any parse failure, detection degrades gracefully to a single
+//! node holding `available_parallelism()` CPUs with no SMT information
+//! — every consumer (auto_split, first-touch placement, worker pinning)
+//! treats that fallback as "locality unknown, behave as before".
+//!
+//! Topology is pure scheduling/placement policy: nothing here can move
+//! a bit of any result (see `rust/tests/par_determinism.rs`).
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+/// Host CPU topology: online CPUs, their NUMA-node grouping, and SMT
+/// sibling sets. Constructed by [`detect`] (cached for the process) or
+/// from a fixture tree via [`Topology::from_sysfs`] in tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Online CPU ids per NUMA node (index = node id after compaction;
+    /// always at least one node, each non-empty).
+    pub nodes: Vec<Vec<usize>>,
+    /// All online CPU ids, ascending.
+    pub cores: Vec<usize>,
+    /// SMT sibling groups: one entry per physical core listing the
+    /// hardware threads sharing it (singletons when SMT is off or the
+    /// sibling files are unreadable).
+    pub smt_siblings: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Single-node fallback: `cpus` CPUs, one node, no SMT info.
+    pub fn single_node(cpus: usize) -> Topology {
+        let cores: Vec<usize> = (0..cpus.max(1)).collect();
+        Topology {
+            nodes: vec![cores.clone()],
+            smt_siblings: cores.iter().map(|&c| vec![c]).collect(),
+            cores,
+        }
+    }
+
+    /// Parse a sysfs tree rooted at `root` (normally
+    /// `/sys/devices/system`; tests point this at fixture directories).
+    /// Returns `None` when the CPU list is missing or malformed — the
+    /// caller falls back to [`Topology::single_node`].
+    pub fn from_sysfs(root: &Path) -> Option<Topology> {
+        let cpu_dir = root.join("cpu");
+        let cores = read_cpulist(&cpu_dir.join("online"))
+            .or_else(|| read_cpulist(&cpu_dir.join("possible")))?;
+        if cores.is_empty() {
+            return None;
+        }
+
+        // NUMA nodes: node directories are contiguous from node0 in
+        // practice; stop at the first gap. Offline/foreign CPUs are
+        // dropped; empty (memory-only) nodes are skipped.
+        let mut nodes: Vec<Vec<usize>> = Vec::new();
+        let node_dir = root.join("node");
+        let mut n = 0usize;
+        loop {
+            let p = node_dir.join(format!("node{n}")).join("cpulist");
+            match read_cpulist(&p) {
+                Some(list) => {
+                    let local: Vec<usize> =
+                        list.into_iter().filter(|c| cores.binary_search(c).is_ok()).collect();
+                    if !local.is_empty() {
+                        nodes.push(local);
+                    }
+                }
+                None => break,
+            }
+            n += 1;
+        }
+        if nodes.is_empty() {
+            nodes.push(cores.clone());
+        }
+
+        // SMT sibling groups: walk online CPUs ascending, taking each
+        // CPU's thread_siblings_list the first time a member appears.
+        let mut smt_siblings: Vec<Vec<usize>> = Vec::new();
+        let mut grouped: Vec<usize> = Vec::new();
+        for &c in &cores {
+            if grouped.contains(&c) {
+                continue;
+            }
+            let p = cpu_dir.join(format!("cpu{c}")).join("topology").join("thread_siblings_list");
+            let sib: Vec<usize> = read_cpulist(&p)
+                .unwrap_or_else(|| vec![c])
+                .into_iter()
+                .filter(|s| cores.binary_search(s).is_ok())
+                .collect();
+            let sib = if sib.is_empty() { vec![c] } else { sib };
+            grouped.extend_from_slice(&sib);
+            smt_siblings.push(sib);
+        }
+
+        Some(Topology { nodes, cores, smt_siblings })
+    }
+
+    /// Online hardware threads.
+    pub fn logical_cpus(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Physical cores (SMT sibling groups). This is what `auto_split`
+    /// sizes worker × thread products from, so defaults stop treating
+    /// hyperthreads as full cores.
+    pub fn physical_cores(&self) -> usize {
+        self.smt_siblings.len().max(1)
+    }
+
+    /// NUMA node count (≥ 1).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len().max(1)
+    }
+
+    /// Whether any physical core exposes more than one hardware thread.
+    pub fn smt(&self) -> bool {
+        self.smt_siblings.iter().any(|g| g.len() > 1)
+    }
+
+    /// The node-local CPU set pool worker `id` should be pinned to:
+    /// workers are spread round-robin across nodes and confined to the
+    /// whole node (not one CPU), so the OS scheduler keeps freedom
+    /// inside the node while cross-node migration is ruled out.
+    pub fn worker_cpus(&self, id: usize) -> &[usize] {
+        &self.nodes[id % self.nodes.len().max(1)]
+    }
+}
+
+/// Detected host topology, computed once per process. Falls back to a
+/// single node of `available_parallelism()` CPUs whenever sysfs is
+/// absent or unreadable (non-Linux, sandboxed containers).
+pub fn detect() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(|| {
+        Topology::from_sysfs(Path::new("/sys/devices/system")).unwrap_or_else(|| {
+            Topology::single_node(std::thread::available_parallelism().map_or(1, |c| c.get()))
+        })
+    })
+}
+
+/// Read and parse one sysfs cpulist file. `None` on any I/O or parse
+/// failure — callers treat that as "this part of the tree is absent".
+fn read_cpulist(path: &Path) -> Option<Vec<usize>> {
+    parse_cpulist(&std::fs::read_to_string(path).ok()?)
+}
+
+/// Parse the kernel cpulist format: comma-separated single ids and
+/// inclusive ranges, e.g. `"0-3,8-11"` or `"0"`. Returns a sorted,
+/// deduplicated list; `None` on malformed input or an empty list.
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut cpus: Vec<usize> = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo || hi - lo > 1 << 20 {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(part.trim().parse().ok()?),
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    if cpus.is_empty() {
+        None
+    } else {
+        Some(cpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    #[test]
+    fn cpulist_grammar() {
+        assert_eq!(parse_cpulist("0-3,8-11"), Some(vec![0, 1, 2, 3, 8, 9, 10, 11]));
+        assert_eq!(parse_cpulist("0"), Some(vec![0]));
+        assert_eq!(parse_cpulist("0-0\n"), Some(vec![0]));
+        assert_eq!(parse_cpulist(" 2 , 1 , 1 "), Some(vec![1, 2]));
+        assert_eq!(parse_cpulist(""), None);
+        assert_eq!(parse_cpulist("  \n"), None);
+        assert_eq!(parse_cpulist("a-b"), None);
+        assert_eq!(parse_cpulist("3-1"), None);
+        assert_eq!(parse_cpulist("0-4x"), None);
+    }
+
+    /// Write a fixture sysfs tree: `files` maps a path relative to the
+    /// root to its contents.
+    fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+        let root = std::env::temp_dir().join(format!("cse_topo_fixture_{name}_{}", std::process::id()));
+        fs::remove_dir_all(&root).ok();
+        for (rel, contents) in files {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(&p, contents).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn one_node_container_tree() {
+        // A containerized host: online CPUs but no node dir and no
+        // topology files — one node, singleton sibling groups.
+        let root = fixture("container", &[("cpu/online", "0-3\n")]);
+        let t = Topology::from_sysfs(&root).unwrap();
+        assert_eq!(t.cores, vec![0, 1, 2, 3]);
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.nodes[0], vec![0, 1, 2, 3]);
+        assert_eq!(t.physical_cores(), 4);
+        assert!(!t.smt());
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn two_node_tree() {
+        let root = fixture(
+            "two_node",
+            &[
+                ("cpu/online", "0-7\n"),
+                ("node/node0/cpulist", "0-3\n"),
+                ("node/node1/cpulist", "4-7\n"),
+            ],
+        );
+        let t = Topology::from_sysfs(&root).unwrap();
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.nodes[0], vec![0, 1, 2, 3]);
+        assert_eq!(t.nodes[1], vec![4, 5, 6, 7]);
+        assert_eq!(t.physical_cores(), 8);
+        assert!(!t.smt());
+        // Round-robin worker spread across nodes.
+        assert_eq!(t.worker_cpus(0), &[0, 1, 2, 3]);
+        assert_eq!(t.worker_cpus(1), &[4, 5, 6, 7]);
+        assert_eq!(t.worker_cpus(2), &[0, 1, 2, 3]);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn smt_tree_counts_physical_cores() {
+        // 8 hardware threads, 4 physical cores: siblings (0,4) (1,5) ...
+        let mut files: Vec<(String, String)> = vec![
+            ("cpu/online".to_string(), "0-7\n".to_string()),
+            ("node/node0/cpulist".to_string(), "0-7\n".to_string()),
+        ];
+        for c in 0..8usize {
+            files.push((
+                format!("cpu/cpu{c}/topology/thread_siblings_list"),
+                format!("{},{}\n", c % 4, c % 4 + 4),
+            ));
+        }
+        let refs: Vec<(&str, &str)> =
+            files.iter().map(|(a, b)| (a.as_str(), b.as_str())).collect();
+        let root = fixture("smt", &refs);
+        let t = Topology::from_sysfs(&root).unwrap();
+        assert_eq!(t.logical_cpus(), 8);
+        assert_eq!(t.physical_cores(), 4);
+        assert!(t.smt());
+        assert_eq!(t.smt_siblings[0], vec![0, 4]);
+        assert_eq!(t.smt_siblings[3], vec![3, 7]);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_tree_falls_back() {
+        let root = std::env::temp_dir().join("cse_topo_no_such_tree");
+        assert_eq!(Topology::from_sysfs(&root), None);
+        let t = Topology::single_node(6);
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.physical_cores(), 6);
+        assert!(!t.smt());
+        assert_eq!(Topology::single_node(0).logical_cpus(), 1);
+    }
+
+    #[test]
+    fn detect_is_stable_and_nonempty() {
+        let a = detect();
+        let b = detect();
+        assert!(std::ptr::eq(a, b), "detect() must cache");
+        assert!(a.logical_cpus() >= 1);
+        assert!(a.physical_cores() >= 1);
+        assert!(a.num_nodes() >= 1);
+        assert!(a.nodes.iter().all(|n| !n.is_empty()));
+    }
+}

@@ -36,6 +36,16 @@ pub struct Workspace {
     /// [`Self::ranges`] so a format-mixed pipeline (e.g. CSR transpose
     /// feeding SELL products) never thrashes one list between layouts.
     pub slice_ranges: Vec<Range<usize>>,
+    /// Sticky-partition key for [`Self::ranges`]: identifies the
+    /// (matrix, policy) pair the cached list was computed for, so
+    /// repeated kernel calls over the same operator skip the
+    /// `weighted_ranges_into` prefix scan entirely. See
+    /// [`super::weighted_ranges_sticky`]. Reuse is bitwise-invisible:
+    /// the cached list is exactly what a recompute would produce.
+    pub ranges_key: super::StickyKey,
+    /// Sticky-partition key for [`Self::slice_ranges`] (the SELL-C-σ
+    /// slice partition), independent of the CSR row partition.
+    pub slice_ranges_key: super::StickyKey,
     /// Optional cancellation token polled by the kernels that draw
     /// scratch from this workspace (`spmm_into_ws` at row-block or
     /// slice-block granularity, `apply_series_ws` per recurrence step).
@@ -46,7 +56,14 @@ pub struct Workspace {
 
 impl Workspace {
     pub const fn new() -> Self {
-        Workspace { bufs: Vec::new(), ranges: Vec::new(), slice_ranges: Vec::new(), cancel: None }
+        Workspace {
+            bufs: Vec::new(),
+            ranges: Vec::new(),
+            slice_ranges: Vec::new(),
+            ranges_key: None,
+            slice_ranges_key: None,
+            cancel: None,
+        }
     }
 
     /// Whether the attached token (if any) has been tripped.

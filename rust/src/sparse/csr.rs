@@ -422,7 +422,12 @@ impl Csr {
             return;
         }
         let mut ranges = std::mem::take(&mut ws.ranges);
-        par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
+        par::weighted_ranges_sticky(
+            &self.indptr,
+            exec.chunks(self.rows),
+            &mut ranges,
+            &mut ws.ranges_key,
+        );
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
             self.spmm_rows(&x.data, d, rows, chunk, cfg, cancel.as_ref())
         });
@@ -492,7 +497,12 @@ impl Csr {
             return;
         }
         let mut ranges = std::mem::take(&mut ws.ranges);
-        par::weighted_ranges_into(&self.indptr, exec.chunks(self.rows), &mut ranges);
+        par::weighted_ranges_sticky(
+            &self.indptr,
+            exec.chunks(self.rows),
+            &mut ranges,
+            &mut ws.ranges_key,
+        );
         exec.for_chunks(&ranges, &mut y.data, d, |_, rows, chunk| {
             let zc = &z.data[rows.start * d..rows.end * d];
             self.blocked_rows_fused(&x.data, d, rows, chunk, alpha, beta, zc, cfg, cancel.as_ref());
@@ -789,6 +799,54 @@ impl Csr {
             }
         });
         Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// NUMA first-touch placement: re-materialize the index and value
+    /// arrays so each parallel worker first-touches exactly the pages
+    /// backing the row range it will later compute, using the same
+    /// nnz-balanced partition the SpMM kernels derive from `exec`.
+    /// Under Linux's default first-touch policy those pages land on
+    /// the node of the touching worker; paired with worker pinning
+    /// (`par::affinity`) the operator's data stays node-local for the
+    /// whole job. The contents are copied verbatim and `indptr` is
+    /// left in place — placement is bitwise-invisible
+    /// (`rust/tests/par_determinism.rs`), and the sticky partition key
+    /// (which identifies the matrix by its `indptr` buffer) stays
+    /// valid across a `place`.
+    pub fn place(&mut self, exec: &ExecPolicy) {
+        if self.rows == 0 || self.nnz() == 0 || exec.is_serial() {
+            return;
+        }
+        let _span = crate::obs::span(&crate::obs::NUMA_PLACE);
+        let ranges = par::weighted_ranges(&self.indptr, exec.chunks(self.rows));
+        let nnz = self.nnz();
+        // Fresh zeroed Vecs come from lazily-mapped pages (untouched
+        // until written), so the parallel copy below is the first touch.
+        let mut values = vec![0.0f64; nnz];
+        let mut indices = vec![0u32; nnz];
+        // Raw-pointer wrapper for the disjoint per-range writes (same
+        // idiom as the pool's chunk dispatch, local to this method).
+        struct SendMut<T>(*mut T);
+        unsafe impl<T> Send for SendMut<T> {}
+        unsafe impl<T> Sync for SendMut<T> {}
+        let vp = SendMut(values.as_mut_ptr());
+        let ip = SendMut(indices.as_mut_ptr());
+        let ranges = &ranges;
+        exec.run_indexed(ranges.len(), |k| {
+            let r = &ranges[k];
+            let (s, e) = (self.indptr[r.start], self.indptr[r.end]);
+            // SAFETY: the partition is ascending, contiguous, and
+            // covering, so `[s, e)` segments are disjoint across `k`
+            // and in-bounds for all three buffers; each element is
+            // written by exactly one worker and the Vecs outlive the
+            // region (`run_indexed` joins before returning).
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.values.as_ptr().add(s), vp.0.add(s), e - s);
+                std::ptr::copy_nonoverlapping(self.indices.as_ptr().add(s), ip.0.add(s), e - s);
+            }
+        });
+        self.values = values;
+        self.indices = indices;
     }
 
     /// Dense conversion (tests / small oracles only).

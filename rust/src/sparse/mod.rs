@@ -157,6 +157,18 @@ impl SparseMat {
         }
     }
 
+    /// NUMA first-touch placement of the backend's arrays
+    /// ([`Csr::place`] / [`SellCs::place`]): parallel workers re-touch
+    /// the pages of the partition ranges they will later compute, so
+    /// under first-touch paging the operator's data lands node-local.
+    /// Bitwise-invisible — pure memory-locality policy.
+    pub fn place(&mut self, exec: &crate::par::ExecPolicy) {
+        match self {
+            SparseMat::Csr { mat, .. } => mat.place(exec),
+            SparseMat::Sell { mat, .. } => mat.place(exec),
+        }
+    }
+
     /// Y = A X with the backend's kernels and tuned configuration.
     pub fn spmm_into_ws(
         &self,

@@ -203,6 +203,46 @@ impl SellCs {
         (self.slice_ptr[s + 1] - self.slice_ptr[s]) / self.chunk
     }
 
+    /// NUMA first-touch placement: re-materialize the packed index and
+    /// value arrays so each parallel worker first-touches exactly the
+    /// pages backing the slice range it will later compute, using the
+    /// same entry-balanced partition the SELL kernels derive from
+    /// `exec`. The SELL counterpart of [`Csr::place`]: contents are
+    /// copied verbatim and `slice_ptr` stays in place (it keys the
+    /// sticky partition), so placement is bitwise-invisible.
+    pub fn place(&mut self, exec: &ExecPolicy) {
+        if self.n_slices() == 0 || self.stored() == 0 || exec.is_serial() {
+            return;
+        }
+        let _span = crate::obs::span(&crate::obs::NUMA_PLACE);
+        let ranges = par::weighted_ranges(&self.slice_ptr, exec.chunks(self.n_slices()));
+        let stored = self.stored();
+        // Fresh zeroed Vecs come from lazily-mapped pages (untouched
+        // until written), so the parallel copy below is the first touch.
+        let mut values = vec![0.0f64; stored];
+        let mut indices = vec![0u32; stored];
+        struct SendMut<T>(*mut T);
+        unsafe impl<T> Send for SendMut<T> {}
+        unsafe impl<T> Sync for SendMut<T> {}
+        let vp = SendMut(values.as_mut_ptr());
+        let ip = SendMut(indices.as_mut_ptr());
+        let ranges = &ranges;
+        exec.run_indexed(ranges.len(), |k| {
+            let r = &ranges[k];
+            let (s, e) = (self.slice_ptr[r.start], self.slice_ptr[r.end]);
+            // SAFETY: the slice partition is ascending, contiguous, and
+            // covering, so `[s, e)` segments are disjoint across `k` and
+            // in-bounds; each element is written by exactly one worker
+            // and the Vecs outlive the region.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.values.as_ptr().add(s), vp.0.add(s), e - s);
+                std::ptr::copy_nonoverlapping(self.indices.as_ptr().add(s), ip.0.add(s), e - s);
+            }
+        });
+        self.values = values;
+        self.indices = indices;
+    }
+
     /// Memory footprint in bytes (metrics/reporting).
     pub fn mem_bytes(&self) -> usize {
         self.slice_ptr.len() * 8
@@ -405,7 +445,12 @@ impl SellCs {
             return;
         }
         let mut ranges = std::mem::take(&mut ws.slice_ranges);
-        par::weighted_ranges_into(&self.slice_ptr, exec.chunks(self.n_slices()), &mut ranges);
+        par::weighted_ranges_sticky(
+            &self.slice_ptr,
+            exec.chunks(self.n_slices()),
+            &mut ranges,
+            &mut ws.slice_ranges_key,
+        );
         let yp = YPtr(y.data.as_mut_ptr());
         let xs = &x.data;
         exec.run_indexed(ranges.len(), |k| {

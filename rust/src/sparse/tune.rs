@@ -43,6 +43,11 @@ pub struct TunePoint {
     pub tune_ms: f64,
     /// Whether this point came from the in-process shape cache.
     pub cached: bool,
+    /// Whether NUMA first-touch placement of the winning format's
+    /// arrays measured faster than the untouched layout. Only ever
+    /// `true` on multi-node hosts — on one node placement is an
+    /// intentional no-op and the axis is skipped.
+    pub placed: bool,
 }
 
 /// Per-process tune cache keyed by `(rows, nnz, d)`. A const-init
@@ -78,6 +83,7 @@ fn sweep(a: &Csr, d: usize) -> TunePoint {
         sell_gflops: 0.0,
         tune_ms: 0.0,
         cached: false,
+        placed: false,
     };
     if a.rows == 0 || a.nnz() == 0 {
         return default;
@@ -116,7 +122,8 @@ fn sweep(a: &Csr, d: usize) -> TunePoint {
     // SELL sweep reuses the winning block budget: the budget bounds the
     // same cache-residency trade-off in both layouts.
     let mut best_sell: (f64, KernelCfg) = (f64::INFINITY, best_csr.1);
-    if let Ok(sell) = SellCs::from_csr_default(a) {
+    let sell_mat = SellCs::from_csr_default(a).ok();
+    if let Some(sell) = &sell_mat {
         for &max_tile in &tiles {
             let cfg = KernelCfg { max_tile, row_block_nnz: best_csr.1.row_block_nnz };
             let s = timer::bench(reps, || {
@@ -133,6 +140,46 @@ fn sweep(a: &Csr, d: usize) -> TunePoint {
     } else {
         (TunedFormat::Csr, best_csr.1)
     };
+
+    // Placement axis: on multi-node hosts, measure whether NUMA
+    // first-touch placement of the winning format's arrays (threaded
+    // partition over physical cores, so each node's workers touch the
+    // pages they will later compute) beats the untouched layout under
+    // the same threaded policy. On one node the axis is skipped —
+    // placement cannot move any page to a different node.
+    let topo = crate::par::topo::detect();
+    let mut placed = false;
+    if topo.num_nodes() > 1 {
+        let pexec = ExecPolicy::with_threads(topo.physical_cores());
+        placed = match format {
+            TunedFormat::Csr => {
+                let mut b = a.clone();
+                let t0 = timer::bench(reps, || {
+                    a.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &pexec, &mut ws, cfg)
+                });
+                b.place(&pexec);
+                let t1 = timer::bench(reps, || {
+                    b.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &pexec, &mut ws, cfg)
+                });
+                t1.mean_secs < t0.mean_secs
+            }
+            TunedFormat::Sell => match &sell_mat {
+                Some(sell) => {
+                    let mut b = sell.clone();
+                    let t0 = timer::bench(reps, || {
+                        sell.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &pexec, &mut ws, cfg)
+                    });
+                    b.place(&pexec);
+                    let t1 = timer::bench(reps, || {
+                        b.spmm_axpby_into_ws_cfg(&x, 1.0, 0.0, &z, &mut y, &pexec, &mut ws, cfg)
+                    });
+                    t1.mean_secs < t0.mean_secs
+                }
+                None => false,
+            },
+        };
+    }
+
     TunePoint {
         format,
         cfg,
@@ -140,6 +187,7 @@ fn sweep(a: &Csr, d: usize) -> TunePoint {
         sell_gflops: if best_sell.0.is_finite() { flops / best_sell.0 / 1e9 } else { 0.0 },
         tune_ms: t.elapsed_secs() * 1e3,
         cached: false,
+        placed,
     }
 }
 

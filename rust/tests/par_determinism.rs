@@ -10,7 +10,9 @@
 //! for threads ∈ {1, 2, 4} under a fixed seed. The persistent pool and
 //! the workspace recycling must also be invisible: thousands of small
 //! regions and repeated workspace-backed calls give the same bits as
-//! fresh-allocation serial runs.
+//! fresh-allocation serial runs. The memory-locality layer rides the
+//! same contract: NUMA first-touch placement, worker pinning, and
+//! sticky partition reuse are all asserted bitwise-invisible below.
 
 use std::sync::Mutex;
 
@@ -411,6 +413,104 @@ fn sell_cancel_leaves_prefilled_output_untouched() {
         ws.cancel = None;
         s.spmm_into_ws(&x, &mut y, &exec, &mut ws);
         assert_eq!(y.data, a.spmm(&x).data, "post-cancel product @ {threads} threads");
+    }
+}
+
+/// NUMA first-touch placement must be bitwise-invisible: placed CSR and
+/// SELL operators produce identical bits through both the plain and the
+/// fused entry points at every thread count, and the repacked CSR
+/// arrays are verbatim copies of the originals.
+#[test]
+fn numa_placement_is_bitwise_invisible() {
+    let mut rng = Rng::new(55);
+    let g = gen::barabasi_albert(&mut rng, 900, 4);
+    let a = graph::normalized_adjacency(&g.adj);
+    let d = 9;
+    let x = Mat::randn(&mut rng, a.cols, d);
+    let z = Mat::randn(&mut rng, a.rows, d);
+    let (alpha, beta) = (0.75, -1.25);
+    let want_plain = a.spmm(&x);
+    let mut want = want_plain.clone();
+    for (yv, zv) in want.data.iter_mut().zip(&z.data) {
+        *yv = alpha * *yv + beta * zv;
+    }
+    let sell = SellCs::from_csr_default(&a).unwrap();
+    for threads in THREADS {
+        let exec = ExecPolicy::with_threads(threads);
+        let mut ap = a.clone();
+        ap.place(&exec);
+        assert_eq!(ap.values, a.values, "placed CSR values must be a verbatim copy");
+        assert_eq!(ap.indices, a.indices, "placed CSR indices must be a verbatim copy");
+        assert_eq!(ap.indptr, a.indptr, "place must not touch indptr");
+        let mut sp = sell.clone();
+        sp.place(&exec);
+        let mut ws = Workspace::new();
+        let mut y = Mat::zeros(a.rows, d);
+        ap.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want_plain.data, "placed CSR plain spmm @ {threads} threads");
+        ap.spmm_axpby_into_ws(&x, alpha, beta, &z, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want.data, "placed CSR fused spmm @ {threads} threads");
+        sp.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want_plain.data, "placed SELL plain spmm @ {threads} threads");
+        sp.spmm_axpby_into_ws(&x, alpha, beta, &z, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want.data, "placed SELL fused spmm @ {threads} threads");
+    }
+}
+
+/// Worker pinning is runtime policy only: with pinning enabled (whether
+/// or not this build can actually pin — both paths must hold), parallel
+/// products are bitwise-identical to the unpinned baseline.
+#[test]
+fn pinning_toggle_is_bitwise_invisible() {
+    let mut rng = Rng::new(56);
+    let a = random_csr(&mut rng, 800, 800, 4800);
+    let x = Mat::randn(&mut rng, 800, 6);
+    let want = a.spmm(&x);
+    cse::par::affinity::set_pinning(true);
+    let mut ws = Workspace::new();
+    for threads in THREADS {
+        let exec = ExecPolicy::with_threads(threads);
+        let mut y = Mat::zeros(800, 6);
+        a.spmm_into_ws(&x, &mut y, &exec, &mut ws);
+        assert_eq!(y.data, want.data, "pinned spmm @ {threads} threads");
+    }
+    cse::par::affinity::set_pinning(false);
+    // Topology detection always yields a usable (>= single-node) view.
+    let topo = cse::par::topo::detect();
+    assert!(topo.num_nodes() >= 1 && topo.physical_cores() >= 1);
+    assert!(topo.physical_cores() <= topo.logical_cpus());
+}
+
+/// Sticky partition reuse must be invisible: one warm workspace serving
+/// repeated products of one matrix, interleaved with a differently-shaped
+/// matrix (forcing key misses and recomputes), returns the same bits as
+/// fresh workspaces would every call.
+#[test]
+fn sticky_partitions_survive_matrix_swap_bitwise() {
+    let mut rng = Rng::new(57);
+    let a = random_csr(&mut rng, 700, 700, 4200);
+    let b = random_csr(&mut rng, 500, 700, 1500);
+    let x = Mat::randn(&mut rng, 700, 5);
+    let want_a = a.spmm(&x);
+    let want_b = b.spmm(&x);
+    let exec = ExecPolicy::with_threads(4);
+    let mut ws = Workspace::new();
+    let mut ya = Mat::zeros(700, 5);
+    let mut yb = Mat::zeros(500, 5);
+    for round in 0..3 {
+        a.spmm_into_ws(&x, &mut ya, &exec, &mut ws);
+        assert_eq!(ya.data, want_a.data, "sticky round {round} matrix a");
+        b.spmm_into_ws(&x, &mut yb, &exec, &mut ws);
+        assert_eq!(yb.data, want_b.data, "sticky round {round} matrix b");
+    }
+    // SELL slice partitions stick independently of the CSR row ranges
+    // (separate workspace fields), so mixing formats is safe too.
+    let sa = SellCs::from_csr_default(&a).unwrap();
+    for round in 0..3 {
+        sa.spmm_into_ws(&x, &mut ya, &exec, &mut ws);
+        assert_eq!(ya.data, want_a.data, "sticky SELL round {round}");
+        a.spmm_into_ws(&x, &mut ya, &exec, &mut ws);
+        assert_eq!(ya.data, want_a.data, "sticky CSR-after-SELL round {round}");
     }
 }
 
